@@ -1,0 +1,100 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (not
+representative of TPU), so wall-time here measures the REFERENCE jnp paths;
+for each kernel we also report the analytic TPU roofline time (bytes moved /
+819 GB/s, flops / 197 TF/s) that the §Perf analysis uses.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+HBM_BW = 819e9
+PEAK = 197e12
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6   # us
+
+
+def bench_version_gather():
+    from repro.kernels.version_gather.ref import version_gather_ref
+    P, K, E = 4096, 4, 2048          # 64 MB bf16 payload
+    key = jax.random.PRNGKey(0)
+    data = jax.random.normal(key, (P, K, E)).astype(jnp.bfloat16)
+    ts = jax.random.randint(key, (P, K), 0, 1000)
+    f = jax.jit(lambda d, t: version_gather_ref(d, t, jnp.int32(500)))
+    us = _time(f, data, ts)
+    bytes_moved = data.size * 2 + ts.size * 4 + P * E * 2
+    tpu_us = bytes_moved / HBM_BW * 1e6
+    return [("version_gather_ref_cpu", us, f"P={P},K={K},E={E}"),
+            ("version_gather_tpu_roofline", tpu_us,
+             f"{bytes_moved/1e6:.1f}MB @819GB/s")]
+
+
+def bench_flash_attention():
+    from repro.models.layers import flash_attention_xla
+    B, S, H, K, hd = 1, 2048, 8, 2, 64
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(key, (B, S, K, hd), jnp.float32)
+    v = jax.random.normal(key, (B, S, K, hd), jnp.float32)
+    f = jax.jit(lambda a, b, c: flash_attention_xla(a, b, c, causal=True,
+                                                    chunk=512))
+    us = _time(f, q, k, v)
+    flops = 4 * B * S * S * H * hd * 0.5
+    tpu_us = flops / PEAK * 1e6
+    return [("flash_attention_xla_cpu", us, f"S={S},H={H}"),
+            ("flash_attention_tpu_roofline", tpu_us,
+             f"{flops/1e9:.1f}GFLOP @197TF/s")]
+
+
+def bench_decode_attention():
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+    B, H, K, T, hd = 8, 32, 8, 8192, 128
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, H, hd), jnp.float32)
+    kc = jax.random.normal(key, (B, K, T, hd)).astype(jnp.bfloat16)
+    vc = jax.random.normal(key, (B, K, T, hd)).astype(jnp.bfloat16)
+    f = jax.jit(lambda a, b, c: decode_attention_ref(a, b, c, jnp.int32(T)))
+    us = _time(f, q, kc, vc)
+    bytes_moved = kc.size * 2 * 2
+    tpu_us = bytes_moved / HBM_BW * 1e6
+    return [("decode_attention_ref_cpu", us, f"T={T},B={B}"),
+            ("decode_attention_tpu_roofline", tpu_us,
+             f"KV {bytes_moved/1e6:.0f}MB @819GB/s")]
+
+
+def bench_wkv():
+    from repro.models.layers import _wkv_chunked
+    B, T, H, N = 2, 1024, 8, 64
+    key = jax.random.PRNGKey(0)
+    shp = (B, T, H, N)
+    r = jax.random.normal(key, shp) * 0.5
+    k = jax.random.normal(key, shp) * 0.5
+    v = jax.random.normal(key, shp)
+    w = -jnp.exp(jax.random.normal(key, shp) - 2)
+    u = jax.random.normal(key, (H, N)) * 0.1
+    f = jax.jit(lambda *a: _wkv_chunked(*a, chunk=32)[0])
+    us = _time(f, r, k, v, w, u)
+    flops = 4 * B * T * H * N * N
+    return [("wkv_chunked_cpu", us, f"T={T},H={H},N={N}"),
+            ("wkv_tpu_roofline", flops / PEAK * 1e6,
+             f"{flops/1e9:.2f}GFLOP @197TF/s")]
+
+
+def all_benches():
+    rows = []
+    for fn in (bench_version_gather, bench_flash_attention,
+               bench_decode_attention, bench_wkv):
+        rows.extend(fn())
+    return rows

@@ -1,0 +1,111 @@
+"""Benchmarks reproducing the paper's figures (logical-time driver).
+
+Fig 5 — OLTP throughput vs #OLTP clients (single node), per CC mode
+Fig 6 — OLAP throughput vs #OLAP clients (single node), per CC mode
+Fig 7 — abort rate vs #OLTP clients (single node), per CC mode
+Fig 8/9/10 — same quantities, multinode (SSI+SI vs SSI+RSS), plus the
+             measured wall-clock RSS-construction overhead (the paper's
+             ~10% OLTP cost) from real engine timing.
+
+Outputs CSV rows: figure,mode,x,oltp_tps,olap_qps,oltp_abort,olap_abort,
+olap_waits.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.mvcc import run_multi_node, run_single_node
+
+SINGLE_MODES = ("ssi", "ssi+safesnapshots", "ssi+rss")
+MULTI_MODES = ("ssi+si", "ssi+rss")
+
+
+def fig_5_6_7(rounds: int = 4000, olap_fixed: int = 2,
+              oltp_fixed: int = 8, seed: int = 7):
+    rows = []
+    for mode in SINGLE_MODES:
+        for n_oltp in (1, 2, 4, 8, 12):
+            m = run_single_node(olap_mode=mode, oltp_clients=n_oltp,
+                                olap_clients=olap_fixed, rounds=rounds,
+                                seed=seed)
+            rows.append(("fig5_7", mode, n_oltp, m.oltp_tps(), m.olap_qps(),
+                         m.oltp_abort_rate(), m.olap_abort_rate(),
+                         m.olap_wait_rounds))
+        for n_olap in (1, 2, 4, 8):
+            m = run_single_node(olap_mode=mode, oltp_clients=oltp_fixed,
+                                olap_clients=n_olap, rounds=rounds,
+                                seed=seed)
+            rows.append(("fig6", mode, n_olap, m.oltp_tps(), m.olap_qps(),
+                         m.oltp_abort_rate(), m.olap_abort_rate(),
+                         m.olap_wait_rounds))
+    return rows
+
+
+def fig_8_9_10(rounds: int = 4000, seed: int = 7):
+    rows = []
+    for mode in MULTI_MODES:
+        for n_oltp in (1, 2, 4, 8, 12):
+            t0 = time.perf_counter()
+            m = run_multi_node(olap_mode=mode, oltp_clients=n_oltp,
+                               olap_clients=2, rounds=rounds, seed=seed)
+            wall = time.perf_counter() - t0
+            rows.append(("fig8_10", mode, n_oltp, m.oltp_tps(),
+                         m.olap_qps(), m.oltp_abort_rate(),
+                         m.olap_abort_rate(), round(wall, 3)))
+        for n_olap in (1, 2, 4, 8):
+            m = run_multi_node(olap_mode=mode, oltp_clients=8,
+                               olap_clients=n_olap, rounds=rounds, seed=seed)
+            rows.append(("fig9", mode, n_olap, m.oltp_tps(), m.olap_qps(),
+                         m.oltp_abort_rate(), m.olap_abort_rate(), 0))
+    return rows
+
+
+def rss_construction_overhead(rounds: int = 3000, seed: int = 7) -> dict:
+    """Wall-clock cost of RSS machinery on the OLTP path (multinode): the
+    paper reports ~10% OLTP throughput cost vs SSI+SI."""
+    out = {}
+    for mode in MULTI_MODES:
+        t0 = time.perf_counter()
+        m = run_multi_node(olap_mode=mode, oltp_clients=8, olap_clients=2,
+                           rounds=rounds, seed=seed)
+        wall = time.perf_counter() - t0
+        out[mode] = {"wall_s": wall,
+                     "oltp_commits_per_s": m.oltp_commits / wall,
+                     "olap_q_per_s": m.olap_commits / wall}
+    si, rss = out["ssi+si"], out["ssi+rss"]
+    out["oltp_overhead_pct"] = 100 * (
+        1 - rss["oltp_commits_per_s"] / max(si["oltp_commits_per_s"], 1e-9))
+    out["olap_overhead_pct"] = 100 * (
+        1 - rss["olap_q_per_s"] / max(si["olap_q_per_s"], 1e-9))
+    return out
+
+
+def headline_checks(rows) -> list[str]:
+    """The paper's qualitative claims, asserted on our measurements."""
+    import collections
+    by = collections.defaultdict(dict)
+    for fig, mode, x, tps, qps, oab, aab, waits in rows:
+        by[(fig, x)][mode] = (tps, qps, oab, aab, waits)
+    msgs = []
+    f57 = [(x, d) for (fig, x), d in by.items() if fig == "fig5_7"
+           and len(d) == 3]
+    hi = max(f57, key=lambda t: t[0])
+    x, d = hi
+    ok1 = d["ssi+rss"][2] <= d["ssi"][2] + 1e-9
+    msgs.append(f"claim: RSS OLTP abort rate <= SSI at {x} clients: "
+                f"{d['ssi+rss'][2]:.3f} vs {d['ssi'][2]:.3f} -> "
+                f"{'OK' if ok1 else 'VIOLATED'}")
+    ok2 = d["ssi+rss"][4] == 0 and d["ssi+rss"][3] == 0
+    msgs.append(f"claim: RSS wait-free & abort-free OLAP: waits="
+                f"{d['ssi+rss'][4]} aborts={d['ssi+rss'][3]:.3f} -> "
+                f"{'OK' if ok2 else 'VIOLATED'}")
+    ok3 = d["ssi+safesnapshots"][4] > 0
+    msgs.append(f"claim: SafeSnapshots reader-waits exist: "
+                f"{d['ssi+safesnapshots'][4]} -> "
+                f"{'OK' if ok3 else 'VIOLATED'}")
+    ok4 = d["ssi+rss"][1] >= d["ssi"][1]
+    msgs.append(f"claim: RSS OLAP qps >= SSI OLAP qps: "
+                f"{d['ssi+rss'][1]:.5f} vs {d['ssi'][1]:.5f} -> "
+                f"{'OK' if ok4 else 'VIOLATED'}")
+    return msgs

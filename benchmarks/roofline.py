@@ -1,0 +1,170 @@
+"""Roofline postprocessing: dry-run JSON -> per-cell three-term table.
+
+Terms (seconds/step/device), TPU v5e constants:
+    compute    = HLO_FLOPs_total / 197e12
+    memory     = HLO_bytes_total / 819e9
+    collective = collective_bytes_total / 50e9   (per-link ICI)
+
+HLO totals come from the scan-corrected cost-model lowerings
+(results/costmodel_all.json, see launch/dryrun.py::run_cost_model);
+per-device memory residency comes from the full compiles
+(results/dryrun_all.json).  MODEL_FLOPS is the analytic useful-work
+model (6·N_active·tokens for train, 2·N_active for inference, plus the
+attention/SSM terms documented below); the ratio MODEL/HLO exposes
+remat/dispatch/dequant waste.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+def _pick(*names):
+    for n in names:
+        p = os.path.join(HERE, "results", n)
+        if os.path.exists(p):
+            return p
+    return os.path.join(HERE, "results", names[0])
+
+
+DRYRUN_JSON = _pick("dryrun_final.json", "dryrun_all.json")
+COST_JSON = _pick("costmodel_final.json", "costmodel_all.json")
+
+
+def model_flops_per_device(cfg, shape, n_dev: int) -> float:
+    """Analytic useful FLOPs per device per step (documented in
+    EXPERIMENTS.md §Roofline).  Matmul term + attention + SSM/WKV scans;
+    MoE dispatch one-hot matmuls and remat recompute are deliberately
+    EXCLUDED (they show up as HLO-vs-model waste)."""
+    S, B = shape.seq_len, shape.global_batch
+    train = shape.kind == "train"
+    mult = 6 if train else 2
+    if shape.kind == "decode":
+        tokens = B                  # one new token per sequence
+    else:
+        tokens = B * S
+    total = mult * cfg.active_param_count() * tokens
+
+    d_attn = cfg.n_heads * cfg.head_dim
+    n_attn = sum(1 for i in range(cfg.n_layers)
+                 if cfg.pattern[i % cfg.period].mixer == "attn")
+    W = cfg.sliding_window or S
+    ctx = min(S, W)
+    if shape.kind == "decode":
+        attn = 4.0 * B * ctx * d_attn * n_attn
+        if cfg.is_encoder_decoder:
+            attn += 4.0 * B * cfg.encoder_len * d_attn * cfg.n_layers
+    else:
+        pairs = B * S * ctx * (0.5 if ctx == S else 1.0)   # causal halves
+        fwd = 4.0 * pairs * d_attn * n_attn
+        attn = 3 * fwd if train else fwd
+    total += attn
+
+    n_mamba = sum(1 for i in range(cfg.n_layers)
+                  if cfg.pattern[i % cfg.period].mixer == "mamba")
+    if n_mamba:
+        scan = 6.0 * tokens * cfg.mamba_d_inner * cfg.mamba_d_state * n_mamba
+        total += (3 * scan if train else scan)
+    n_rwkv = sum(1 for i in range(cfg.n_layers)
+                 if cfg.pattern[i % cfg.period].mixer == "rwkv")
+    if n_rwkv:
+        scan = 4.0 * tokens * cfg.d_model * cfg.rwkv_head_dim * n_rwkv
+        total += (3 * scan if train else scan)
+    return total / n_dev
+
+
+def load_cells():
+    with open(DRYRUN_JSON) as f:
+        dry = json.load(f)
+    cost = []
+    if os.path.exists(COST_JSON):
+        with open(COST_JSON) as f:
+            cost = json.load(f)
+    cost_by = {(c["arch"], c["shape"]): c for c in cost
+               if "skipped" not in c}
+    return dry, cost_by
+
+
+def build_table():
+    from repro.configs import SHAPES, get_config
+    dry, cost_by = load_cells()
+    rows = []
+    for cell in dry:
+        if "skipped" in cell or "error" in cell:
+            continue
+        if cell.get("n_devices") != 256:      # roofline table: single pod
+            continue
+        arch, shape_name = cell["arch"], cell["shape"]
+        cfg = get_config(arch)
+        shape = SHAPES[shape_name]
+        cm = cost_by.get((arch, shape_name))
+        if cm is None:
+            continue
+        flops = cm["flops_total"]
+        byts = cm["bytes_accessed_total"]
+        coll = max(cm["collective_bytes_total"], 0.0)
+        t_c = flops / PEAK_FLOPS
+        t_m = byts / HBM_BW
+        t_i = coll / ICI_BW
+        dom = max((("compute", t_c), ("memory", t_m), ("collective", t_i)),
+                  key=lambda kv: kv[1])[0]
+        mf = model_flops_per_device(cfg, shape, 256)
+        bound = max(t_c, t_m, t_i)
+        rows.append({
+            "arch": arch, "shape": shape_name,
+            "compute_s": t_c, "memory_s": t_m, "collective_s": t_i,
+            "dominant": dom,
+            "model_flops_dev": mf,
+            "hlo_flops_dev": flops,
+            "useful_ratio": mf / flops if flops else 0.0,
+            "roofline_fraction": (mf / PEAK_FLOPS) / bound if bound else 0.0,
+            "hbm_bytes_dev": cell.get("argument_size_in_bytes", -1),
+            "temp_bytes_dev": cell.get("temp_size_in_bytes", -1),
+        })
+    return rows
+
+
+NOTES = {
+    "compute": "increase arithmetic efficiency: cut remat recompute / "
+               "dispatch overhead or raise per-chip work (fewer, larger "
+               "matmuls)",
+    "memory": "cut HBM traffic: fuse elementwise chains, keep working set "
+              "in VMEM (bigger kernel blocks), reduce optimizer/activation "
+              "precision",
+    "collective": "re-shard to shrink cross-chip traffic: FSDP prefetch "
+                  "overlap, 2D sharding of the dominant all-gather, or move "
+                  "the axis with the largest collectives onto faster links",
+}
+
+
+def to_markdown(rows) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| MODEL/HLO | roofline frac |\n|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    rows = build_table()
+    md = to_markdown(rows)
+    out = os.path.join(HERE, "results", "roofline.md")
+    with open(out, "w") as f:
+        f.write(md + "\n")
+    print(md)
+    print(f"\nwrote {out} ({len(rows)} cells)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

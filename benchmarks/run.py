@@ -1,0 +1,68 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Prints ``name,us_per_call,derived`` CSV rows covering:
+  * the paper's Figures 5-10 (HTAP throughput/abort benchmarks),
+  * the measured multinode RSS-construction overhead (paper: ~10%),
+  * kernel micro-benchmarks (CPU ref timing + TPU roofline),
+  * RSS freshness-lag characterization (beyond-paper),
+  * the roofline summary when dry-run artifacts exist.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+
+    # ---------------------------------------------------- paper figures
+    from . import paper_figures as pf
+    t0 = time.perf_counter()
+    rows = pf.fig_5_6_7(rounds=3000)
+    dt = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+    for fig, mode, x, tps, qps, oab, aab, waits in rows:
+        print(f"{fig}:{mode}:x={x},{dt:.0f},"
+              f"oltp_tps={tps:.4f};olap_qps={qps:.5f};"
+              f"oltp_abort={oab:.3f};olap_abort={aab:.3f};waits={waits}")
+    t0 = time.perf_counter()
+    rows = pf.fig_8_9_10(rounds=3000)
+    dt = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+    for fig, mode, x, tps, qps, oab, aab, extra in rows:
+        print(f"{fig}:{mode}:x={x},{dt:.0f},"
+              f"oltp_tps={tps:.4f};olap_qps={qps:.5f};"
+              f"oltp_abort={oab:.3f};extra={extra}")
+
+    ov = pf.rss_construction_overhead(rounds=2500)
+    print(f"multinode_rss_oltp_overhead,0,"
+          f"{ov['oltp_overhead_pct']:.1f}%_vs_ssi+si")
+    print(f"multinode_rss_olap_overhead,0,"
+          f"{ov['olap_overhead_pct']:.1f}%_vs_ssi+si")
+    for msg in pf.headline_checks(pf.fig_5_6_7(rounds=2500)):
+        print(f"headline,0,{msg.replace(',', ';')}")
+
+    # -------------------------------------------------------- freshness
+    from .bench_freshness import freshness_sweep
+    for name, us, derived in freshness_sweep():
+        print(f"{name},{us:.1f},{derived}")
+
+    # ---------------------------------------------------------- kernels
+    from .bench_kernels import all_benches
+    for name, us, derived in all_benches():
+        print(f"{name},{us:.1f},{derived}")
+
+    # --------------------------------------------------------- roofline
+    try:
+        from .roofline import build_table
+        rows = build_table()
+        for r in rows:
+            print(f"roofline:{r['arch']}:{r['shape']},0,"
+                  f"dom={r['dominant']};frac={r['roofline_fraction']:.2f};"
+                  f"useful={r['useful_ratio']:.2f}")
+    except FileNotFoundError:
+        print("roofline,0,skipped_(run_launch.dryrun_first)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""repro: Serializable HTAP with Abort-/Wait-free Snapshot Read (RSS),
+reproduced as a multi-pod JAX training/serving framework.
+
+Subpackages:
+  core        the paper's contribution (RSS theory, Algorithm 1, SSI, WAL)
+  mvcc        executable MVCC engine + HTAP architectures + CH-benchmark
+  tensorstore versioned parameter/page stores (SI-V snapshot reads)
+  models      the 10 assigned architectures, config-driven
+  configs     architecture registry (get_config / list_archs)
+  kernels     Pallas TPU kernels + jnp oracles
+  train/serve training loop (fault-tolerant) and RSS-pinned serving
+  optim/data/checkpoint  substrates
+  launch      meshes, shardings, dry-run, CLI launchers
+"""
+
+__version__ = "1.0.0"

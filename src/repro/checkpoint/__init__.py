@@ -1,0 +1,2 @@
+from . import manager
+__all__ = ["manager"]

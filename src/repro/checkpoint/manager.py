@@ -1,0 +1,122 @@
+"""Fault-tolerant checkpointing: atomic sharded save, elastic restore.
+
+Layout:  <dir>/step_<N>/  arrays.npz + manifest.json ;  <dir>/LATEST
+Writes go to a temp dir then `os.replace` (atomic on POSIX), so a crash
+mid-save never corrupts the latest checkpoint.  `restore` re-shards every
+leaf onto the *current* mesh (elastic resume: the saved mesh layout does not
+need to match).  Optional async save runs in a daemon thread off a host copy.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+_EXOTIC = {"bfloat16": (ml_dtypes.bfloat16, np.uint16),
+           "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8)}
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(state, step: int, ckpt_dir: str, *, keep: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(state)
+    stored = {}
+    for k, v in flat.items():
+        name = str(v.dtype)
+        if name in _EXOTIC:                    # npz can't hold ml_dtypes
+            v = v.view(_EXOTIC[name][1])
+        stored[k] = v
+    np.savez(os.path.join(tmp, "arrays.npz"), **stored)
+    manifest = {"step": step,
+                "leaves": {k: {"shape": list(v.shape),
+                               "dtype": str(v.dtype)}
+                           for k, v in flat.items()}}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)                    # atomic publish
+    with open(os.path.join(ckpt_dir, "LATEST.tmp"), "w") as f:
+        f.write(str(step))
+    os.replace(os.path.join(ckpt_dir, "LATEST.tmp"),
+               os.path.join(ckpt_dir, "LATEST"))
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def save_async(state, step: int, ckpt_dir: str, *, keep: int = 3) -> threading.Thread:
+    """Snapshot to host memory synchronously, write to disk in background."""
+    host_state = jax.tree.map(np.asarray, state)
+    t = threading.Thread(target=save, args=(host_state, step, ckpt_dir),
+                         kwargs={"keep": keep}, daemon=True)
+    t.start()
+    return t
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    path = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return int(f.read().strip())
+
+
+def restore(ckpt_dir: str, template, *, step: Optional[int] = None,
+            shardings=None):
+    """Restore into the structure of `template` (a pytree of arrays or
+    ShapeDtypeStructs).  `shardings`: optional matching pytree of shardings —
+    enables elastic resume onto a different mesh (each leaf is device_put
+    with the new sharding)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    arrays = np.load(os.path.join(d, "arrays.npz"))
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(flat_t))
+    out = []
+    for (path, leaf), sh in zip(flat_t, shard_leaves):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = arrays[key]
+        saved_dtype = manifest["leaves"][key]["dtype"]
+        if saved_dtype in _EXOTIC:
+            arr = arr.view(_EXOTIC[saved_dtype][0])
+        want = np.dtype(leaf.dtype)
+        if arr.dtype != want:
+            arr = arr.astype(want)
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)

@@ -1,0 +1,152 @@
+"""Replica-side RSS construction from a shipped WAL (paper Sec 5.1).
+
+`RSSManager` replays WAL records (in LSN order, possibly in batches — the
+log-shipping is asynchronous) and maintains:
+
+  * Active / Done / Clear transaction states (Definition 4.6) keyed by the
+    replayed prefix,
+  * the concurrent-rw dependency adjacency shipped via "deps" records,
+  * the current RSS (Algorithm 1) and its *watermark*: RSS only ever grows
+    forward, so exporting a snapshot is O(1) for readers — this is the
+    abort-/wait-free property.
+
+`PRoTManager` pins exported snapshots until readers release them, the analogue
+of the paper's snapshot-preserving transactions + hot_standby_feedback (it
+prevents version GC below the oldest pinned snapshot).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable, Mapping
+
+from .rss import construct_rss_ssi
+from .wal import Wal, WalRecord
+
+
+@dataclass(frozen=True)
+class RssSnapshot:
+    """An immutable exported snapshot: the RSS transaction set at some LSN."""
+    lsn: int
+    txns: frozenset[int]
+
+    def visible(self, writer_txn: int) -> bool:
+        return writer_txn == 0 or writer_txn in self.txns
+
+
+class RSSManager:
+    def __init__(self) -> None:
+        self.applied_lsn = 0
+        self.begun: dict[int, int] = {}      # txn -> begin lsn
+        self.ended: dict[int, int] = {}      # txn -> end lsn
+        self.committed: set[int] = set()
+        self.aborted: set[int] = set()
+        # shipped outgoing concurrent rw edges: reader -> {writers}
+        self.rw_out: dict[int, set[int]] = {}
+        self._snapshot: RssSnapshot = RssSnapshot(0, frozenset())
+
+    # ------------------------------------------------------------- replay
+    def apply(self, rec: WalRecord) -> None:
+        if rec.lsn <= self.applied_lsn:
+            return  # idempotent replay (restart safety)
+        self.applied_lsn = rec.lsn
+        if rec.type == "begin":
+            self.begun.setdefault(rec.txn, rec.lsn)
+        elif rec.type == "commit":
+            self.begun.setdefault(rec.txn, rec.lsn)
+            self.ended[rec.txn] = rec.lsn
+            self.committed.add(rec.txn)
+        elif rec.type == "abort":
+            self.begun.setdefault(rec.txn, rec.lsn)
+            self.ended[rec.txn] = rec.lsn
+            self.aborted.add(rec.txn)
+        elif rec.type == "deps":
+            self.rw_out.setdefault(rec.txn, set()).update(rec.out_rw)
+
+    def catch_up(self, wal: Wal) -> int:
+        """Pull and apply all records past applied_lsn; returns #applied."""
+        n = 0
+        for rec in wal.tail(self.applied_lsn):
+            self.apply(rec)
+            n += 1
+        return n
+
+    # -------------------------------------------------------------- states
+    def active(self) -> set[int]:
+        return {t for t in self.begun if t not in self.ended}
+
+    def done(self) -> set[int]:
+        return set(self.ended)
+
+    def clear(self) -> set[int]:
+        act = self.active()
+        horizon = min((self.begun[t] for t in act), default=1 << 62)
+        return {t for t in self.committed if self.ended[t] < horizon}
+
+    def obscure(self) -> set[int]:
+        return self.committed - self.clear() - self.active()
+
+    # ----------------------------------------------------------- Algorithm 1
+    def construct(self) -> RssSnapshot:
+        """Run Algorithm 1 over the replayed prefix and refresh the exported
+        snapshot. RSS is monotone across calls (older members stay valid for
+        already-pinned readers; the exported set is the newest)."""
+        clear = self.clear()
+        edges = [(u, w) for u, outs in self.rw_out.items() for w in outs]
+        rss = construct_rss_ssi(clear, self.committed, edges)
+        self._snapshot = RssSnapshot(self.applied_lsn, frozenset(rss))
+        return self._snapshot
+
+    @property
+    def snapshot(self) -> RssSnapshot:
+        return self._snapshot
+
+
+class PRoTManager:
+    """Export/pin/release snapshots for protected read-only transactions.
+
+    GC boundary: versions written by transactions committed at-or-below every
+    pinned snapshot's LSN horizon must be preserved (hot_standby_feedback
+    analogue).  `gc_floor()` returns the lowest pinned LSN, or the current
+    snapshot's LSN when nothing is pinned.
+    """
+
+    def __init__(self, manager: RSSManager) -> None:
+        self.manager = manager
+        self._pins: dict[int, RssSnapshot] = {}
+        self._next_reader = 1
+
+    def acquire(self) -> tuple[int, RssSnapshot]:
+        """Wait-free: returns the most recent constructed snapshot."""
+        snap = self.manager.snapshot
+        rid = self._next_reader
+        self._next_reader += 1
+        self._pins[rid] = snap
+        return rid, snap
+
+    def release(self, reader_id: int) -> None:
+        self._pins.pop(reader_id, None)
+
+    def gc_floor(self) -> int:
+        if not self._pins:
+            return self.manager.snapshot.lsn
+        return min(s.lsn for s in self._pins.values())
+
+    @property
+    def pinned(self) -> int:
+        return len(self._pins)
+
+
+def replicate(wal: Wal, manager: RSSManager, *, batch: int = 0) -> RssSnapshot:
+    """One asynchronous replication round: catch up on the WAL (optionally in
+    bounded batches, modelling streaming-lag) and rebuild RSS."""
+    if batch <= 0:
+        manager.catch_up(wal)
+    else:
+        applied = 0
+        for rec in wal.tail(manager.applied_lsn):
+            manager.apply(rec)
+            applied += 1
+            if applied >= batch:
+                break
+    return manager.construct()

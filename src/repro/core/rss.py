@@ -1,0 +1,148 @@
+"""Read Safe Snapshot (RSS): Definitions 4.1/4.2, Algorithm 1 and oracles.
+
+The executable artifacts:
+  * `is_rss(h, P)`            — Definition 4.1 checker (oracle, brute force)
+  * `clear_set / done_set`    — Definition 4.6 transaction states
+  * `construct_rss_ssi(...)`  — Algorithm 1 (SSI-based construction) given
+                                only begin/commit/abort events and the
+                                concurrent-rw (vulnerable) edges observed so
+                                far — exactly the information the paper ships
+                                through the WAL.
+  * `protected_read(...)`     — build a PRoT (Def 4.2) reading the
+                                most-recent-in-P version of each key.
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Iterable, Mapping, Sequence
+
+from .dsg import build_dsg
+from .history import History, Op, READ, T0, b, c, r
+
+
+# --------------------------------------------------------------------- oracle
+def is_rss(h: History, P: set[int]) -> bool:
+    """Definition 4.1: P is RSS iff for all Tp in P and committed Tq not in P,
+    Tp is unreachable from Tq in the DSG of h's committed projection."""
+    committed = h.committed
+    if not P <= committed:
+        return False
+    g = build_dsg(h)
+    outside = committed - P
+    for q in outside:
+        if g.reachable_from(q) & P:
+            return False
+    return True
+
+
+def rss_violations(h: History, P: set[int]) -> list[tuple[int, int]]:
+    """(Tq outside, Tp inside) witnesses that P is not an RSS of h."""
+    g = build_dsg(h)
+    out = []
+    for q in h.committed - P:
+        hit = g.reachable_from(q) & P
+        for p in sorted(hit):
+            out.append((q, p))
+    return out
+
+
+# --------------------------------------------------- Definition 4.6: states
+def done_set(h: History) -> set[int]:
+    """Done(p): transactions whose End (commit or abort) is in the prefix."""
+    return {t for t in h.txns if h.end_pos(t) < (1 << 62)}
+
+
+def clear_set(h: History) -> set[int]:
+    """Clear(p): Ta with End(Ta) preceding Begin(Tb) of every not-Done Tb.
+
+    Only committed transactions are returned (aborted ones can never be part
+    of an RSS; their ops leave the committed projection).
+    """
+    done = done_set(h)
+    not_done = h.txns - done
+    if not_done:
+        horizon = min(h.begin_pos(t) for t in not_done)
+    else:
+        horizon = 1 << 62
+    return {t for t in h.committed if h.end_pos(t) < horizon}
+
+
+def obscure_set(h: History) -> set[int]:
+    """Done but not Clear (possibly concurrent with an active transaction)."""
+    return (done_set(h) & h.committed) - clear_set(h)
+
+
+# ------------------------------------------------------------- Algorithm 1
+def construct_rss_ssi(
+    clear: set[int],
+    committed: set[int],
+    rw_edges: Iterable[tuple[int, int]],
+) -> set[int]:
+    """Algorithm 1 (paper Sec 4.2) on pre-extracted state.
+
+      (1) contain the entire Clear(p) in RSS
+      (2)-(5) for every dependency edge Tu -> Tc with Tc in Clear(p) and
+              Tu not in Clear(p), add Tu to RSS.
+
+    Per Lemma 4.9 every such incoming edge is a *vulnerable* (concurrent rw)
+    dependency, so tracking only SSI's rw-conflict list suffices — this is the
+    cost reduction the paper claims.  Tu must itself be committed (Fig. 2:
+    uncommitted or aborted transactions never join RSS).
+    """
+    rss = set(clear)
+    for tu, tc in rw_edges:
+        if tc in clear and tu not in clear and tu in committed:
+            rss.add(tu)
+    return rss
+
+
+def construct_rss(h: History) -> set[int]:
+    """Algorithm 1 driven directly from a history prefix.
+
+    Uses only the information the WAL would carry: begin/end events (for
+    Clear/Done) and concurrent rw anti-dependency edges among committed txns.
+    """
+    from .ssi import vulnerable_edges  # local import to avoid cycle
+
+    clear = clear_set(h)
+    edges = [(v.src, v.dst) for v in vulnerable_edges(h)]
+    return construct_rss_ssi(clear, h.committed, edges)
+
+
+# ------------------------------------------------------- PRoT (Def 4.2)
+def latest_versions_in(h: History, P: set[int]) -> dict[str, int]:
+    """For every key, the writer of the most recent committed version among
+    transactions in P (T0 if no P-transaction wrote the key)."""
+    latest: dict[str, int] = {}
+    keys: set[str] = set()
+    for t in h.txns:
+        keys |= h.writeset(t)
+        keys |= h.readset(t)
+    for key in keys:
+        latest[key] = T0
+    for t in h.commit_order():
+        if t in P:
+            for key in h.writeset(t):
+                latest[key] = t
+    return latest
+
+
+def protected_read(h: History, P: set[int], keys: Sequence[str],
+                   txn_id: int) -> list[Op]:
+    """Operations of a PRoT (Def 4.2): a read-only transaction reading, for
+    each requested key, the most recent committed version in P."""
+    latest = latest_versions_in(h, P)
+    ops: list[Op] = [b(txn_id)]
+    for key in keys:
+        ops.append(r(txn_id, key, latest.get(key, T0)))
+    ops.append(c(txn_id))
+    return ops
+
+
+def with_protected_reader(h: History, P: set[int], keys: Sequence[str],
+                          txn_id: int) -> History:
+    """h extended by a PRoT over `keys` — the Theorem 4.4 construction."""
+    h2 = History(h.ops)
+    h2.extend(protected_read(h, P, keys, txn_id))
+    return h2

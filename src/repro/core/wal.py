@@ -1,0 +1,104 @@
+"""Write-ahead-log records for RSS construction (paper Sec 5.1).
+
+The OLTP side ships, per transaction:
+  * BEGIN  (start information; induced by the first operation)
+  * COMMIT / ABORT (end information)
+  * DEPS   (logical message: the transaction's *outgoing* concurrent
+            rw-antidependency edges, written immediately after the reader
+            commits — "an array of writer transaction IDs")
+
+Records carry a monotonically increasing LSN assigned by the log. Shipping is
+asynchronous (streaming replication); the replica replays records in LSN
+order (`repro.core.replica.RSSManager`).
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Iterator, Literal, Sequence
+
+RecordType = Literal["begin", "commit", "abort", "deps"]
+
+
+@dataclass(frozen=True)
+class WalRecord:
+    lsn: int
+    type: RecordType
+    txn: int
+    # for "deps": ids of writers this (committed reader) txn has outgoing
+    # concurrent rw-antidependency edges to.
+    out_rw: tuple[int, ...] = ()
+    # for "commit": the committed writeset (key, value) — the data payload a
+    # physical/logical replication stream ships to replicas.
+    writes: tuple[tuple[str, object], ...] = ()
+
+    def to_json(self) -> str:
+        d = {"lsn": self.lsn, "type": self.type, "txn": self.txn}
+        if self.type == "deps":
+            d["out_rw"] = list(self.out_rw)
+        if self.writes:
+            d["writes"] = [list(kv) for kv in self.writes]
+        return json.dumps(d, separators=(",", ":"))
+
+    @staticmethod
+    def from_json(s: str) -> "WalRecord":
+        d = json.loads(s)
+        return WalRecord(d["lsn"], d["type"], d["txn"],
+                         tuple(d.get("out_rw", ())),
+                         tuple((k, v) for k, v in d.get("writes", ())))
+
+
+class Wal:
+    """An append-only in-memory WAL with optional persistence.
+
+    `tail(from_lsn)` is the streaming-replication read path: it yields
+    records with lsn > from_lsn, letting a replica poll asynchronously.
+    """
+
+    def __init__(self) -> None:
+        self.records: list[WalRecord] = []
+
+    @property
+    def head_lsn(self) -> int:
+        return len(self.records)
+
+    def _append(self, type: RecordType, txn: int,
+                out_rw: Sequence[int] = (),
+                writes: Sequence[tuple[str, object]] = ()) -> WalRecord:
+        rec = WalRecord(len(self.records) + 1, type, txn, tuple(out_rw),
+                        tuple(writes))
+        self.records.append(rec)
+        return rec
+
+    def log_begin(self, txn: int) -> WalRecord:
+        return self._append("begin", txn)
+
+    def log_commit(self, txn: int,
+                   writes: Sequence[tuple[str, object]] = ()) -> WalRecord:
+        return self._append("commit", txn, writes=writes)
+
+    def log_abort(self, txn: int) -> WalRecord:
+        return self._append("abort", txn)
+
+    def log_deps(self, txn: int, out_rw: Sequence[int]) -> WalRecord:
+        return self._append("deps", txn, out_rw)
+
+    def tail(self, from_lsn: int) -> Iterator[WalRecord]:
+        yield from self.records[from_lsn:]
+
+    # -------------------------------------------------------- persistence
+    def dump(self, path: str) -> None:
+        with open(path, "w") as f:
+            for rec in self.records:
+                f.write(rec.to_json() + "\n")
+
+    @staticmethod
+    def load(path: str) -> "Wal":
+        wal = Wal()
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    wal.records.append(WalRecord.from_json(line))
+        return wal

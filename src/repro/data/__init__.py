@@ -1,0 +1,2 @@
+from .pipeline import SyntheticPipeline, PipelineState
+__all__ = ["SyntheticPipeline", "PipelineState"]

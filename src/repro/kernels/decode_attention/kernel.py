@@ -1,0 +1,94 @@
+"""Pallas TPU decode attention (one query token, GQA, ring/length-masked KV).
+
+Grid (B, K, nT): per (batch, kv-head) the G grouped query rows attend over
+the KV cache in bT-sized blocks with online-softmax state in VMEM scratch —
+the flash-decoding split-KV pattern adapted to a sequential TPU grid (state
+carry instead of a cross-core reduction; the `model`-axis split-KV variant
+lives at the GSPMD level, see launch/shardings.py cache rules).
+
+`valid_len` masks cache slots >= the current length (scalar prefetch-style
+operand, broadcast into the block mask).  Blocks entirely past `valid_len`
+skip compute via pl.when.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(vl_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, bt: int, nt: int):
+    it = pl.program_id(2)
+    valid = vl_ref[0]
+
+    @pl.when(it == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(it * bt < valid)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # [G, hd]
+        k = k_ref[0, 0].astype(jnp.float32)                # [bt, hd]
+        s = q @ k.T                                        # [G, bt]
+        kv_pos = it * bt + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(kv_pos < valid, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        v = v_ref[0, 0].astype(jnp.float32)                # [bt, hd]
+        acc_scr[...] = acc_scr[...] * corr[:, None] + p @ v
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+        m_scr[...] = m_new
+
+    @pl.when(it == nt - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     valid_len, *, block_t: int = 256,
+                     interpret: bool = True) -> jax.Array:
+    """q [B,H,hd]; k/v [B,K,T,hd]; valid_len scalar int32 -> [B,H,hd]."""
+    B, H, hd = q.shape
+    _, K, T, _ = k.shape
+    G = H // K
+    bt = min(block_t, T)
+    assert T % bt == 0
+    nt = T // bt
+    qg = q.reshape(B, K, G, hd)
+    vl = jnp.asarray(valid_len, jnp.int32).reshape(1)
+    kernel = functools.partial(_kernel, scale=1.0 / math.sqrt(hd),
+                               bt=bt, nt=nt)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, K, nt),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, t: (0,)),
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, t: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bt, hd), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, bt, hd), lambda b, h, t: (b, h, t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, t: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(vl, qg, k, v)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,24 @@
+"""Oracle for decode attention."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         valid_len) -> jax.Array:
+    """q [B,H,hd]; k/v [B,K,T,hd]; -> [B,H,hd] over the first valid_len
+    cache slots."""
+    B, H, hd = q.shape
+    K, T = k.shape[1], k.shape[2]
+    G = H // K
+    qf = q.reshape(B, K, G, hd).astype(jnp.float32) / math.sqrt(hd)
+    s = jnp.einsum("bkgh,bkth->bkgt", qf, k.astype(jnp.float32))
+    mask = jnp.arange(T)[None, None, None, :] < valid_len
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,bkth->bkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)

@@ -1,0 +1,114 @@
+"""Pallas TPU flash attention (causal / sliding-window, GQA).
+
+Grid (B, H, nQ, nK) with the KV axis innermost: the online-softmax state
+(m, l, acc) lives in VMEM scratch and persists across the nK iterations of a
+fixed (b, h, iq); the output tile is written on the last KV step.  Causal and
+sliding-window masking prune whole KV blocks via a cheap in-kernel
+early-exit predicate (pl.when), so SWA cost is O(S·W) not O(S²).
+
+Block shapes default to (128 q × 128 kv × head_dim) — MXU-aligned (the two
+matmuls are [bq,hd]×[hd,bk] and [bq,bk]×[bk,hd]); fp32 accumulation.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int, bq: int, bk: int,
+            nk: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kv_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    # block-level relevance: any (q, kv) pair in range?
+    block_live = True
+    if causal:
+        block_live = (iq * bq + bq - 1) >= (ik * bk)
+    if window > 0:
+        block_live = jnp.logical_and(
+            block_live, (iq * bq) - (ik * bk + bk - 1) < window)
+
+    @pl.when(block_live)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # [bq, hd]
+        k = k_ref[0, 0].astype(jnp.float32)               # [bk, hd]
+        s = q @ k.T                                       # [bq, bk]
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= q_pos >= kv_pos
+        if window > 0:
+            mask &= (q_pos - kv_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        correction = jnp.exp(m_prev - m_new)
+        v = v_ref[0, 0].astype(jnp.float32)               # [bk, hd]
+        acc_scr[...] = acc_scr[...] * correction[:, None] + p @ v
+        l_scr[...] = l_scr[...] * correction + jnp.sum(p, axis=1)
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q [B,H,S,hd]; k/v [B,K,T,hd] with H = K·G (GQA) -> [B,H,S,hd]."""
+    B, H, S, hd = q.shape
+    Bk, K, T, _ = k.shape
+    assert Bk == B and H % K == 0
+    G = H // K
+    bq = min(block_q, S)
+    bk = min(block_k, T)
+    assert S % bq == 0 and T % bk == 0
+    nq, nk = S // bq, T // bk
+    scale = 1.0 / math.sqrt(hd)
+    kernel = functools.partial(_kernel, scale=scale, causal=causal,
+                               window=window, bq=bq, bk=bk, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=[
+            _scratch((bq,), jnp.float32),          # running max m
+            _scratch((bq,), jnp.float32),          # running denom l
+            _scratch((bq, hd), jnp.float32),       # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _scratch(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

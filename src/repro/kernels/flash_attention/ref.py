@@ -1,0 +1,29 @@
+"""Naive full-materialization oracle for flash_attention."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0) -> jax.Array:
+    """q [B,H,S,hd]; k/v [B,K,T,hd] (H = K·G) -> [B,H,S,hd].  fp32 math."""
+    B, H, S, hd = q.shape
+    K, T = k.shape[1], k.shape[2]
+    G = H // K
+    qf = q.reshape(B, K, G, S, hd).astype(jnp.float32) / math.sqrt(hd)
+    s = jnp.einsum("bkgsh,bkth->bkgst", qf, k.astype(jnp.float32))
+    q_pos = jnp.arange(S)[:, None]
+    kv_pos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= q_pos >= kv_pos
+    if window > 0:
+        mask &= (q_pos - kv_pos) < window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,bkth->bkgsh", p, v.astype(jnp.float32))
+    return o.reshape(B, H, S, hd).astype(q.dtype)

@@ -1,0 +1,27 @@
+"""Sequential oracle for the Mamba selective scan."""
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(u, dt, B, C, A, D):
+    """u/dt [Bb,T,Di]; B/C [Bb,T,N]; A [Di,N]; D [Di]."""
+    uf, dtf = u.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = B.astype(jnp.float32), C.astype(jnp.float32)
+    Af, Df = A.astype(jnp.float32), D.astype(jnp.float32)
+
+    def per_seq(u1, dt1, B1, C1):
+        def step(h, xs):
+            ut, dtt, Bt, Ct = xs
+            h = jnp.exp(dtt[:, None] * Af) * h \
+                + (dtt * ut)[:, None] * Bt[None, :]
+            y = (h * Ct[None, :]).sum(-1) + Df * ut
+            return h, y
+        h, y = jax.lax.scan(step,
+                            jnp.zeros((u1.shape[1], Bf.shape[-1]),
+                                      jnp.float32),
+                            (u1, dt1, B1, C1))
+        return y, h
+
+    y, h = jax.vmap(per_seq)(uf, dtf, Bf, Cf)
+    return y, h

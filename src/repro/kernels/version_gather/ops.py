@@ -1,0 +1,20 @@
+"""Public op: snapshot_read — dispatches Pallas kernel or jnp fallback."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import version_gather
+from .ref import version_gather_ref
+
+
+def snapshot_read(store: dict, watermark, *, use_kernel: bool = True,
+                  interpret: bool = True) -> jax.Array:
+    """SI-V read over a paged store {'data': [P,K,E], 'ts': [P,K]}.
+
+    interpret=True (default) runs the Pallas kernel in interpret mode so the
+    same code path validates on CPU; on TPU pass interpret=False."""
+    if not use_kernel:
+        return version_gather_ref(store["data"], store["ts"], watermark)
+    return version_gather(store["data"], store["ts"], watermark,
+                          interpret=interpret)

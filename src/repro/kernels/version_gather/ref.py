@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the version_gather kernel (SI-V read protocol)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def version_gather_ref(data: jax.Array, ts: jax.Array,
+                       watermark) -> jax.Array:
+    """data [P,K,E], ts [P,K], scalar watermark -> [P,E]: payload of the
+    newest slot with ts <= watermark (ties: lowest slot index)."""
+    wm = jnp.asarray(watermark, jnp.int32)
+    masked = jnp.where(ts <= wm, ts, -1)                    # [P,K]
+    best = jnp.max(masked, axis=1, keepdims=True)
+    onehot = masked == best
+    idx = jnp.arange(ts.shape[1], dtype=jnp.int32)[None, :]
+    first = jnp.min(jnp.where(onehot, idx, ts.shape[1]), axis=1)
+    return jnp.take_along_axis(data, first[:, None, None], axis=1)[:, 0]

@@ -1,0 +1,28 @@
+"""Sequential oracle for the WKV6 recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_scan_ref(r, k, v, w_log, u):
+    """r/k/v/w_log [BH,T,N]; u [BH,N] -> (o [BH,T,N] fp32, S [BH,N,N])."""
+    BH, T, N = r.shape
+    rf, kf, vf = (x.astype(jnp.float32) for x in (r, k, v))
+    wf = jnp.exp(w_log.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    def per_seq(r1, k1, v1, w1, u1):
+        def step(S, xs):
+            rt, kt, vt, wt = xs
+            kv = jnp.outer(kt, vt)
+            ot = (S + u1[:, None] * kv).T @ rt
+            S = wt[:, None] * S + kv
+            return S, ot
+        S, o = jax.lax.scan(step, jnp.zeros((N, N), jnp.float32),
+                            (r1, k1, v1, w1))
+        return o, S
+
+    o, S = jax.vmap(per_seq)(rf, kf, vf, wf, uf)
+    return o, S

@@ -1,0 +1,2 @@
+"""Launchers: mesh construction, sharding rules, dry-run, train/serve CLIs."""
+from .mesh import make_production_mesh, make_host_mesh, dp_axes, dp_size

@@ -1,0 +1,236 @@
+"""Parameter/state/input sharding rules for the production meshes.
+
+Strategy (per DESIGN.md §5):
+  * "model"  — tensor parallel: attention heads / d_ff / vocab (lm_head),
+  * "data"   — batch; doubles as the FSDP axis for params/opt of big archs,
+  * "pod"    — outer data parallel (training) / replication boundary (HTAP).
+
+Every spec is sanitized against the actual mesh: a dim that is not divisible
+by its axis size falls back to replication for that dim (e.g. whisper's 6
+heads on a 16-way model axis, granite's single KV head).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+from .mesh import dp_axes
+
+
+# --------------------------------------------------------------- sanitation
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def sanitize(mesh: Mesh, shape: tuple[int, ...], spec: P) -> P:
+    """Drop axes whose size does not divide the dim; drop unknown axes."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, axis in zip(shape, entries):
+        if axis is None:
+            out.append(None)
+            continue
+        axes = axis if isinstance(axis, tuple) else (axis,)
+        if not all(a in mesh.axis_names for a in axes):
+            out.append(None)
+            continue
+        if dim % _axis_size(mesh, axis) != 0:
+            out.append(None)
+            continue
+        out.append(axis)
+    return P(*out)
+
+
+def named(mesh: Mesh, shape: tuple[int, ...], spec: P) -> NamedSharding:
+    return NamedSharding(mesh, sanitize(mesh, shape, spec))
+
+
+# ------------------------------------------------------------- param rules
+# matched against the "/"-joined tree path of each leaf; first match wins.
+# L = leading stacked-period dim (present under blocks/enc_blocks).
+def _param_rules(cfg: ModelConfig, fsdp: Optional[str]):
+    F = fsdp  # alias; None disables FSDP for that dim
+    return [
+        (r"embed$",                 P("model", None)),
+        (r"lm_head$",               P(None, "model")),
+        # attention
+        (r"(mixer|cross)/wq$",      P(None, F, "model")),
+        (r"(mixer|cross)/wk$",      P(None, F, "model")),
+        (r"(mixer|cross)/wv$",      P(None, F, "model")),
+        (r"(mixer|cross)/wo$",      P(None, "model", F)),
+        (r"(mixer|cross)/b[qkv]$",  P(None, None)),
+        # dense mlp
+        (r"mlp/w_(up|gate)$",       P(None, F, "model")),
+        (r"mlp/w_down$",            P(None, "model", F)),
+        # moe
+        (r"mlp/router$",            P(None, None, None)),
+        (r"mlp/w_(up|gate)$",       P(None, None, F, "model")),  # [L,E,D,F]
+        (r"mlp/w_down$",            P(None, None, "model", F)),  # [L,E,F,D]
+        # mamba
+        (r"mixer/in_proj$",         P(None, F, "model")),
+        (r"mixer/out_proj$",        P(None, "model", F)),
+        (r"mixer/conv_[wb]$",       P(None, None, "model")),
+        (r"mixer/x_proj$",          P(None, "model", None)),
+        (r"mixer/dt_proj$",         P(None, None, "model")),
+        (r"mixer/(A_log)$",         P(None, "model", None)),
+        (r"mixer/(D|dt_bias)$",     P(None, "model")),
+        # rwkv (heads often indivisible -> replicate outputs, FSDP inputs)
+        (r"mixer/w[rkvgo]$",        P(None, F, None)),
+        (r"mixer/(w_lora_a|mix_lora_a)$", P(None, F, None)),
+        (r"mixer/.*$",              P(None,)),
+        (r"mlp/w[kvr]$",            P(None, F, None)),
+        # norms / everything else replicated
+        (r".*",                     P()),
+    ]
+
+
+def _moe_aware(path: str, shape: tuple[int, ...], rules) -> P:
+    """Pick the matching rule; disambiguate mlp w_up/w_down by rank (MoE
+    weights are rank-4 with the stacked period dim)."""
+    for pat, spec in rules:
+        if re.search(pat, path):
+            if re.search(r"mlp/w_(up|gate|down)$", path):
+                want_rank4 = len(shape) == 4
+                is_moe_rule = len(spec) == 4
+                if want_rank4 != is_moe_rule:
+                    continue
+            return spec
+    return P()
+
+
+def _fsdp2d_spec(path: str, shape: tuple[int, ...]) -> P:
+    """fsdp2d: every weight sharded over ("data","model") on its first
+    big dim; embed/lm_head replicated (read once per step); no TP axis."""
+    F = ("data", "model")
+    if re.search(r"(embed|lm_head)$", path):
+        return P()
+    stacked = path.startswith(("blocks", "enc_blocks"))
+    lead = (None,) if stacked else ()
+    body = shape[1:] if stacked else shape
+    if not body:
+        return P()
+    # put the FSDP axes on the largest dim of the body
+    big = max(range(len(body)), key=lambda i: body[i])
+    spec = [None] * len(body)
+    spec[big] = F
+    return P(*(list(lead) + spec))
+
+
+def param_path_spec(cfg: ModelConfig, path: str,
+                    shape: tuple[int, ...], *,
+                    force_zero2: bool = False) -> P:
+    """PartitionSpec for a parameter leaf given its tree path.
+
+    ZeRO-2 (cfg.zero2 or force_zero2): parameters carry only the "model"
+    axis — no per-layer all-gathers in fwd/bwd; the data axis shards the
+    optimizer state instead (see opt_shardings).  The embedding table is
+    fully replicated in ZeRO-2 (it is read once per step; replication
+    removes the fp32 table-gather the partitioner otherwise emits)."""
+    if cfg.train_sharding == "fsdp2d" and not force_zero2:
+        return _fsdp2d_spec(path, shape)
+    zero2 = force_zero2 or cfg.zero2
+    fsdp = None if zero2 else ("data" if cfg.fsdp else None)
+    if zero2 and re.search(r"embed$", path):
+        return P()
+    rules = _param_rules(cfg, fsdp)
+    spec = _moe_aware(path, shape, rules)
+    stacked = path.startswith(("blocks", "enc_blocks"))
+    if not stacked:
+        # drop the leading placeholder for unstacked leaves
+        entries = list(spec)
+        if entries and entries[0] is None and len(entries) > len(shape):
+            spec = P(*entries[1:])
+    return spec
+
+
+def tree_paths(tree) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                              for q in p), tree)
+
+
+def param_shardings(mesh: Mesh, cfg: ModelConfig, params_shape, *,
+                    force_zero2: bool = False) -> Any:
+    """Pytree of NamedShardings matching a params(-shaped) pytree."""
+    def one(path, leaf):
+        pstr = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                        for q in path)
+        return named(mesh, leaf.shape,
+                     param_path_spec(cfg, pstr, leaf.shape,
+                                     force_zero2=force_zero2))
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+# --------------------------------------------------------------- opt state
+def opt_shardings(mesh: Mesh, cfg: ModelConfig, opt_shape,
+                  params_shape) -> Any:
+    """Adam moments follow their parameters — except under ZeRO-2, where
+    moments keep the data-axis (FSDP) sharding while params do not: the
+    optimizer state is the thing worth sharding, and its traffic is one
+    reduce-scatter + one all-gather per step instead of per layer."""
+    if cfg.zero2 and cfg.train_sharding != "fsdp2d":
+        z3 = cfg.with_overrides(zero2=False, fsdp=True)
+        pshard = param_shardings(mesh, z3, params_shape)
+    else:
+        pshard = param_shardings(mesh, cfg, params_shape)
+    out = {"m": pshard, "v": pshard,
+           "count": NamedSharding(mesh, P())}
+    if "ef" in opt_shape:
+        out["ef"] = pshard
+    return out
+
+
+# -------------------------------------------------------------- batch/cache
+def batch_shardings(mesh: Mesh, cfg: ModelConfig, batch_shape) -> Any:
+    dp = dp_axes(mesh)
+
+    def one(path, leaf):
+        pstr = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                        for q in path)
+        if pstr == "mrope_positions":            # [3,B,S]
+            return named(mesh, leaf.shape, P(None, dp, None))
+        spec = [dp] + [None] * (len(leaf.shape) - 1)
+        return named(mesh, leaf.shape, P(*spec))
+    return jax.tree_util.tree_map_with_path(one, batch_shape)
+
+
+def cache_shardings(mesh: Mesh, cfg: ModelConfig, cache_shape) -> Any:
+    """KV: [L,B,T,K,hd] — batch over dp; heads over model when divisible,
+    else sequence over model (flash-decoding split-KV).  SSM/RWKV states:
+    batch over dp, inner dim over model when divisible."""
+    dp = dp_axes(mesh)
+    model_n = mesh.shape["model"]
+
+    def one(path, leaf):
+        pstr = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                        for q in path)
+        shp = leaf.shape
+        if pstr.endswith(("/k", "/v", "/xk", "/xv")):
+            K = shp[3]
+            if K % model_n == 0:
+                return named(mesh, shp, P(None, dp, None, "model", None))
+            return named(mesh, shp, P(None, dp, "model", None, None))
+        if pstr.endswith("/ssm"):                 # [L,B,Di,N]
+            return named(mesh, shp, P(None, dp, "model", None))
+        if pstr.endswith("/conv"):                # [L,B,k-1,Di]
+            return named(mesh, shp, P(None, dp, None, "model"))
+        if pstr.endswith("/wkv"):                 # [L,B,H,N,N]
+            return named(mesh, shp, P(None, dp, None, None, None))
+        if pstr.endswith(("/shift", "/cmix_shift")):   # [L,B,D]
+            return named(mesh, shp, P(None, dp, None))
+        spec = [None] + [dp] + [None] * (len(shp) - 2)
+        return named(mesh, shp, P(*spec))
+    return jax.tree_util.tree_map_with_path(one, cache_shape)

@@ -1,0 +1,123 @@
+"""ShapeDtypeStruct input specs for every (arch × shape × mode) cell.
+
+`input_specs()` returns sharding-annotated ShapeDtypeStructs — weak-type
+correct, shardable, zero allocation — for:
+  * train  : (state, batch)  for `train_step`
+  * prefill: (params, batch) for `prefill`
+  * decode : (params, tokens, cache, cache_len) for `decode_step`
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig, ShapeConfig
+from ..models.transformer import cache_spec, init_params
+from ..optim import adamw
+from .mesh import dp_axes, train_dp_axes
+from .shardings import (batch_shardings, cache_shardings, named,
+                        opt_shardings, param_shardings)
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _with_shardings(shape_tree, shard_tree):
+    return jax.tree.map(
+        lambda s, sh: _sds(s.shape, s.dtype, sh), shape_tree, shard_tree)
+
+
+SERVE_RESIDENT_LIMIT = 12e9   # bytes/chip of resident params for serving
+
+
+def params_specs(mesh: Mesh, cfg: ModelConfig, *, serving: bool = False):
+    shapes = jax.eval_shape(
+        lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+    force_zero2 = False
+    if serving:
+        # serving wants params RESIDENT (model-sharded, no per-step
+        # gathers); fall back to FSDP only when a model shard exceeds HBM
+        # (jamba-398B, mixtral-8x22B on a 16-way model axis).
+        per_chip = 2 * cfg.param_count() / mesh.shape["model"]
+        force_zero2 = per_chip <= SERVE_RESIDENT_LIMIT
+    return _with_shardings(
+        shapes, param_shardings(mesh, cfg, shapes,
+                                force_zero2=force_zero2))
+
+
+def state_specs(mesh: Mesh, cfg: ModelConfig,
+                opt_cfg: Optional[adamw.AdamWConfig] = None):
+    opt_cfg = opt_cfg or adamw.AdamWConfig(moment_dtype=cfg.moment_dtype)
+    pspec = params_specs(mesh, cfg)
+    oshapes = jax.eval_shape(lambda p: adamw.init(p, opt_cfg), pspec)
+    oshard = opt_shardings(mesh, cfg, oshapes, pspec)
+    return {
+        "params": pspec,
+        "opt": _with_shardings(oshapes, oshard),
+        "step": _sds((), jnp.int32, NamedSharding(mesh, P())),
+    }, opt_cfg
+
+
+def batch_specs(mesh: Mesh, cfg: ModelConfig, batch: int, seq_len: int,
+                *, labels: bool = True, train: bool = False):
+    shapes = {"tokens": _sds((batch, seq_len), jnp.int32)}
+    if labels:
+        shapes["labels"] = _sds((batch, seq_len), jnp.int32)
+    if cfg.mrope_sections:
+        shapes["mrope_positions"] = _sds((3, batch, seq_len), jnp.int32)
+        shapes["vision_embeds"] = _sds(
+            (batch, max(seq_len // 4, 1), cfg.d_model), jnp.bfloat16)
+    if cfg.is_encoder_decoder:
+        shapes["enc_embeds"] = _sds(
+            (batch, cfg.encoder_len, cfg.d_model), jnp.bfloat16)
+    if train:
+        from .shardings import batch_shardings as _bs
+        import repro.launch.shardings as _sh
+        dp = train_dp_axes(mesh, cfg)
+        def one(path, leaf):
+            pstr = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                            for q in path)
+            if pstr == "mrope_positions":
+                return _sh.named(mesh, leaf.shape, P(None, dp, None))
+            spec = [dp] + [None] * (len(leaf.shape) - 1)
+            return _sh.named(mesh, leaf.shape, P(*spec))
+        shard = jax.tree_util.tree_map_with_path(one, shapes)
+        return _with_shardings(shapes, shard)
+    return _with_shardings(shapes, batch_shardings(mesh, cfg, shapes))
+
+
+def cache_specs(mesh: Mesh, cfg: ModelConfig, batch: int, seq_len: int):
+    spec = cache_spec(cfg, batch, seq_len)
+    is_sd = lambda x: (isinstance(x, tuple) and len(x) == 2
+                       and isinstance(x[0], tuple))
+    shapes = jax.tree.map(lambda sd: _sds(*sd), spec, is_leaf=is_sd)
+    return _with_shardings(shapes, cache_shardings(mesh, cfg, shapes))
+
+
+def input_specs(arch_cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """Returns (mode, specs dict) for the cell."""
+    cfg = arch_cfg
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        state, opt_cfg = state_specs(mesh, cfg)
+        return "train", {"state": state,
+                         "batch": batch_specs(mesh, cfg, B, S, train=True),
+                         "opt_cfg": opt_cfg}
+    if shape.kind == "prefill":
+        return "prefill", {"params": params_specs(mesh, cfg, serving=True),
+                           "batch": batch_specs(mesh, cfg, B, S,
+                                                labels=False)}
+    # decode: one new token against a seq_len-deep cache
+    dp = dp_axes(mesh)
+    return "decode", {
+        "params": params_specs(mesh, cfg, serving=True),
+        "tokens": _sds((B, 1), jnp.int32,
+                       named(mesh, (B, 1), P(dp, None))),
+        "cache": cache_specs(mesh, cfg, B, S),
+        "cache_len": _sds((), jnp.int32, NamedSharding(mesh, P())),
+    }

@@ -1,0 +1,13 @@
+"""Model zoo: config-driven transformer/SSM/hybrid stacks."""
+
+from .config import LayerSpec, ModelConfig, ShapeConfig, SHAPES
+from .transformer import (init_params, forward, loss_fn, prefill,
+                          decode_step, init_cache, cache_spec, embed_inputs)
+from .sharding import with_mesh, hint, current_mesh
+
+__all__ = [
+    "LayerSpec", "ModelConfig", "ShapeConfig", "SHAPES",
+    "init_params", "forward", "loss_fn", "prefill", "decode_step",
+    "init_cache", "cache_spec", "embed_inputs",
+    "with_mesh", "hint", "current_mesh",
+]

@@ -1,0 +1,651 @@
+"""Layer math: norms, RoPE/M-RoPE, attention (chunked-flash / decode), MLPs,
+MoE (GShard-style capacity dispatch), Mamba (chunked selective scan) and
+RWKV6 (chunked WKV).  Pure functions over parameter dicts; everything is
+`lax.scan`/`jit`-friendly with static shapes only.
+
+Attention note (TPU adaptation): prefill/train attention is an online-softmax
+scan over KV chunks (flash-style) in pure jnp — it never materializes the
+S×S score matrix, so 32k-token prefill fits HBM; the Pallas kernels in
+`repro.kernels` implement the same contract for the TPU target and are
+validated against these functions.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Params = dict
+
+
+def eff_chunk(cfg, default: int, T: int) -> int:
+    """Scan chunk size: cfg.scan_chunk == -1 lowers single-chunk HLO (the
+    cost-model variant where XLA cost analysis sees every op exactly once)."""
+    sc = getattr(cfg, "scan_chunk", 0)
+    if sc == -1:
+        return T
+    return sc if sc > 0 else default
+
+
+# ---------------------------------------------------------------------- norms
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jax.Array, w: jax.Array, b: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def norm_apply(p: Params, x: jax.Array, kind: str) -> jax.Array:
+    if kind == "layernorm":
+        return layernorm(x, p["w"], p["b"])
+    return rmsnorm(x, p["w"])
+
+
+def norm_init(d: int, kind: str, dtype) -> Params:
+    if kind == "layernorm":
+        return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+    return {"w": jnp.ones((d,), dtype)}
+
+
+# ----------------------------------------------------------------------- RoPE
+def rope_cos_sin(positions: jax.Array, rot_dim: int, theta: float):
+    """positions [...]; returns cos/sin [..., rot_dim/2] (fp32)."""
+    half = rot_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _rotate(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x [..., rot_dim]; cos/sin [..., rot_dim/2] broadcastable."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1).astype(x.dtype)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               fraction: float = 1.0) -> jax.Array:
+    """x [B, S, H, hd]; positions [B, S] (or [S]).  Partial rotary supported
+    (nemotron rope_fraction)."""
+    hd = x.shape[-1]
+    rot = int(hd * fraction) // 2 * 2
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    cos, sin = rope_cos_sin(positions, rot, theta)       # [B,S,rot/2]
+    cos, sin = cos[:, :, None, :], sin[:, :, None, :]    # broadcast heads
+    if rot == hd:
+        return _rotate(x, cos, sin)
+    xr, xp = x[..., :rot], x[..., rot:]
+    return jnp.concatenate([_rotate(xr, cos, sin), xp], axis=-1)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array,
+                sections: tuple[int, ...], theta: float) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.  x [B,S,H,hd]; positions3 [3,B,S] gives the
+    (temporal, height, width) position streams; `sections` partitions the
+    hd/2 frequency pairs among the three streams."""
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(sections) == half, (sections, half)
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    # pick the position stream per frequency-pair index
+    sec_id = jnp.repeat(jnp.arange(len(sections)),
+                        jnp.array(sections), total_repeat_length=half)  # [half]
+    pos = positions3.astype(jnp.float32)                  # [3,B,S]
+    pos_sel = jnp.take(pos, sec_id, axis=0)               # [half,B,S]
+    ang = jnp.moveaxis(pos_sel, 0, -1) * inv              # [B,S,half]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    return _rotate(x, cos, sin)
+
+
+# ----------------------------------------------------------------- attention
+def attn_init(key, cfg, dtype, *, cross: bool = False) -> Params:
+    d, hd = cfg.d_model, cfg.head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wq": (jax.random.normal(k1, (d, nh * hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(k2, (d, nkv * hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(k3, (d, nkv * hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(k4, (nh * hd, d)) * s).astype(dtype),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((nh * hd,), dtype)
+        p["bk"] = jnp.zeros((nkv * hd,), dtype)
+        p["bv"] = jnp.zeros((nkv * hd,), dtype)
+    return p
+
+
+def _qkv(p: Params, x: jax.Array, cfg, kv_x: Optional[jax.Array] = None):
+    B, S, _ = x.shape
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    xkv = x if kv_x is None else kv_x
+    T = xkv.shape[1]
+    q = x @ p["wq"]
+    k = xkv @ p["wk"]
+    v = xkv @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (q.reshape(B, S, nh, hd), k.reshape(B, T, nkv, hd),
+            v.reshape(B, T, nkv, hd))
+
+
+def flash_attention_xla(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool, window: int = 0,
+                        q_offset: int = 0, kv_len: Optional[jax.Array] = None,
+                        chunk: int = 1024) -> jax.Array:
+    """Online-softmax attention, scanning KV in chunks.
+
+    q [B,S,H,hd]; k/v [B,T,K,hd] with H = K*G (GQA).  `causal` masks with
+    query positions `q_offset + i`; `window`>0 adds sliding-window masking;
+    `kv_len` (scalar array) masks out KV positions >= kv_len (decode caches).
+    Returns [B,S,H,hd].
+    """
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    chunk = min(chunk, T)
+    n_chunks = -(-T // chunk)
+    Tp = n_chunks * chunk
+    if Tp != T:
+        pad = [(0, 0), (0, Tp - T), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    qf = (q.reshape(B, S, K, G, hd).astype(jnp.float32)
+          * (1.0 / math.sqrt(hd)))
+    kc = k.reshape(B, n_chunks, chunk, K, hd)
+    vc = v.reshape(B, n_chunks, chunk, K, hd)
+    q_pos = q_offset + jnp.arange(S)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kj, vj, j = inp
+        kv_pos = j * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bskgh,btkh->bskgt", qf, kj.astype(jnp.float32))
+        mask = jnp.ones((S, chunk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= kv_pos[None, :]
+        if window > 0:
+            mask &= q_pos[:, None] - kv_pos[None, :] < window
+        if kv_len is not None:
+            mask &= kv_pos[None, :] < kv_len
+        mask &= (kv_pos < T)[None, :]
+        s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        scale = jnp.exp(m - m_new)
+        l_new = l * scale + p.sum(axis=-1)
+        acc_new = acc * scale[..., None] \
+            + jnp.einsum("bskgt,btkh->bskgh", p, vj.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, S, K, G), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, S, K, G), jnp.float32)
+    a0 = jnp.zeros((B, S, K, G, hd), jnp.float32)
+    (m, l, acc), _ = lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+         jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def attention(p: Params, x: jax.Array, cfg, *, positions, causal=True,
+              mrope_positions=None, kv_x: Optional[jax.Array] = None,
+              rope: bool = True) -> jax.Array:
+    """Full-sequence (train / prefill) attention."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg, kv_x)
+    chunk = eff_chunk(cfg, 1024, k.shape[1] if kv_x is not None else S)
+    if rope and kv_x is None:
+        if cfg.mrope_sections and mrope_positions is not None:
+            q = apply_mrope(q, mrope_positions, cfg.mrope_sections,
+                            cfg.rope_theta)
+            k = apply_mrope(k, mrope_positions, cfg.mrope_sections,
+                            cfg.rope_theta)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+            k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    o = flash_attention_xla(q, k, v, causal=causal,
+                            window=cfg.sliding_window, chunk=chunk)
+    return o.reshape(B, S, -1) @ p["wo"]
+
+
+def attention_prefill(p: Params, x, cfg, *, positions, cache_len: int,
+                      mrope_positions=None):
+    """Prefill: run full attention AND return the KV cache to install.
+
+    Returns (y, (k_cache, v_cache)) with caches [B, T_cache, K, hd]; for SWA
+    archs T_cache == min(S, window) (rolling buffer)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg)
+    if cfg.mrope_sections and mrope_positions is not None:
+        q = apply_mrope(q, mrope_positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, mrope_positions, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    o = flash_attention_xla(q, k, v, causal=True, window=cfg.sliding_window,
+                            chunk=eff_chunk(cfg, 1024, S))
+    y = o.reshape(B, S, -1) @ p["wo"]
+    if cache_len < S:                       # SWA rolling buffer
+        k, v = k[:, S - cache_len:], v[:, S - cache_len:]
+    elif cache_len > S:
+        pad = [(0, 0), (0, cache_len - S), (0, 0), (0, 0)]
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    return y, (k, v)
+
+
+def attention_decode(p: Params, x: jax.Array, cfg, kv_cache, *,
+                     pos: jax.Array, cache_len: jax.Array,
+                     cross: bool = False):
+    """One-token decode.  x [B,1,D]; kv_cache ([B,T,K,hd], [B,T,K,hd]).
+
+    `pos` is the absolute position of the new token (for RoPE), `cache_len`
+    the number of valid cache entries.  For self-attention the new KV is
+    written at slot `cache_len % T` (rolling buffer — exact for SWA, and for
+    full attention T is sized to hold the max sequence).  Cross-attention
+    (`cross=True`) reads a precomputed immutable cache.
+    """
+    B = x.shape[0]
+    kc, vc = kv_cache
+    T = kc.shape[1]
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = (x @ p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(B, 1, nh, hd)
+    if not cross:
+        k = (x @ p["wk"])
+        v = (x @ p["wv"])
+        if "bk" in p:
+            k, v = k + p["bk"], v + p["bv"]
+        k = k.reshape(B, 1, nkv, hd)
+        v = v.reshape(B, 1, nkv, hd)
+        if cfg.mrope_sections:
+            pos3 = jnp.broadcast_to(pos, (3, B, 1))
+            q = apply_mrope(q, pos3, cfg.mrope_sections, cfg.rope_theta)
+            k = apply_mrope(k, pos3, cfg.mrope_sections, cfg.rope_theta)
+        else:
+            posb = jnp.broadcast_to(pos, (B, 1))
+            q = apply_rope(q, posb, cfg.rope_theta, cfg.rope_fraction)
+            k = apply_rope(k, posb, cfg.rope_theta, cfg.rope_fraction)
+        slot = (cache_len % T).astype(jnp.int32)
+        kc = lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, slot, 0, 0))
+        vc = lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, slot, 0, 0))
+        valid = jnp.minimum(cache_len + 1, T)
+    else:
+        # cross-attention reads a precomputed immutable cache; no rotation
+        valid = cache_len
+    # scores over the whole cache (decode is O(T), memory [B,H,T])
+    G = nh // nkv
+    qf = q.reshape(B, nkv, G, hd).astype(jnp.float32) / math.sqrt(hd)
+    s = jnp.einsum("bkgh,btkh->bkgt", qf, kc.astype(jnp.float32))
+    kv_pos = jnp.arange(T)
+    mask = kv_pos[None, :] < valid
+    if cfg.sliding_window and not cross:
+        pass  # rolling buffer already bounds the window
+    s = jnp.where(mask[:, None, None, :] if mask.ndim == 2
+                  else mask[None, None, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkh->bkgh", w, vc.astype(jnp.float32))
+    y = o.reshape(B, 1, nh * hd).astype(x.dtype) @ p["wo"]
+    return y, (kc, vc)
+
+
+# ------------------------------------------------------------------------ MLP
+def mlp_init(key, d: int, f: int, act: str, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    p = {"w_up": (jax.random.normal(k1, (d, f)) * s_in).astype(dtype),
+         "w_down": (jax.random.normal(k2, (f, d)) * s_out).astype(dtype)}
+    if act in ("swiglu", "geglu"):
+        p["w_gate"] = (jax.random.normal(k3, (d, f)) * s_in).astype(dtype)
+    return p
+
+
+def mlp_apply(p: Params, x: jax.Array, act: str) -> jax.Array:
+    up = x @ p["w_up"]
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * up
+    elif act == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"]) * up
+    elif act == "relu2":                    # nemotron squared-ReLU
+        h = jnp.square(jax.nn.relu(up))
+    else:
+        h = jax.nn.gelu(up)
+    return h @ p["w_down"]
+
+
+# ------------------------------------------------------------------------ MoE
+def moe_init(key, cfg, dtype) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    p = {"router": (jax.random.normal(k1, (d, e)) * s_in).astype(jnp.float32),
+         "w_up": (jax.random.normal(k2, (e, d, f)) * s_in).astype(dtype),
+         "w_down": (jax.random.normal(k3, (e, f, d)) * s_out).astype(dtype)}
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        p["w_gate"] = (jax.random.normal(k4, (e, d, f)) * s_in).astype(dtype)
+    return p
+
+
+def moe_apply(p: Params, x: jax.Array, cfg, *,
+              capacity_factor: float = 0.0) -> jax.Array:
+    """GShard-style top-k dispatch with per-sequence expert capacity.
+
+    x [B,S,D] -> [B,S,D].  Static shapes: dispatch/combine are one-hot
+    einsums sized [B,S,E,C]; tokens over capacity are dropped (standard TPU
+    MoE).  Router in fp32.
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    cf = capacity_factor or cfg.moe_capacity_factor
+    C = max(int(cf * S * K / E), 4)
+    C = min(C, S)
+    logits = x.astype(jnp.float32) @ p["router"]            # [B,S,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = lax.top_k(probs, K)               # [B,S,K]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+    # position of each (token, k) within its expert queue
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)   # [B,S,K,E]
+    flat = onehot.reshape(B, S * K, E)
+    pos_in_e = (jnp.cumsum(flat, axis=1) - flat).reshape(B, S, K, E)
+    keep = (pos_in_e < C) * onehot                           # drop overflow
+    pos = jnp.einsum("bske->bsk", pos_in_e * onehot).astype(jnp.int32)
+    pos_oh = jax.nn.one_hot(pos, C, dtype=jnp.float32)       # [B,S,K,C]
+    dispatch = jnp.einsum("bske,bskc->bsec", keep, pos_oh)   # [B,S,E,C]
+    combine = jnp.einsum("bsk,bske,bskc->bsec", gate_vals, keep, pos_oh)
+    xe = jnp.einsum("bsec,bsd->becd", dispatch.astype(x.dtype), x)
+    up = jnp.einsum("becd,edf->becf", xe, p["w_up"])
+    if "w_gate" in p:
+        g = jnp.einsum("becd,edf->becf", xe, p["w_gate"])
+        h = (jax.nn.silu(g) if cfg.mlp_act == "swiglu"
+             else jax.nn.gelu(g)) * up
+    else:
+        h = jnp.square(jax.nn.relu(up)) if cfg.mlp_act == "relu2" \
+            else jax.nn.gelu(up)
+    ye = jnp.einsum("becf,efd->becd", h, p["w_down"])
+    return jnp.einsum("bsec,becd->bsd", combine.astype(x.dtype), ye)
+
+
+# ---------------------------------------------------------------------- Mamba
+def mamba_init(key, cfg, dtype) -> Params:
+    d, di = cfg.d_model, cfg.mamba_d_inner
+    ds, dc, dtr = cfg.mamba_d_state, cfg.mamba_d_conv, cfg.mamba_dt_rank
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    si = 1.0 / math.sqrt(di)
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * di)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (dc, di)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": (jax.random.normal(ks[2], (di, dtr + 2 * ds)) * si
+                   ).astype(dtype),
+        "dt_proj": (jax.random.normal(ks[3], (dtr, di)) *
+                    (1.0 / math.sqrt(dtr))).astype(dtype),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[4], (di, d)) * si).astype(dtype),
+    }
+
+
+def _mamba_scan_chunked(u, dt, B_, C_, A, chunk: int):
+    """Selective scan h_t = exp(dt_t A) h_{t-1} + dt_t B_t u_t;  y = C_t h_t.
+    u [B,T,Di]; dt [B,T,Di]; B_/C_ [B,T,N]; A [Di,N].  Chunked over T."""
+    B, T, Di = u.shape
+    N = B_.shape[-1]
+    chunk = min(chunk, T)
+    n = -(-T // chunk)
+    Tp = n * chunk
+    if Tp != T:
+        u = jnp.pad(u, ((0, 0), (0, Tp - T), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, Tp - T), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, Tp - T), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, Tp - T), (0, 0)))
+
+    def chunk_body(h0, xs):
+        uc, dtc, Bc, Cc = xs                  # [B,chunk,...]
+        # per-step decay a_t = exp(dt_t A) in (0,1]: numerically safe
+        a = jnp.exp(dtc[..., None] * A[None, None])         # [B,c,Di,N]
+        inc = (dtc * uc)[..., None] * Bc[:, :, None, :]     # [B,c,Di,N]
+        # h_t = a_t h_{t-1} + inc_t via associative scan (exact, bounded)
+        aa, hh = lax.associative_scan(
+            lambda p, q: (p[0] * q[0], q[1] + q[0] * p[1]),
+            (a, inc), axis=1)
+        h = hh + aa * h0[:, None]                           # [B,c,Di,N]
+        y = jnp.einsum("bcdn,bcn->bcd", h, Cc)
+        return h[:, -1], y
+
+    xs = (u.reshape(B, n, chunk, Di).swapaxes(0, 1),
+          dt.reshape(B, n, chunk, Di).swapaxes(0, 1),
+          B_.reshape(B, n, chunk, N).swapaxes(0, 1),
+          C_.reshape(B, n, chunk, N).swapaxes(0, 1))
+    h_last, ys = lax.scan(chunk_body, jnp.zeros((B, Di, N), jnp.float32), xs)
+    y = ys.swapaxes(0, 1).reshape(B, Tp, Di)[:, :T]
+    return y, h_last
+
+
+def mamba_apply(p: Params, x: jax.Array, cfg, *, chunk: int = 0):
+    """Mamba block over a full sequence.  x [B,T,D] -> [B,T,D]."""
+    B, T, D = x.shape
+    chunk = chunk or eff_chunk(cfg, 256, T)
+    di, ds, dtr = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_dt_rank
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)          # [B,T,Di] each
+    # depthwise causal conv (k = d_conv)
+    dc = p["conv_w"].shape[0]
+    xp = jnp.pad(xin, ((0, 0), (dc - 1, 0), (0, 0)))
+    xc = sum(xp[:, i:i + T] * p["conv_w"][i][None, None]
+             for i in range(dc)) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+    proj = (xc @ p["x_proj"]).astype(jnp.float32)
+    dt_r, B_, C_ = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                    # [Di,N], negative
+    y, h_last = _mamba_scan_chunked(xc.astype(jnp.float32), dt, B_, C_, A,
+                                    chunk)
+    y = y + xc.astype(jnp.float32) * p["D"]
+    y = (y.astype(x.dtype) * jax.nn.silu(z))
+    out = y @ p["out_proj"]
+    # conv tail state (last d_conv-1 inputs) for decode handoff
+    conv_state = xp[:, T:T + dc - 1]
+    return out, {"ssm": h_last, "conv": conv_state.astype(x.dtype)}
+
+
+def mamba_decode(p: Params, x: jax.Array, cfg, state: Params):
+    """One-token Mamba step.  x [B,1,D]; state {'ssm':[B,Di,N],
+    'conv':[B,k-1,Di]} -> (y [B,1,D], new state)."""
+    B = x.shape[0]
+    di, ds, dtr = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_dt_rank
+    xz = x[:, 0] @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)          # [B,Di]
+    conv = jnp.concatenate([state["conv"], xin[:, None]], axis=1)  # [B,k,Di]
+    xc = jnp.einsum("bkd,kd->bd", conv, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+    proj = (xc @ p["x_proj"]).astype(jnp.float32)
+    dt_r, B_, C_ = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"])        # [B,Di]
+    A = -jnp.exp(p["A_log"])
+    h = state["ssm"]                            # [B,Di,N]
+    dA = jnp.exp(dt[..., None] * A[None])
+    h = dA * h + (dt * xc.astype(jnp.float32))[..., None] * B_[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, C_) + xc.astype(jnp.float32) * p["D"]
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    return y[:, None], {"ssm": h, "conv": conv[:, 1:]}
+
+
+# ---------------------------------------------------------------------- RWKV6
+def rwkv_init(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    lw, lx = 64, 32
+    ks = jax.random.split(key, 12)
+    s = 1.0 / math.sqrt(d)
+    p = {}
+    for i, name in enumerate(("wr", "wk", "wv", "wg", "wo")):
+        p[name] = (jax.random.normal(ks[i], (d, d)) * s).astype(dtype)
+    p["w_lora_a"] = (jax.random.normal(ks[5], (d, lw)) * s).astype(dtype)
+    p["w_lora_b"] = (jax.random.normal(ks[6], (lw, d)) * 0.1).astype(dtype)
+    p["w_base"] = jnp.full((d,), -6.0, jnp.float32)      # decay base
+    p["u"] = jnp.zeros((d,), jnp.float32)                # time_first bonus
+    p["mix_base"] = jnp.zeros((6, d), jnp.float32)       # ddlerp bases
+    p["mix_lora_a"] = (jax.random.normal(ks[7], (d, lx * 5)) * s
+                       ).astype(dtype)
+    p["mix_lora_b"] = (jax.random.normal(ks[8], (5, lx, d)) * 0.1
+                       ).astype(dtype)
+    p["ln_w"] = jnp.ones((d,), jnp.float32)              # post-wkv groupnorm
+    p["ln_b"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def _rwkv_ddlerp(p: Params, x: jax.Array, x_prev: jax.Array):
+    """Data-dependent token-shift (RWKV6 ddlerp): returns the 5 mixed
+    streams (r,k,v,w,g).  x/x_prev [B,T,D]."""
+    dx = x_prev - x
+    base = x + dx * p["mix_base"][0]
+    lora = jnp.tanh(base @ p["mix_lora_a"])             # [B,T,5*lx]
+    lora = lora.reshape(*lora.shape[:-1], 5, -1)        # [B,T,5,lx]
+    mixed = []
+    for i in range(5):
+        adj = jnp.einsum("btl,ld->btd", lora[..., i, :], p["mix_lora_b"][i])
+        mixed.append(x + dx * (p["mix_base"][i + 1] + adj))
+    return mixed  # [xr, xk, xv, xw, xg]
+
+
+def _wkv_chunked(r, k, v, w_log, u, *, chunk: int, h0=None):
+    """RWKV6 WKV with per-channel data-dependent decay, chunked.
+
+    r,k,v [B,T,H,N]; w_log [B,T,H,N] (log decay, negative); u [H,N].
+    Recurrence per head (state S [N,N] keyed by k-dim, valued by v-dim):
+        S_t = diag(exp(w_log_t)) S_{t-1} + k_t v_t^T
+        o_t = (S_{t-1} + diag(u) k_t v_t^T)^T r_t
+    Returns o [B,T,H,N], S_last [B,H,N,N].
+    """
+    B, T, H, N = r.shape
+    chunk = min(chunk, T)
+    n = -(-T // chunk)
+    Tp = n * chunk
+    pad = ((0, 0), (0, Tp - T), (0, 0), (0, 0))
+    if Tp != T:
+        r, k, v = jnp.pad(r, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+        w_log = jnp.pad(w_log, pad)
+
+    def body(S, xs):
+        rc, kc, vc, wc = (x.astype(jnp.float32) for x in xs)  # [B,c,H,N]
+        a = jnp.exp(wc)[..., None]                  # per-step decay, (0,1]
+        inc = jnp.einsum("bchk,bchn->bchkn", kc, vc)
+        # S_t = diag(a_t) S_{t-1} + k_t v_t^T via associative scan (exact)
+        aa, hh = lax.associative_scan(
+            lambda p, q: (p[0] * q[0], q[1] + q[0] * p[1]),
+            (a, inc), axis=1)
+        h_full = hh + aa * S[:, None]               # [B,c,H,N,N] inclusive
+        h_prev = jnp.concatenate([S[:, None], h_full[:, :-1]], axis=1)
+        o = jnp.einsum("bchkn,bchk->bchn",
+                       h_prev + u[None, None, :, :, None] * inc, rc)
+        return h_full[:, -1], o
+
+    xs = tuple(x.reshape(B, n, chunk, H, N).swapaxes(0, 1)
+               for x in (r, k, v, w_log))
+    S0 = jnp.zeros((B, H, N, N), jnp.float32) if h0 is None else h0
+    S_last, os_ = lax.scan(body, S0, xs)
+    o = os_.swapaxes(0, 1).reshape(B, Tp, H, N)[:, :T]
+    return o, S_last
+
+
+def rwkv_apply(p: Params, x: jax.Array, cfg, *, chunk: int = 0):
+    """RWKV6 time-mix over a sequence.  x [B,T,D] -> ([B,T,D], state)."""
+    B, T, D = x.shape
+    chunk = chunk or eff_chunk(cfg, 32, T)
+    N = cfg.rwkv_head_dim
+    H = D // N
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :T]
+    xr, xk, xv, xw, xg = _rwkv_ddlerp(p, x, x_prev)
+    rr = (xr @ p["wr"]).reshape(B, T, H, N)
+    kk = (xk @ p["wk"]).reshape(B, T, H, N)
+    vv = (xv @ p["wv"]).reshape(B, T, H, N)
+    g = jax.nn.silu(xg @ p["wg"])
+    w_log = -jnp.exp(
+        (p["w_base"] + (jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"])
+         .astype(jnp.float32))).reshape(B, T, H, N)
+    u = p["u"].reshape(H, N)
+    o, S_last = _wkv_chunked(rr, kk, vv, w_log, u, chunk=chunk)
+    # per-head groupnorm then output proj
+    o = o.reshape(B, T, H, N)
+    mu = o.mean(-1, keepdims=True)
+    var = o.var(-1, keepdims=True)
+    o = (o - mu) * lax.rsqrt(var + 1e-5)
+    o = o.reshape(B, T, D) * p["ln_w"] + p["ln_b"]
+    y = (o.astype(x.dtype) * g) @ p["wo"]
+    state = {"shift": x[:, -1], "wkv": S_last}
+    return y, state
+
+
+def rwkv_decode(p: Params, x: jax.Array, cfg, state: Params):
+    """One-token RWKV6 step.  x [B,1,D]; state {'shift':[B,D],
+    'wkv':[B,H,N,N]}."""
+    B, _, D = x.shape
+    N = cfg.rwkv_head_dim
+    H = D // N
+    xt = x[:, 0]
+    x_prev = state["shift"]
+    xr, xk, xv, xw, xg = _rwkv_ddlerp(p, xt[:, None], x_prev[:, None])
+    rr = (xr[:, 0] @ p["wr"]).reshape(B, H, N).astype(jnp.float32)
+    kk = (xk[:, 0] @ p["wk"]).reshape(B, H, N).astype(jnp.float32)
+    vv = (xv[:, 0] @ p["wv"]).reshape(B, H, N).astype(jnp.float32)
+    g = jax.nn.silu(xg[:, 0] @ p["wg"])
+    w = jnp.exp(-jnp.exp(
+        (p["w_base"] + (jnp.tanh(xw[:, 0] @ p["w_lora_a"]) @ p["w_lora_b"])
+         .astype(jnp.float32)))).reshape(B, H, N)
+    u = p["u"].reshape(H, N)
+    S = state["wkv"]                                   # [B,H,N,N]
+    kv = jnp.einsum("bhk,bhn->bhkn", kk, vv)
+    o = jnp.einsum("bhkn,bhk->bhn", S + u[None, :, :, None] * kv, rr)
+    S = w[..., None] * S + kv
+    mu = o.mean(-1, keepdims=True)
+    var = o.var(-1, keepdims=True)
+    o = ((o - mu) * lax.rsqrt(var + 1e-5)).reshape(B, D)
+    o = o * p["ln_w"] + p["ln_b"]
+    y = ((o.astype(x.dtype) * g) @ p["wo"])[:, None]
+    return y, {"shift": xt, "wkv": S}
+
+
+def rwkv_cmix_init(key, cfg, dtype) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(d)
+    return {"wk": (jax.random.normal(k1, (d, f)) * s).astype(dtype),
+            "wv": (jax.random.normal(k2, (f, d)) *
+                   (1.0 / math.sqrt(f))).astype(dtype),
+            "wr": (jax.random.normal(k3, (d, d)) * s).astype(dtype),
+            "mix_k": jnp.zeros((d,), jnp.float32),
+            "mix_r": jnp.zeros((d,), jnp.float32)}
+
+
+def rwkv_cmix_apply(p: Params, x: jax.Array, x_prev: jax.Array):
+    """RWKV channel-mix.  x [B,T,D]; x_prev = token-shifted x."""
+    dx = x_prev - x
+    xk = x + dx * p["mix_k"]
+    xr = x + dx * p["mix_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])

@@ -1,0 +1,371 @@
+"""Model assembly: init / forward / loss / prefill / decode for every
+assigned architecture, driven entirely by `ModelConfig`.
+
+Depth is handled with `lax.scan` over *periods* of the layer pattern: the
+parameters of pattern position i are stacked across periods, so compiled HLO
+contains one instance of each distinct layer kind regardless of depth
+(88-layer granite compiles as fast as 4-layer whisper).
+
+Caches:
+  attention -> (k, v) ring buffers [B, T_cache, K, hd]
+  mamba     -> {"ssm": [B, Di, N], "conv": [B, k-1, Di]}
+  rwkv      -> {"shift": [B, D], "wkv": [B, H, N, N], "cmix_shift": [B, D]}
+stacked across periods (scan xs/ys) and grouped per pattern position.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers as L
+from .config import LayerSpec, ModelConfig
+from .sharding import hint
+
+Params = dict
+
+
+def _dt(name: str):
+    return jnp.dtype(name)
+
+
+# ------------------------------------------------------------------ block init
+def _block_init(key, spec: LayerSpec, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": L.norm_init(cfg.d_model, cfg.norm, dtype)}
+    if spec.mixer == "attn":
+        p["mixer"] = L.attn_init(ks[0], cfg, dtype)
+    elif spec.mixer == "mamba":
+        p["mixer"] = L.mamba_init(ks[0], cfg, dtype)
+    elif spec.mixer == "rwkv":
+        p["mixer"] = L.rwkv_init(ks[0], cfg, dtype)
+    if spec.cross_attn:
+        p["norm_x"] = L.norm_init(cfg.d_model, cfg.norm, dtype)
+        p["cross"] = L.attn_init(ks[1], cfg, dtype, cross=True)
+    if spec.mlp != "none":
+        p["norm2"] = L.norm_init(cfg.d_model, cfg.norm, dtype)
+    if spec.mlp == "dense":
+        p["mlp"] = L.mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.mlp_act, dtype)
+    elif spec.mlp == "moe":
+        p["mlp"] = L.moe_init(ks[2], cfg, dtype)
+    elif spec.mlp == "rwkv_cmix":
+        p["mlp"] = L.rwkv_cmix_init(ks[2], cfg, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dtype = _dt(cfg.param_dtype)
+    kE, kH, kB, kEnc = jax.random.split(key, 4)
+    d, v = cfg.d_model, cfg.vocab_size
+    params: Params = {
+        "embed": (jax.random.normal(kE, (v, d)) * 0.02).astype(dtype),
+        "lm_head": (jax.random.normal(kH, (d, v)) /
+                    math.sqrt(d)).astype(dtype),
+        "final_norm": L.norm_init(d, cfg.norm, dtype),
+    }
+    blocks = []
+    for i, spec in enumerate(cfg.pattern):
+        pkeys = jax.random.split(jax.random.fold_in(kB, i), cfg.n_periods)
+        blocks.append(jax.vmap(
+            lambda k, s=spec: _block_init(k, s, cfg, dtype))(pkeys))
+    params["blocks"] = tuple(blocks)
+    if cfg.is_encoder_decoder:
+        ekeys = jax.random.split(kEnc, cfg.n_encoder_layers)
+        espec = LayerSpec(mixer="attn", mlp="dense", causal=False)
+        params["enc_blocks"] = jax.vmap(
+            lambda k: _block_init(k, espec, cfg, dtype))(ekeys)
+        params["enc_final_norm"] = L.norm_init(d, cfg.norm, dtype)
+    return params
+
+
+# ----------------------------------------------------------------- block apply
+def _apply_mixer_full(pp, spec, cfg, x, positions, mrope_positions, enc_out):
+    """Full-sequence mixer; returns (y, cache_state or None)."""
+    h = L.norm_apply(pp["norm1"], x, cfg.norm)
+    if spec.mixer == "attn":
+        y = L.attention(pp["mixer"], h, cfg, positions=positions,
+                        causal=spec.causal, mrope_positions=mrope_positions)
+        state = None
+    elif spec.mixer == "mamba":
+        y, state = L.mamba_apply(pp["mixer"], h, cfg)
+    else:  # rwkv
+        y, state = L.rwkv_apply(pp["mixer"], h, cfg)
+    # pin the TP partial-sum point on the bf16 mixer output so the psum
+    # happens here (2 collectives/layer, Megatron minimum) instead of
+    # migrating into the fp32 norm internals downstream
+    x = x + hint(y.astype(x.dtype), "data", None, None)
+    if spec.cross_attn and enc_out is not None:
+        h = L.norm_apply(pp["norm_x"], x, cfg.norm)
+        x = x + L.attention(pp["cross"], h, cfg, positions=positions,
+                            causal=False, kv_x=enc_out, rope=False)
+    return x, state
+
+
+def _apply_mlp(pp, spec, cfg, x):
+    if spec.mlp == "none":
+        return x
+    h = L.norm_apply(pp["norm2"], x, cfg.norm)
+    h = hint(h, "data", None, None)
+    if spec.mlp == "dense":
+        y = L.mlp_apply(pp["mlp"], h, cfg.mlp_act)
+    elif spec.mlp == "moe":
+        y = L.moe_apply(pp["mlp"], h, cfg)
+    else:  # rwkv_cmix
+        T = h.shape[1]
+        h_prev = jnp.pad(h, ((0, 0), (1, 0), (0, 0)))[:, :T]
+        y = L.rwkv_cmix_apply(pp["mlp"], h, h_prev)
+    return x + hint(y.astype(x.dtype), "data", None, None)
+
+
+def _block_full(pp, spec, cfg, x, positions, mrope_positions, enc_out=None):
+    x, state = _apply_mixer_full(pp, spec, cfg, x, positions,
+                                 mrope_positions, enc_out)
+    x = _apply_mlp(pp, spec, cfg, x)
+    x = hint(x, "data", None, None)
+    return x, state
+
+
+def _scan_layers(cfg: ModelConfig, f, init, xs):
+    """lax.scan over stacked periods, or an unrolled python loop when
+    cfg.unroll_layers (the cost-model lowering: XLA cost analysis then sees
+    every period's ops explicitly instead of one while-loop body)."""
+    f = _remat(f, cfg)
+    if not cfg.unroll_layers:
+        return lax.scan(f, init, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    carry, ys = init, []
+    for i in range(n):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        carry, y = f(carry, xi)
+        ys.append(y)
+    if ys and jax.tree.leaves(ys[0]):
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+# --------------------------------------------------------------------- encoder
+def _encode(params, cfg, enc_embeds):
+    """Whisper-style encoder over stub frontend embeddings [B,T,D]."""
+    espec = LayerSpec(mixer="attn", mlp="dense", causal=False)
+    positions = jnp.arange(enc_embeds.shape[1])
+
+    def body(x, pp):
+        x, _ = _block_full(pp, espec, cfg, x, positions, None)
+        return x, None
+
+    x, _ = _scan_layers(cfg, body, enc_embeds, params["enc_blocks"])
+    return L.norm_apply(params["enc_final_norm"], x, cfg.norm)
+
+
+# --------------------------------------------------------------------- forward
+def embed_inputs(params, cfg: ModelConfig, batch: dict) -> jax.Array:
+    """Token / stub-frontend embedding.  For 'embeds' archs (audio encoder is
+    separate), token embeddings are summed with provided frontend embeddings
+    (padded to seq len) — the VLM merge stub."""
+    if "tokens" in batch:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        x = hint(x, "data", None, None)
+        if "vision_embeds" in batch:
+            ve = batch["vision_embeds"].astype(x.dtype)
+            pad = x.shape[1] - ve.shape[1]
+            if pad > 0:
+                ve = jnp.pad(ve, ((0, 0), (0, pad), (0, 0)))
+            x = x + ve
+        return x
+    return batch["embeds"].astype(_dt(cfg.param_dtype))
+
+
+def forward(params, cfg: ModelConfig, batch: dict) -> jax.Array:
+    """Training/scoring forward -> logits [B,S,V]."""
+    x = embed_inputs(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = batch.get("positions", jnp.arange(S))
+    mrope_positions = batch.get("mrope_positions")
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encode(params, cfg, batch["enc_embeds"])
+
+    def body(x, period_params):
+        for spec, pp in zip(cfg.pattern, period_params):
+            x, _ = _block_full(pp, spec, cfg, x, positions,
+                               mrope_positions, enc_out)
+        return x, None
+
+    x, _ = _scan_layers(cfg, body, x, params["blocks"])
+    x = L.norm_apply(params["final_norm"], x, cfg.norm)
+    logits = x @ params["lm_head"]
+    return hint(logits, "data", None, "model")
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict) -> jax.Array:
+    """Causal-LM cross entropy (fp32 logsumexp; vocab-parallel friendly)."""
+    logits = forward(params, cfg, batch).astype(jnp.float32)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None],
+                                 axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = (lse - picked) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# --------------------------------------------------------------------- serving
+def cache_spec(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    """Abstract cache layout for a serving session (used by init & specs).
+
+    For SWA archs the attention cache is the rolling window; for full
+    attention it holds `seq_len` entries."""
+    d, hd, nkv = cfg.d_model, cfg.head_dim, cfg.n_kv_heads
+    T = min(cfg.sliding_window, seq_len) if cfg.sliding_window else seq_len
+    per_pos = []
+    cdt = _dt(cfg.compute_dtype)
+    np_ = cfg.n_periods
+    for spec in cfg.pattern:
+        entry = {}
+        if spec.mixer == "attn":
+            entry["k"] = ((np_, batch, T, nkv, hd), cdt)
+            entry["v"] = ((np_, batch, T, nkv, hd), cdt)
+        elif spec.mixer == "mamba":
+            entry["ssm"] = ((np_, batch, cfg.mamba_d_inner,
+                             cfg.mamba_d_state), jnp.float32)
+            entry["conv"] = ((np_, batch, cfg.mamba_d_conv - 1,
+                              cfg.mamba_d_inner), cdt)
+        elif spec.mixer == "rwkv":
+            H = d // cfg.rwkv_head_dim
+            entry["shift"] = ((np_, batch, d), cdt)
+            entry["wkv"] = ((np_, batch, H, cfg.rwkv_head_dim,
+                             cfg.rwkv_head_dim), jnp.float32)
+        if spec.mlp == "rwkv_cmix":
+            entry["cmix_shift"] = ((np_, batch, d), cdt)
+        if spec.cross_attn:
+            entry["xk"] = ((np_, batch, cfg.encoder_len, nkv, hd), cdt)
+            entry["xv"] = ((np_, batch, cfg.encoder_len, nkv, hd), cdt)
+        per_pos.append(entry)
+    return {"blocks": tuple(per_pos)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    spec = cache_spec(cfg, batch, seq_len)
+    return jax.tree.map(lambda sd: jnp.zeros(*sd),
+                        spec, is_leaf=lambda x: isinstance(x, tuple)
+                        and len(x) == 2 and isinstance(x[0], tuple))
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, *, cache_len: int):
+    """Process the prompt; returns (last-token logits, cache).
+
+    cache_len: capacity of the per-layer attention cache (>= prompt len for
+    full attention; the SWA window for sliding-window archs)."""
+    x = embed_inputs(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = batch.get("positions", jnp.arange(S))
+    mrope_positions = batch.get("mrope_positions")
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encode(params, cfg, batch["enc_embeds"])
+
+    def body(x, period_params):
+        caches = []
+        for spec, pp in zip(cfg.pattern, period_params):
+            entry = {}
+            h = L.norm_apply(pp["norm1"], x, cfg.norm)
+            if spec.mixer == "attn":
+                y, (kc, vc) = L.attention_prefill(
+                    pp["mixer"], h, cfg, positions=positions,
+                    cache_len=cache_len, mrope_positions=mrope_positions)
+                entry["k"], entry["v"] = kc, vc
+            elif spec.mixer == "mamba":
+                y, st = L.mamba_apply(pp["mixer"], h, cfg)
+                entry["ssm"], entry["conv"] = st["ssm"], st["conv"]
+            else:
+                y, st = L.rwkv_apply(pp["mixer"], h, cfg)
+                entry["shift"], entry["wkv"] = st["shift"], st["wkv"]
+            x = x + y.astype(x.dtype)
+            if spec.cross_attn and enc_out is not None:
+                hx = L.norm_apply(pp["norm_x"], x, cfg.norm)
+                x = x + L.attention(pp["cross"], hx, cfg, positions=positions,
+                                    causal=False, kv_x=enc_out, rope=False)
+                # precompute immutable cross KV for decode
+                _, xk, xv = L._qkv(pp["cross"], hx, cfg, enc_out)
+                entry["xk"], entry["xv"] = xk, xv
+            if spec.mlp == "rwkv_cmix":
+                h2 = L.norm_apply(pp["norm2"], x, cfg.norm)
+                entry["cmix_shift"] = h2[:, -1]
+            x = _apply_mlp(pp, spec, cfg, x)
+            caches.append(entry)
+        return x, tuple(caches)
+
+    x, cache_blocks = _scan_layers(cfg, body, x, params["blocks"])
+    x = L.norm_apply(params["final_norm"], x[:, -1:], cfg.norm)
+    logits = x @ params["lm_head"]
+    return logits[:, 0], {"blocks": cache_blocks}
+
+
+def decode_step(params, cfg: ModelConfig, tokens: jax.Array, cache: dict,
+                cache_len: jax.Array, enc_out: Optional[jax.Array] = None):
+    """One decode step.  tokens [B,1]; cache from `prefill`/`init_cache`;
+    cache_len: number of tokens already in the cache (scalar int32).
+    Returns (logits [B,V], new cache)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    pos = cache_len
+
+    def body(x, inp):
+        period_params, cache_in = inp
+        cache_out = []
+        for spec, pp, ce in zip(cfg.pattern, period_params, cache_in):
+            ce = dict(ce)
+            h = L.norm_apply(pp["norm1"], x, cfg.norm)
+            if spec.mixer == "attn":
+                y, (kc, vc) = L.attention_decode(
+                    pp["mixer"], h, cfg, (ce["k"], ce["v"]),
+                    pos=pos, cache_len=cache_len)
+                ce["k"], ce["v"] = kc, vc
+            elif spec.mixer == "mamba":
+                y, st = L.mamba_decode(pp["mixer"], h, cfg,
+                                       {"ssm": ce["ssm"], "conv": ce["conv"]})
+                ce["ssm"], ce["conv"] = st["ssm"], st["conv"]
+            else:
+                y, st = L.rwkv_decode(pp["mixer"], h, cfg,
+                                      {"shift": ce["shift"],
+                                       "wkv": ce["wkv"]})
+                ce["shift"], ce["wkv"] = st["shift"], st["wkv"]
+            x = x + y.astype(x.dtype)
+            if spec.cross_attn:
+                hx = L.norm_apply(pp["norm_x"], x, cfg.norm)
+                y, _ = L.attention_decode(
+                    pp["cross"], hx, cfg, (ce["xk"], ce["xv"]),
+                    pos=pos, cache_len=jnp.asarray(cfg.encoder_len),
+                    cross=True)
+                x = x + y.astype(x.dtype)
+            if spec.mlp == "rwkv_cmix":
+                h2 = L.norm_apply(pp["norm2"], x, cfg.norm)
+                prev = ce["cmix_shift"]
+                y2 = L.rwkv_cmix_apply(pp["mlp"], h2, prev[:, None])
+                ce["cmix_shift"] = h2[:, 0]
+                x = x + y2.astype(x.dtype)
+            elif spec.mlp != "none":
+                x = _apply_mlp(pp, spec, cfg, x)
+            cache_out.append(ce)
+        return x, tuple(cache_out)
+
+    x, new_blocks = _scan_layers(cfg, body, x,
+                                 (params["blocks"], cache["blocks"]))
+    x = L.norm_apply(params["final_norm"], x, cfg.norm)
+    logits = (x @ params["lm_head"])[:, 0]
+    return logits, {"blocks": new_blocks}

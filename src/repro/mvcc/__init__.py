@@ -1,0 +1,15 @@
+"""Executable MVCC engine + HTAP architectures (the paper's Sec 5 systems)."""
+
+from .store import Store, Version, VersionChain
+from .engine import (Engine, Txn, Status, AbortReason, SerializationFailure)
+from .htap import SingleNodeHTAP, MultiNodeHTAP, Replica
+from .workload import Scale, load_initial, oltp_transaction, olap_query
+from .driver import Metrics, run_single_node, run_multi_node
+
+__all__ = [
+    "Store", "Version", "VersionChain",
+    "Engine", "Txn", "Status", "AbortReason", "SerializationFailure",
+    "SingleNodeHTAP", "MultiNodeHTAP", "Replica",
+    "Scale", "load_initial", "oltp_transaction", "olap_query",
+    "Metrics", "run_single_node", "run_multi_node",
+]

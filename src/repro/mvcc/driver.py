@@ -1,0 +1,242 @@
+"""Deterministic logical-time workload driver for the HTAP benchmarks.
+
+Model: N clients run concurrently; in every *round* each client advances by
+exactly one step (one storage operation, one wait-poll, or one commit).  The
+round counter is the logical clock, so a scan of 800 keys stays active for
+800 rounds and overlaps hundreds of OLTP commits — reproducing the
+concurrency structure the paper's figures measure (writer-aborts under SSI,
+reader-waits under SafeSnapshots, neither under RSS).
+
+Throughput  = commits / rounds (per class), abort rate = aborts/(commits+aborts).
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .engine import SerializationFailure, Status
+from .htap import MultiNodeHTAP, SingleNodeHTAP
+from .workload import Scale, load_initial, olap_query, oltp_transaction
+
+
+@dataclass
+class Metrics:
+    oltp_commits: int = 0
+    oltp_aborts: int = 0
+    oltp_retries: int = 0
+    olap_commits: int = 0
+    olap_aborts: int = 0
+    olap_wait_rounds: int = 0
+    rounds: int = 0
+    by_abort_reason: dict = field(default_factory=dict)
+
+    def oltp_tps(self) -> float:
+        return self.oltp_commits / max(self.rounds, 1)
+
+    def olap_qps(self) -> float:
+        return self.olap_commits / max(self.rounds, 1)
+
+    def oltp_abort_rate(self) -> float:
+        d = self.oltp_commits + self.oltp_aborts
+        return self.oltp_aborts / d if d else 0.0
+
+    def olap_abort_rate(self) -> float:
+        d = self.olap_commits + self.olap_aborts
+        return self.olap_aborts / d if d else 0.0
+
+
+class _OltpClient:
+    def __init__(self, engine, rng: random.Random, sc: Scale, m: Metrics):
+        self.engine, self.rng, self.sc, self.m = engine, rng, sc, m
+        self.txn = None
+        self.gen = None
+        self.pending = None  # value to send into the generator
+
+    def _restart(self) -> None:
+        self.gen, self.name = oltp_transaction(self.rng, self.sc)
+        read_only = self.name == "order_status"
+        self.txn = self.engine.begin(read_only=read_only)
+        self.pending = None
+
+    def step(self) -> None:
+        if self.txn is None:
+            self._restart()
+            return
+        if self.txn.status == Status.ABORTED:   # aborted by SSI mid-flight
+            self.m.oltp_aborts += 1
+            self.m.oltp_retries += 1
+            self._bump_reason(self.txn.abort_reason)
+            self._restart()
+            return
+        try:
+            step = self.gen.send(self.pending)
+            self.pending = None
+        except StopIteration:
+            try:
+                self.engine.commit(self.txn)
+                self.m.oltp_commits += 1
+            except SerializationFailure as e:
+                self.m.oltp_aborts += 1
+                self.m.oltp_retries += 1
+                self._bump_reason(e.reason)
+            self.txn = None
+            return
+        try:
+            if step[0] == "r":
+                self.pending = self.engine.read(self.txn, step[1])
+            elif step[0] == "w":
+                self.engine.write(self.txn, step[1], step[2])
+            # ("out", v) steps are free
+        except SerializationFailure as e:
+            self.m.oltp_aborts += 1
+            self.m.oltp_retries += 1
+            self._bump_reason(e.reason)
+            self.txn = None
+
+    def _bump_reason(self, reason) -> None:
+        if reason is not None:
+            k = getattr(reason, "value", str(reason))
+            self.m.by_abort_reason[k] = self.m.by_abort_reason.get(k, 0) + 1
+
+
+class _OlapClientSingle:
+    """OLAP client against the unified (single-node) architecture."""
+
+    def __init__(self, htap: SingleNodeHTAP, rng, sc: Scale, m: Metrics):
+        self.htap, self.rng, self.sc, self.m = htap, rng, sc, m
+        self.txn = None
+        self.gen = None
+        self.pending = None
+        self.deferred: Optional[dict] = None  # SafeSnapshots wait state
+
+    def step(self) -> None:
+        eng = self.htap.engine
+        if self.txn is None:
+            if self.htap.olap_mode == "ssi+safesnapshots":
+                self._step_deferred(eng)
+                return
+            self.txn = self.htap.olap_begin()
+            self.gen, _ = olap_query(self.rng, self.sc)
+            self.pending = None
+            return
+        if self.txn.status == Status.ABORTED:
+            self.m.olap_aborts += 1
+            self.txn = None
+            return
+        try:
+            step = self.gen.send(self.pending)
+            self.pending = None
+        except StopIteration:
+            try:
+                eng.commit(self.txn)
+                self.m.olap_commits += 1
+            except SerializationFailure:
+                self.m.olap_aborts += 1
+            self.txn = None
+            return
+        try:
+            if step[0] == "r":
+                self.pending = eng.read(self.txn, step[1])
+        except SerializationFailure:
+            self.m.olap_aborts += 1
+            self.txn = None
+
+    def _step_deferred(self, eng) -> None:
+        """Ports & Grittner deferrable protocol: take a snapshot, wait for the
+        read/write transactions concurrent with it; retry if any committed
+        with an outgoing rw-conflict (unsafe); else run on that snapshot."""
+        if self.deferred is None:
+            watch = {tid for tid, t in eng.active.items() if not t.read_only}
+            self.deferred = {"seq": eng.seq, "watch": watch}
+            self.m.olap_wait_rounds += 1
+            return
+        watch = self.deferred["watch"]
+        live = [tid for tid in watch if tid in eng.active]
+        if live:
+            self.m.olap_wait_rounds += 1
+            return
+        unsafe = any(t.out_rw for tid in watch
+                     if (t := eng.txns.get(tid)) is not None
+                     and t.status == Status.COMMITTED)
+        if unsafe:
+            self.deferred = None          # retry with a fresh snapshot
+            self.m.olap_wait_rounds += 1
+            return
+        self.txn = eng.begin(read_only=True, skip_siread=True,
+                             snapshot_seq=self.deferred["seq"])
+        self.gen, _ = olap_query(self.rng, self.sc)
+        self.pending = None
+        self.deferred = None
+
+
+class _OlapClientMulti:
+    """OLAP client against the log-shipping replica."""
+
+    def __init__(self, htap: MultiNodeHTAP, rng, sc: Scale, m: Metrics):
+        self.htap, self.rng, self.sc, self.m = htap, rng, sc, m
+        self.snap = None
+        self.gen = None
+        self.pending = None
+
+    def step(self) -> None:
+        if self.snap is None:
+            self.snap = self.htap.olap_snapshot()
+            self.gen, _ = olap_query(self.rng, self.sc)
+            self.pending = None
+            return
+        try:
+            step = self.gen.send(self.pending)
+            self.pending = None
+        except StopIteration:
+            self.m.olap_commits += 1
+            self.snap = None
+            return
+        if step[0] == "r":
+            self.pending = self.htap.olap_read(self.snap, step[1])
+
+
+def run_single_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
+                    rounds: int = 20_000, seed: int = 0,
+                    scale: Scale = Scale(),
+                    rss_refresh_every: int = 50) -> Metrics:
+    htap = SingleNodeHTAP(olap_mode)
+    load_initial(htap.engine, scale)
+    m = Metrics()
+    rng = random.Random(seed)
+    clients = [_OltpClient(htap.engine, random.Random(rng.random()), scale, m)
+               for _ in range(oltp_clients)]
+    clients += [_OlapClientSingle(htap, random.Random(rng.random()), scale, m)
+                for _ in range(olap_clients)]
+    if olap_mode == "ssi+rss":
+        htap.refresh_rss()
+    for rnd in range(rounds):
+        m.rounds = rnd + 1
+        if olap_mode == "ssi+rss" and rnd % rss_refresh_every == 0:
+            htap.refresh_rss()   # RSS construction invoker (fixed interval)
+        for cl in clients:
+            cl.step()
+    return m
+
+
+def run_multi_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
+                   rounds: int = 20_000, seed: int = 0,
+                   scale: Scale = Scale(),
+                   ship_every: int = 25) -> Metrics:
+    htap = MultiNodeHTAP(olap_mode)
+    load_initial(htap.primary, scale)
+    htap.ship_log()
+    m = Metrics()
+    rng = random.Random(seed)
+    clients = [_OltpClient(htap.primary, random.Random(rng.random()), scale, m)
+               for _ in range(oltp_clients)]
+    clients += [_OlapClientMulti(htap, random.Random(rng.random()), scale, m)
+                for _ in range(olap_clients)]
+    for rnd in range(rounds):
+        m.rounds = rnd + 1
+        if rnd % ship_every == 0:
+            htap.ship_log()      # asynchronous streaming replication
+        for cl in clients:
+            cl.step()
+    return m

@@ -1,0 +1,311 @@
+"""Transactional engine: SI / SSI execution with RSS and SafeSnapshots modes.
+
+This is the executable counterpart of `repro.core`: a single-node MVCC engine
+whose accepted histories satisfy the specification-level checks (asserted by
+property tests).  It implements:
+
+  * SI        — snapshot reads (SI-V) + first-committer-wins (SI-W)
+  * SSI       — SI + SIRead-lock rw-antidependency tracking + dangerous-
+                structure aborts (conservative, PostgreSQL-style pivot abort)
+  * SafeSnapshots — READ ONLY DEFERRABLE readers: reader-WAITS until no
+                read/write transaction is active, then reads snapshot without
+                SSI validation (Ports & Grittner)
+  * RSS       — protected read-only transactions read the newest version
+                whose writer is inside the constructed RSS: wait-free,
+                abort-free, no SIRead locks (the paper's contribution)
+
+The engine emits the WAL records of Sec 5.1 (begin/commit/abort + outgoing
+concurrent-rw "deps" logical messages, and the committed writeset for
+log-shipping replication).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, Iterable, Optional
+
+from ..core.history import History, b as op_b, r as op_r, w as op_w, \
+    c as op_c, a as op_a
+from ..core.replica import RssSnapshot
+from ..core.wal import Wal, WalRecord
+from .store import Store, Version
+
+
+class Status(Enum):
+    ACTIVE = 0
+    COMMITTED = 1
+    ABORTED = 2
+
+
+class AbortReason(Enum):
+    WW_CONFLICT = "first-committer-wins"
+    PIVOT = "dangerous-structure pivot"
+    INCOMING_PIVOT = "dangerous-structure (in-edge to committed pivot)"
+    USER = "user abort"
+
+
+class SerializationFailure(Exception):
+    def __init__(self, reason: AbortReason):
+        super().__init__(reason.value)
+        self.reason = reason
+
+
+@dataclass
+class Txn:
+    tid: int
+    begin_seq: int              # logical clock at begin (snapshot horizon)
+    read_only: bool = False
+    rss: Optional[RssSnapshot] = None        # protected reader snapshot
+    skip_siread: bool = False   # safe-snapshot / RSS readers skip SSI locks
+    status: Status = Status.ACTIVE
+    end_seq: int = 0
+    reads: dict[str, int] = field(default_factory=dict)   # key -> writer seen
+    writes: dict[str, Any] = field(default_factory=dict)  # buffered writeset
+    in_rw: set[int] = field(default_factory=set)          # readers -> self
+    out_rw: set[int] = field(default_factory=set)         # self -> writers
+    abort_reason: Optional[AbortReason] = None
+
+    @property
+    def is_pivot(self) -> bool:
+        return bool(self.in_rw) and bool(self.out_rw)
+
+
+class Engine:
+    """mode: 'si' or 'ssi'.  SafeSnapshots/RSS are per-transaction options."""
+
+    def __init__(self, mode: str = "ssi", *, record: bool = False) -> None:
+        assert mode in ("si", "ssi")
+        self.mode = mode
+        self.store = Store()
+        self.wal = Wal()
+        # optional Adya-history recorder for specification-level checks
+        self.history: Optional[History] = History() if record else None
+        self.clock = itertools.count(1)
+        self.seq = 0                       # last assigned sequence number
+        self.txns: dict[int, Txn] = {}     # all known txns (GC'd)
+        self.active: dict[int, Txn] = {}
+        self._next_tid = itertools.count(1)
+        # SIRead "locks": key -> list of reader txn ids (kept past commit
+        # while concurrency with future writers is possible)
+        self.siread: dict[str, set[int]] = {}
+        self.stats = {"commits": 0, "aborts": 0, "writer_aborts": 0,
+                      "reader_aborts": 0, "ww_aborts": 0, "gc_versions": 0}
+
+    # -------------------------------------------------------------- lifecycle
+    def _tick(self) -> int:
+        self.seq = next(self.clock)
+        return self.seq
+
+    def begin(self, *, read_only: bool = False,
+              rss: Optional[RssSnapshot] = None,
+              skip_siread: bool = False,
+              snapshot_seq: Optional[int] = None) -> Txn:
+        """snapshot_seq: pin visibility to an older snapshot (deferrable
+        readers resuming a previously-taken safe snapshot)."""
+        t = Txn(tid=next(self._next_tid),
+                begin_seq=self.seq if snapshot_seq is None else snapshot_seq,
+                read_only=read_only, rss=rss,
+                skip_siread=skip_siread or rss is not None)
+        self._tick()
+        self.txns[t.tid] = t
+        self.active[t.tid] = t
+        self.wal.log_begin(t.tid)
+        if self.history is not None:
+            self.history.append(op_b(t.tid))
+        return t
+
+    def safe_snapshot_ready(self) -> bool:
+        """Deferrable-reader condition: no active read/write transaction."""
+        return all(t.read_only for t in self.active.values())
+
+    def begin_deferred(self) -> Optional[Txn]:
+        """SafeSnapshots mode: returns a transaction only when the snapshot is
+        safe; callers must retry (reader-wait) otherwise."""
+        if not self.safe_snapshot_ready():
+            return None
+        return self.begin(read_only=True, skip_siread=True)
+
+    def _check_active(self, t: Txn) -> None:
+        """PostgreSQL-style: touching a transaction the SSI detector has
+        already aborted surfaces the serialization failure to the client."""
+        if t.status == Status.ABORTED:
+            raise SerializationFailure(t.abort_reason or AbortReason.PIVOT)
+        assert t.status == Status.ACTIVE, "transaction already committed"
+
+    # ------------------------------------------------------------------ reads
+    def read(self, t: Txn, key: str) -> Any:
+        self._check_active(t)
+        if key in t.writes:                       # read-your-own-writes
+            return t.writes[key]
+        ch = self.store.chain(key)
+        if t.rss is not None:                     # protected (RSS) read
+            v = ch.visible_in(t.rss.visible)
+        else:                                     # SI-V
+            v = ch.visible_at(t.begin_seq)
+        t.reads[key] = v.writer
+        if self.history is not None:
+            self.history.append(op_r(t.tid, key, v.writer))
+        if self.mode == "ssi" and not t.skip_siread:
+            self.siread.setdefault(key, set()).add(t.tid)
+            # reading an old version while *committed* newer versions exist
+            # creates an out-going rw edge to EVERY skipped writer still
+            # concurrent with us (PostgreSQL's CheckForSerializableConflictOut
+            # fires per skipped tuple version during the scan).
+            for ver in ch.versions:
+                if ver.commit_seq > t.begin_seq:
+                    self._add_rw_edge(t, self.txns.get(ver.writer))
+            # ... and so is reading a key an in-progress transaction has an
+            # uncommitted write for (the invisible-tuple case).
+            for u in list(self.active.values()):
+                if u.tid != t.tid and key in u.writes:
+                    self._add_rw_edge(t, u)
+        return v.value
+
+    # ----------------------------------------------------------------- writes
+    def write(self, t: Txn, key: str, value: Any) -> None:
+        self._check_active(t)
+        assert not t.read_only
+        assert t.rss is None, "protected read-only transactions cannot write"
+        if self.history is not None and key not in t.writes:
+            self.history.append(op_w(t.tid, key))
+        t.writes[key] = value
+        if self.mode == "ssi":
+            # writing over a version some concurrent/overlapping reader read:
+            # reader -> self rw edge (SIRead check).
+            for rid in self.siread.get(key, ()):
+                reader = self.txns.get(rid)
+                if reader is not None and rid != t.tid:
+                    self._add_rw_edge(reader, t)
+
+    # ----------------------------------------------------------------- commit
+    def commit(self, t: Txn) -> None:
+        self._check_active(t)
+        try:
+            if t.writes:
+                # SI-W first-committer-wins: a version committed after our
+                # snapshot on any written key aborts us.
+                for key in t.writes:
+                    if self.store.chain(key).newest().commit_seq > t.begin_seq:
+                        raise SerializationFailure(AbortReason.WW_CONFLICT)
+            if self.mode == "ssi" and not t.skip_siread:
+                self._precommit_ssi_check(t)
+        except SerializationFailure as e:
+            self._abort(t, e.reason)
+            raise
+        cseq = self._tick()
+        for key, value in t.writes.items():
+            self.store.chain(key).install(cseq, t.tid, value)
+        t.status, t.end_seq = Status.COMMITTED, cseq
+        self.active.pop(t.tid, None)
+        self.wal.log_commit(t.tid, sorted(t.writes.items()))
+        if self.history is not None:
+            self.history.append(op_c(t.tid))
+        if t.out_rw:
+            # the paper's logical message: outgoing concurrent rw edges of a
+            # just-committed reader, for replica-side RSS construction.
+            self.wal.log_deps(t.tid, sorted(t.out_rw))
+        self.stats["commits"] += 1
+        self._gc()
+
+    def abort(self, t: Txn) -> None:
+        self._abort(t, AbortReason.USER)
+
+    def _abort(self, t: Txn, reason: AbortReason) -> None:
+        if t.status != Status.ACTIVE:
+            return
+        t.status, t.end_seq = Status.ABORTED, self._tick()
+        t.abort_reason = reason
+        t.writes.clear()
+        self.active.pop(t.tid, None)
+        self.wal.log_abort(t.tid)
+        if self.history is not None:
+            self.history.append(op_a(t.tid))
+        self.stats["aborts"] += 1
+        if reason == AbortReason.WW_CONFLICT:
+            self.stats["ww_aborts"] += 1
+        elif reason in (AbortReason.PIVOT, AbortReason.INCOMING_PIVOT):
+            if t.read_only:
+                self.stats["reader_aborts"] += 1
+            else:
+                self.stats["writer_aborts"] += 1
+        # drop edges referencing the aborted txn
+        for other in self.txns.values():
+            other.in_rw.discard(t.tid)
+            other.out_rw.discard(t.tid)
+
+    # --------------------------------------------------------------- SSI core
+    def _concurrent(self, a: Txn, b: Txn) -> bool:
+        if a.tid == b.tid:
+            return False
+        ea = a.end_seq if a.status != Status.ACTIVE else (1 << 62)
+        eb = b.end_seq if b.status != Status.ACTIVE else (1 << 62)
+        return a.begin_seq < eb and b.begin_seq < ea
+
+    def _add_rw_edge(self, reader: Optional[Txn], writer: Optional[Txn]) -> None:
+        if reader is None or writer is None or reader.tid == writer.tid:
+            return
+        if reader.status == Status.ABORTED or writer.status == Status.ABORTED:
+            return
+        if not self._concurrent(reader, writer):
+            return  # only *vulnerable* (concurrent) rw edges matter
+        reader.out_rw.add(writer.tid)
+        writer.in_rw.add(reader.tid)
+        self._maybe_abort_pivot(reader, writer)
+
+    def _maybe_abort_pivot(self, reader: Txn, writer: Txn) -> None:
+        """Dangerous structure: T_in -rw-> pivot -rw-> T_out.  Abort the pivot
+        when still active; else abort the active neighbour (PostgreSQL's
+        conservative strategy — never aborts an already-committed txn)."""
+        for cand in (writer, reader):
+            if cand.is_pivot:
+                if cand.status == Status.ACTIVE:
+                    self._abort(cand, AbortReason.PIVOT)
+                    return
+                # pivot already committed: abort an active neighbour
+                for nid in list(cand.in_rw) + list(cand.out_rw):
+                    n = self.txns.get(nid)
+                    if n is not None and n.status == Status.ACTIVE:
+                        self._abort(n, AbortReason.INCOMING_PIVOT)
+                        return
+
+    def _precommit_ssi_check(self, t: Txn) -> None:
+        if t.is_pivot and t.status == Status.ACTIVE:
+            raise SerializationFailure(AbortReason.PIVOT)
+
+    # --------------------------------------------------------------------- GC
+    def _gc(self) -> None:
+        """Forget ended txns (and their SIRead entries) that can no longer be
+        concurrent with any future transaction."""
+        horizon = min((t.begin_seq for t in self.active.values()),
+                      default=self.seq)
+        dead = [tid for tid, t in self.txns.items()
+                if t.status != Status.ACTIVE and t.end_seq < horizon
+                and not t.in_rw and not t.out_rw]
+        if not dead:
+            return
+        deadset = set(dead)
+        for tid in dead:
+            self.txns.pop(tid, None)
+        for key in list(self.siread):
+            self.siread[key] -= deadset
+            if not self.siread[key]:
+                del self.siread[key]
+
+    def prune_versions(self, floor_seq: int) -> int:
+        n = self.store.prune(floor_seq)
+        self.stats["gc_versions"] += n
+        return n
+
+    # ------------------------------------------------------------ convenience
+    def run(self, ops: Iterable[tuple], t: Txn) -> Any:
+        """Run ('r', key) / ('w', key, value) ops then commit. For tests."""
+        out = []
+        for op in ops:
+            if op[0] == "r":
+                out.append(self.read(t, op[1]))
+            else:
+                self.write(t, op[1], op[2])
+        self.commit(t)
+        return out

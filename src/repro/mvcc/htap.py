@@ -1,0 +1,138 @@
+"""HTAP system facades: the paper's two architectures × CC configurations.
+
+Single-node (unified storage, Sec 5.2):
+  * "ssi"                — OLAP readers are plain SSI transactions
+                           (reader-/writer-aborts possible)
+  * "ssi+safesnapshots"  — OLAP readers are READ ONLY DEFERRABLE
+                           (reader-WAIT until a safe snapshot exists)
+  * "ssi+rss"            — OLAP readers are PRoTs over the in-process RSS
+                           (wait-free, abort-free; the paper's system)
+
+Multi-node (decoupled storage, Sec 5.1): primary runs SSI; an asynchronous
+log-shipping replica applies committed writesets and serves OLAP:
+  * "ssi+si"   — replica readers use plain SI at the replication horizon
+                 (NOT serializable: read-only anomalies possible; baseline)
+  * "ssi+rss"  — replica-side RSSManager replays begin/commit/abort + deps
+                 records and serves RSS snapshots (serializable, wait-free)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional, Sequence
+
+from ..core.replica import PRoTManager, RSSManager, RssSnapshot
+from .engine import AbortReason, Engine, SerializationFailure, Status, Txn
+from .store import Store
+
+
+# --------------------------------------------------------------- single node
+class SingleNodeHTAP:
+    def __init__(self, olap_mode: str = "ssi+rss") -> None:
+        assert olap_mode in ("ssi", "ssi+safesnapshots", "ssi+rss")
+        self.olap_mode = olap_mode
+        self.engine = Engine("ssi")
+        self.rss_manager = RSSManager()
+        self.prot = PRoTManager(self.rss_manager)
+
+    # OLTP path -------------------------------------------------------------
+    def oltp_begin(self, *, read_only: bool = False) -> Txn:
+        return self.engine.begin(read_only=read_only)
+
+    # OLAP path -------------------------------------------------------------
+    def refresh_rss(self) -> RssSnapshot:
+        """RSS construction invoker: replay own WAL, rebuild RSS (Sec 5.2)."""
+        self.rss_manager.catch_up(self.engine.wal)
+        return self.rss_manager.construct()
+
+    def olap_begin(self) -> Optional[Txn]:
+        """Returns None when the reader must wait (SafeSnapshots only)."""
+        if self.olap_mode == "ssi":
+            return self.engine.begin(read_only=True)
+        if self.olap_mode == "ssi+safesnapshots":
+            return self.engine.begin_deferred()   # None => reader-wait
+        # ssi+rss: wait-free protected read over the freshest constructed RSS
+        _, snap = self.prot.acquire()
+        return self.engine.begin(read_only=True, rss=snap)
+
+    def olap_read(self, t: Txn, key: str) -> Any:
+        return self.engine.read(t, key)
+
+    def olap_commit(self, t: Txn) -> None:
+        self.engine.commit(t)
+
+
+# ---------------------------------------------------------------- multi node
+class Replica:
+    """Asynchronous log-shipping replica: applies committed writesets in LSN
+    order into its own store; optionally maintains an RSSManager from the
+    same stream (begin/commit/abort + deps records)."""
+
+    def __init__(self, *, with_rss: bool) -> None:
+        self.store = Store()
+        self.applied_lsn = 0
+        self.applied_seq = 0          # commit-seq horizon for SI readers
+        self._commit_seq = 0
+        self.with_rss = with_rss
+        self.rss_manager = RSSManager() if with_rss else None
+        self.prot = PRoTManager(self.rss_manager) if with_rss else None
+
+    def catch_up(self, primary: Engine, *, max_records: int = 0) -> int:
+        n = 0
+        for rec in primary.wal.tail(self.applied_lsn):
+            if max_records and n >= max_records:
+                break
+            self.applied_lsn = rec.lsn
+            if self.rss_manager is not None:
+                self.rss_manager.apply(rec)
+            if rec.type == "commit":
+                self._commit_seq += 1
+                for key, value in rec.writes:
+                    self.store.chain(key).install(self._commit_seq, rec.txn,
+                                                  value)
+                self.applied_seq = self._commit_seq
+            n += 1
+        if self.rss_manager is not None and n:
+            self.rss_manager.construct()
+        return n
+
+    # reader snapshots -------------------------------------------------------
+    def si_snapshot(self) -> int:
+        return self.applied_seq
+
+    def rss_snapshot(self) -> RssSnapshot:
+        assert self.prot is not None
+        _, snap = self.prot.acquire()
+        return snap
+
+    def read_si(self, snapshot_seq: int, key: str) -> Any:
+        return self.store.chain(key).visible_at(snapshot_seq).value
+
+    def read_rss(self, snap: RssSnapshot, key: str) -> Any:
+        return self.store.chain(key).visible_in(snap.visible).value
+
+
+class MultiNodeHTAP:
+    def __init__(self, olap_mode: str = "ssi+rss") -> None:
+        assert olap_mode in ("ssi+si", "ssi+rss")
+        self.olap_mode = olap_mode
+        self.primary = Engine("ssi")
+        self.replica = Replica(with_rss=(olap_mode == "ssi+rss"))
+
+    def oltp_begin(self, *, read_only: bool = False) -> Txn:
+        return self.primary.begin(read_only=read_only)
+
+    def ship_log(self, *, max_records: int = 0) -> int:
+        """One asynchronous replication round."""
+        return self.replica.catch_up(self.primary, max_records=max_records)
+
+    def olap_snapshot(self):
+        if self.olap_mode == "ssi+si":
+            return ("si", self.replica.si_snapshot())
+        return ("rss", self.replica.rss_snapshot())
+
+    def olap_read(self, snap, key: str) -> Any:
+        kind, s = snap
+        if kind == "si":
+            return self.replica.read_si(s, key)
+        return self.replica.read_rss(s, key)

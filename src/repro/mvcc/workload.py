@@ -1,0 +1,158 @@
+"""A miniature CH-BenCHmark: TPC-C-style writers + TPC-H-style analytics.
+
+Schema (flat keyspace):
+  warehouse:{w}              -> ytd balance
+  district:{w}:{d}           -> {"next_o_id": int, "ytd": int}
+  customer:{w}:{d}:{c}       -> balance
+  stock:{w}:{i}              -> quantity
+  order:{w}:{d}:{o}          -> {"items": [...], "total": int}
+
+OLTP transactions (the paper's writers): new_order, payment, order_status
+(read-only OLTP — runs under SSI, not RSS, per Sec 5.2).
+OLAP queries (scan-heavy, long-running): stock_level_scan, customer_balance,
+order_revenue — read sets of hundreds of keys, the shape that makes SSI
+writer-abort OLTP transactions (Fig. 5/7) and SafeSnapshots reader-wait.
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass
+from typing import Iterator
+
+
+@dataclass(frozen=True)
+class Scale:
+    warehouses: int = 4
+    districts: int = 4        # per warehouse
+    customers: int = 20       # per district
+    items: int = 50           # stock rows per warehouse
+
+    def all_stock_keys(self) -> list[str]:
+        return [f"stock:{w}:{i}" for w in range(self.warehouses)
+                for i in range(self.items)]
+
+    def all_customer_keys(self) -> list[str]:
+        return [f"customer:{w}:{d}:{c}" for w in range(self.warehouses)
+                for d in range(self.districts) for c in range(self.customers)]
+
+
+# Each yielded step is ('r', key) or ('w', key, update_fn) where update_fn
+# maps the read value to the written value;  or ('out', value) to emit a
+# result.  The driver executes steps against an engine transaction.
+Step = tuple
+
+
+def new_order(rng: random.Random, sc: Scale) -> Iterator[Step]:
+    w = rng.randrange(sc.warehouses)
+    d = rng.randrange(sc.districts)
+    dk = f"district:{w}:{d}"
+    dist = yield ("r", dk)
+    o_id = (dist or {"next_o_id": 0})["next_o_id"]
+    yield ("w", dk, {"next_o_id": o_id + 1, "ytd": (dist or {}).get("ytd", 0)})
+    n_items = rng.randint(5, 15)
+    total = 0
+    items = []
+    for _ in range(n_items):
+        i = rng.randrange(sc.items)
+        skey = f"stock:{w}:{i}"
+        qty = yield ("r", skey)
+        qty = qty if isinstance(qty, int) else 100
+        take = rng.randint(1, 10)
+        newq = qty - take if qty - take >= 10 else qty - take + 91
+        yield ("w", skey, newq)
+        total += take
+        items.append(i)
+    yield ("w", f"order:{w}:{d}:{o_id}", {"items": items, "total": total})
+
+
+def payment(rng: random.Random, sc: Scale) -> Iterator[Step]:
+    w = rng.randrange(sc.warehouses)
+    d = rng.randrange(sc.districts)
+    cu = rng.randrange(sc.customers)
+    amount = rng.randint(1, 5000)
+    wkey = f"warehouse:{w}"
+    bal = yield ("r", wkey)
+    yield ("w", wkey, (bal if isinstance(bal, int) else 0) + amount)
+    ckey = f"customer:{w}:{d}:{cu}"
+    cbal = yield ("r", ckey)
+    yield ("w", ckey, (cbal if isinstance(cbal, int) else 0) - amount)
+
+
+def order_status(rng: random.Random, sc: Scale) -> Iterator[Step]:
+    """Read-only OLTP transaction (stays under SSI per the paper Sec 5.2)."""
+    w = rng.randrange(sc.warehouses)
+    d = rng.randrange(sc.districts)
+    dist = yield ("r", f"district:{w}:{d}")
+    o_id = max(((dist or {"next_o_id": 1})["next_o_id"]) - 1, 0)
+    order = yield ("r", f"order:{w}:{d}:{o_id}")
+    yield ("out", order)
+
+
+OLTP_MIX = ((new_order, 0.45), (payment, 0.43), (order_status, 0.12))
+
+
+def oltp_transaction(rng: random.Random, sc: Scale):
+    x = rng.random()
+    acc = 0.0
+    for fn, p in OLTP_MIX:
+        acc += p
+        if x <= acc:
+            return fn(rng, sc), fn.__name__
+    return payment(rng, sc), "payment"
+
+
+# ----------------------------------------------------------------- OLAP side
+def stock_level_scan(rng: random.Random, sc: Scale) -> Iterator[Step]:
+    """CH Q-like: total stock below threshold across every warehouse."""
+    low = 0
+    for key in sc.all_stock_keys():
+        q = yield ("r", key)
+        if isinstance(q, int) and q < 50:
+            low += 1
+    yield ("out", low)
+
+
+def customer_balance(rng: random.Random, sc: Scale) -> Iterator[Step]:
+    total = 0
+    for key in sc.all_customer_keys():
+        v = yield ("r", key)
+        if isinstance(v, int):
+            total += v
+    yield ("out", total)
+
+
+def order_revenue(rng: random.Random, sc: Scale) -> Iterator[Step]:
+    """Scan districts then recent orders; aggregates revenue."""
+    rev = 0
+    for w in range(sc.warehouses):
+        for d in range(sc.districts):
+            dist = yield ("r", f"district:{w}:{d}")
+            hi = (dist or {"next_o_id": 0})["next_o_id"]
+            for o in range(max(hi - 5, 0), hi):
+                order = yield ("r", f"order:{w}:{d}:{o}")
+                if isinstance(order, dict):
+                    rev += order.get("total", 0)
+    yield ("out", rev)
+
+
+OLAP_QUERIES = (stock_level_scan, customer_balance, order_revenue)
+
+
+def olap_query(rng: random.Random, sc: Scale):
+    fn = OLAP_QUERIES[rng.randrange(len(OLAP_QUERIES))]
+    return fn(rng, sc), fn.__name__
+
+
+def load_initial(engine, sc: Scale) -> None:
+    """Initial data load (one big transaction)."""
+    t = engine.begin()
+    for w in range(sc.warehouses):
+        engine.write(t, f"warehouse:{w}", 0)
+        for d in range(sc.districts):
+            engine.write(t, f"district:{w}:{d}", {"next_o_id": 0, "ytd": 0})
+            for cu in range(sc.customers):
+                engine.write(t, f"customer:{w}:{d}:{cu}", 1000)
+        for i in range(sc.items):
+            engine.write(t, f"stock:{w}:{i}", 100)
+    engine.commit(t)

@@ -1,0 +1,2 @@
+from .engine import ServingEngine, GenerationResult
+__all__ = ["ServingEngine", "GenerationResult"]

@@ -1,0 +1,12 @@
+"""RSS-versioned tensor stores (the paper's technique at the ML boundary)."""
+
+from .versioned import VersionedParamStore
+from .paged import (init_store, visible_slots, snapshot_read_ref,
+                    visible_slots_members, snapshot_read_members,
+                    publish_page)
+
+__all__ = [
+    "VersionedParamStore",
+    "init_store", "visible_slots", "snapshot_read_ref",
+    "visible_slots_members", "snapshot_read_members", "publish_page",
+]

@@ -1,0 +1,87 @@
+"""Device-resident page-granular multiversion store (SI-V on TPU).
+
+Layout:
+  data [P, K, page_elems]   — K version slots per page, any dtype
+  ts   [P, K] int32         — commit timestamp per slot (0 = initial)
+
+Snapshot read (the paper's SI-V read protocol, vectorized): for each page,
+select the slot with the largest `ts <= watermark` and gather its payload.
+This is the memory-bound hot spot of wait-free snapshot reads over
+fine-grained state (embedding rows, adapter pages, KV pages) — implemented
+three ways:
+  * `visible_slots` + `snapshot_read_ref`: pure-jnp oracle,
+  * `repro.kernels.version_gather`: Pallas TPU kernel (same contract),
+  * `snapshot_read_members`: RSS-set membership variant (watermark set,
+    not prefix) — newest slot whose ts is in a sorted member-ts array.
+
+Writes go to the LRU slot (`publish_page`); GC floor = the minimum pinned
+watermark (hot_standby_feedback analogue), enforced by the caller.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def init_store(n_pages: int, n_slots: int, page_elems: int,
+               dtype=jnp.bfloat16, initial=None) -> dict:
+    data = jnp.zeros((n_pages, n_slots, page_elems), dtype)
+    if initial is not None:
+        data = data.at[:, 0, :].set(initial.astype(dtype))
+    ts = jnp.zeros((n_pages, n_slots), jnp.int32)
+    return {"data": data, "ts": ts}
+
+
+def visible_slots(ts: jax.Array, watermark: jax.Array) -> jax.Array:
+    """[P,K] ts, scalar watermark -> [P] slot index of newest visible
+    version (largest ts <= watermark; ties impossible, ts unique per page)."""
+    masked = jnp.where(ts <= watermark, ts, -1)
+    return jnp.argmax(masked, axis=-1).astype(jnp.int32)
+
+
+def snapshot_read_ref(store: dict, watermark: jax.Array) -> jax.Array:
+    """Pure-jnp SI-V gather: [P, page_elems] visible payloads."""
+    idx = visible_slots(store["ts"], watermark)
+    return jnp.take_along_axis(
+        store["data"], idx[:, None, None], axis=1)[:, 0]
+
+
+def visible_slots_members(ts: jax.Array, member_ts: jax.Array) -> jax.Array:
+    """RSS-set variant: member_ts is a sorted [M] array of commit timestamps
+    of transactions inside the RSS; a slot is visible iff its ts is 0
+    (initial) or a member.  Returns the newest visible slot per page."""
+    pos = jnp.searchsorted(member_ts, ts)
+    pos = jnp.clip(pos, 0, member_ts.shape[0] - 1)
+    is_member = (jnp.take(member_ts, pos) == ts) | (ts == 0)
+    masked = jnp.where(is_member, ts, -1)
+    return jnp.argmax(masked, axis=-1).astype(jnp.int32)
+
+
+def snapshot_read_members(store: dict, member_ts: jax.Array) -> jax.Array:
+    idx = visible_slots_members(store["ts"], member_ts)
+    return jnp.take_along_axis(
+        store["data"], idx[:, None, None], axis=1)[:, 0]
+
+
+def publish_page(store: dict, page: jax.Array, payload: jax.Array,
+                 commit_ts: jax.Array, *,
+                 gc_floor: jax.Array | int = 0) -> dict:
+    """Install a new version of one page into its oldest recyclable slot.
+
+    Slots with ts >= gc_floor that are the newest visible at gc_floor are
+    protected (a pinned reader may still need them); the oldest slot below
+    the floor is recycled.  With K slots and publishers outrunning readers by
+    at most K-1 versions this is wait-free."""
+    ts_row = store["ts"][page]                         # [K]
+    protected = visible_slots(ts_row[None], jnp.asarray(gc_floor))[0]
+    order = jnp.where(jnp.arange(ts_row.shape[0]) == protected,
+                      jnp.iinfo(jnp.int32).max, ts_row)
+    victim = jnp.argmin(order)
+    data = jax.lax.dynamic_update_index_in_dim(
+        store["data"][page], payload.astype(store["data"].dtype), victim, 0)
+    new_data = store["data"].at[page].set(data)
+    new_ts = store["ts"].at[page, victim].set(commit_ts.astype(jnp.int32))
+    return {"data": new_data, "ts": new_ts}

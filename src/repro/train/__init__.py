@@ -1,0 +1,3 @@
+from .step import make_train_step, init_state
+from .loop import Trainer, StragglerMonitor
+__all__ = ["make_train_step", "init_state", "Trainer", "StragglerMonitor"]

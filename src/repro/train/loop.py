@@ -1,0 +1,117 @@
+"""Host training loop: checkpoint/restart fault tolerance, straggler
+monitoring, and RSS publication (the OLTP side of the HTAP boundary).
+
+Every training step is a write transaction: the loop begins a txn, runs the
+jitted step, and publishes the new parameter version to the
+`VersionedParamStore` (which appends begin/commit records to the WAL that the
+serving pod replays).  Auxiliary writers (e.g. an embedding-tuning task in
+the examples) share the same WAL and may carry rw-dependency records —
+exactly the paper's Sec 5.1 "OLTP side collects dependencies".
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+
+from ..checkpoint import manager as ckpt
+from ..data.pipeline import SyntheticPipeline
+from ..models.config import ModelConfig
+from ..optim.adamw import AdamWConfig
+from ..tensorstore.versioned import VersionedParamStore
+from .step import init_state, make_train_step
+
+
+@dataclass
+class StragglerMonitor:
+    """EMA step-time tracker; flags steps slower than `factor`× the EMA.
+
+    On a real fleet the callback triggers mitigation (hot spare swap /
+    within-step timeout); here it records and reports."""
+    alpha: float = 0.1
+    factor: float = 3.0
+    ema: Optional[float] = None
+    flagged: list = field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        straggler = self.ema is not None and dt > self.factor * self.ema
+        self.ema = dt if self.ema is None else \
+            (1 - self.alpha) * self.ema + self.alpha * dt
+        if straggler:
+            self.flagged.append((step, dt))
+        return straggler
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, *, batch: int, seq_len: int,
+                 opt: Optional[AdamWConfig] = None, seed: int = 0,
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
+                 publish_every: int = 1,
+                 store: Optional[VersionedParamStore] = None):
+        self.cfg = cfg
+        self.opt_cfg = opt or AdamWConfig(moment_dtype=cfg.moment_dtype)
+        self.pipeline = SyntheticPipeline(cfg, batch=batch, seq_len=seq_len,
+                                          seed=seed)
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.publish_every = publish_every
+        self.store = store
+        self.monitor = StragglerMonitor()
+        self.step_fn = jax.jit(make_train_step(cfg, self.opt_cfg))
+        self.state = init_state(jax.random.PRNGKey(seed), cfg, self.opt_cfg)
+        self.metrics_log: list[dict] = []
+        if store is not None:
+            store.publish(self.state["params"])   # version 1 = init
+            store.refresh()
+
+    # ------------------------------------------------------------- recovery
+    def try_restore(self) -> bool:
+        if self.ckpt_dir is None:
+            return False
+        step = ckpt.latest_step(self.ckpt_dir)
+        if step is None:
+            return False
+        template = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.state)
+        self.state = ckpt.restore(self.ckpt_dir, template, step=step)
+        self.pipeline.restore_state({"step": int(self.state["step"])})
+        return True
+
+    # ----------------------------------------------------------------- train
+    def run(self, n_steps: int, *, inject_failure_at: Optional[int] = None
+            ) -> list[dict]:
+        done = 0
+        while done < n_steps:
+            try:
+                done = self._run_inner(done, n_steps, inject_failure_at)
+            except RuntimeError as e:
+                if "injected-failure" not in str(e):
+                    raise
+                # fault tolerance path: restore from latest checkpoint
+                restored = self.try_restore()
+                done = int(self.state["step"]) if restored else 0
+            finally:
+                inject_failure_at = None      # injections are one-shot
+        return self.metrics_log
+
+    def _run_inner(self, done: int, n_steps: int,
+                   inject_failure_at: Optional[int]) -> int:
+        for i in range(done, n_steps):
+            if inject_failure_at is not None and i == inject_failure_at:
+                raise RuntimeError("injected-failure")
+            t0 = time.perf_counter()
+            batch = self.pipeline.batch_at(i)
+            self.state, metrics = self.step_fn(self.state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            metrics.update(step=i, dt=dt,
+                           straggler=self.monitor.observe(i, dt))
+            self.metrics_log.append(metrics)
+            if self.store is not None and (i + 1) % self.publish_every == 0:
+                self.store.publish(self.state["params"])
+            if self.ckpt_dir and (i + 1) % self.ckpt_every == 0:
+                ckpt.save(self.state, i + 1, self.ckpt_dir)
+        return n_steps

@@ -1,0 +1,140 @@
+"""Core theory tests: the paper's own examples and definitions."""
+
+import pytest
+
+from repro.core import (History, T0, b, c, r, w, a, build_dsg, clear_set,
+                        construct_rss, dangerous_structures, done_set,
+                        find_cycle, is_rss, is_serializable, is_si_history,
+                        latest_versions_in, obscure_set, protected_read,
+                        read_only_anomaly_example, rss_violations,
+                        ssi_accepts, vulnerable_edges, with_protected_reader)
+
+
+class TestReadOnlyAnomaly:
+    """Section 3.3: the h_s example, verbatim."""
+
+    def test_hs_is_not_serializable(self):
+        h = read_only_anomaly_example()
+        assert not is_serializable(h)
+        cyc = find_cycle(h)
+        assert cyc is not None and set(cyc) == {1, 2, 3}
+
+    def test_hs_without_t3_is_serializable(self):
+        # "the history over T1 and T2 is serializable under SI"
+        h = read_only_anomaly_example().without_txn(3)
+        assert is_serializable(h)
+        assert ssi_accepts(h)
+
+    def test_hs_is_si(self):
+        # SI accepts h_s — that's the anomaly
+        assert is_si_history(read_only_anomaly_example())
+
+    def test_hs_has_dangerous_structure(self):
+        # T3 -rw-> T2 -rw-> T1 (paper: "would be aborted under SSI")
+        ds = dangerous_structures(read_only_anomaly_example())
+        assert (3, 2, 1) in ds
+
+    def test_vulnerable_edges(self):
+        vul = {(v.src, v.dst) for v in
+               vulnerable_edges(read_only_anomaly_example())}
+        assert vul == {(2, 1), (3, 2)}
+
+    def test_previous_version_read_avoids_anomaly(self):
+        """Section 3.3: 'if the read protocol of T3 chooses the previous
+        version Y_0, the scheduler cannot have led to the read-only
+        anomaly'."""
+        h = read_only_anomaly_example().without_txn(3)
+        h2 = History(h.ops)
+        h2.extend([b(3), r(3, "X", T0), r(3, "Y", T0), c(3)])
+        assert is_serializable(h2)
+
+
+class TestDefinitions:
+    def test_clear_done_obscure(self):
+        h = History([b(1), w(1, "x"), c(1),          # ends before T2 begins
+                     b(2), w(2, "y"),                # active
+                     b(3), w(3, "z"), c(3)])         # concurrent with T2
+        assert done_set(h) == {1, 3}
+        assert clear_set(h) == {1}
+        assert obscure_set(h) == {3}
+
+    def test_clear_requires_end_before_every_active_begin(self):
+        h = History([b(2), b(1), w(1, "x"), c(1)])   # T1 concurrent w/ T2
+        assert clear_set(h) == set()
+
+    def test_rss_definition_4_1(self):
+        # T1 -> T2 (wr): {T2} is not an RSS ({T1} reaches in); {T1} is.
+        h = History([b(1), w(1, "x"), c(1), b(2), r(2, "x", 1), w(2, "y"),
+                     c(2)])
+        assert is_rss(h, {1})
+        assert is_rss(h, {1, 2})
+        assert not is_rss(h, {2})
+        assert rss_violations(h, {2}) == [(1, 2)]
+
+    def test_latest_versions_in(self):
+        h = History([b(1), w(1, "x"), c(1), b(2), w(2, "x"), c(2)])
+        assert latest_versions_in(h, {1})["x"] == 1
+        assert latest_versions_in(h, {1, 2})["x"] == 2
+        assert latest_versions_in(h, set())["x"] == T0
+
+
+class TestAlgorithm1:
+    def test_clear_plus_incoming_edges(self):
+        """Algorithm 1 step (3): a committed txn OUTSIDE Clear joins RSS via
+        a direct (vulnerable rw) edge into a Clear member."""
+        # T1 ends before T3 begins -> T1 is Clear.  T2 (concurrent with the
+        # still-active T3) commits with T2 -rw-> T1 (it read x_T0, T1 wrote
+        # the next version).  T2 is Obscure but joins RSS through the edge.
+        h = History([
+            b(2), r(2, "x", T0),
+            b(1), w(1, "x"), c(1),
+            b(3), w(3, "q"),           # active: horizon = Begin(3)
+            c(2),
+        ])
+        assert clear_set(h) == {1}
+        assert obscure_set(h) == {2}
+        assert construct_rss(h) == {1, 2}
+        # and the result is a valid RSS w.r.t. Definition 4.1
+        assert is_rss(h, construct_rss(h))
+
+    def test_rss_grows_to_clear_when_quiescent(self):
+        h = History([b(1), w(1, "x"), c(1), b(2), r(2, "x", 1), c(2)])
+        assert clear_set(h) == {1, 2}
+        assert construct_rss(h) == {1, 2}
+
+    def test_theorem_4_4_prot_keeps_serializability(self):
+        h = read_only_anomaly_example().without_txn(3)
+        for n in range(len(h.ops) + 1):
+            p = h.prefix(n)
+            P = construct_rss(p)
+            h2 = with_protected_reader(h, P, ["X", "Y"], txn_id=50)
+            assert is_serializable(h2), (n, P)
+
+    def test_aborted_txns_never_join_rss(self):
+        h = History([b(1), w(1, "x"), a(1), b(2), w(2, "y"), c(2)])
+        assert 1 not in construct_rss(h)
+        assert construct_rss(h) == {2}
+
+
+class TestSafeSnapshots:
+    """Ports & Grittner baseline semantics (the cost RSS removes)."""
+
+    def test_unsafe_while_writer_active(self):
+        from repro.core import snapshot_is_safe, reader_wait
+        h = History([b(1), w(1, "x")])          # active writer
+        assert not snapshot_is_safe(h)
+        h.extend([c(1)])
+        assert snapshot_is_safe(h)
+
+    def test_reader_wait_measures_positions(self):
+        from repro.core import reader_wait
+        h = History([b(1), w(1, "x"), c(1), b(2), w(2, "y"), c(2)])
+        # requesting at position 1 (T1 active): must wait until C1 (pos 3)
+        assert reader_wait(h, 1) == 2
+        # requesting when quiescent: no wait
+        assert reader_wait(h, 3) == 0
+
+    def test_unbounded_wait_when_writers_never_drain(self):
+        from repro.core import earliest_safe_point
+        h = History([b(1), w(1, "x"), b(2), w(2, "y"), c(1)])  # T2 open
+        assert earliest_safe_point(h, 4) is None

@@ -1,0 +1,166 @@
+"""Engine-level CC semantics: SI-V/SI-W, SSI aborts, HTAP mode invariants."""
+
+import pytest
+
+from repro.core import is_serializable, dangerous_structures
+from repro.mvcc import (Engine, SerializationFailure, Status,
+                        SingleNodeHTAP, MultiNodeHTAP,
+                        run_single_node, run_multi_node)
+
+
+class TestSIBasics:
+    def test_snapshot_read_ignores_later_commits(self):
+        e = Engine("si")
+        t1 = e.begin()
+        e.write(t1, "x", 1)
+        e.commit(t1)
+        t2 = e.begin()            # snapshot includes x=1
+        t3 = e.begin()
+        e.write(t3, "x", 2)
+        e.commit(t3)
+        assert e.read(t2, "x") == 1      # SI-V: version at Begin(T2)
+        e.commit(t2)
+
+    def test_first_committer_wins(self):
+        e = Engine("si")
+        t1, t2 = e.begin(), e.begin()
+        e.write(t1, "x", 1)
+        e.write(t2, "x", 2)
+        e.commit(t1)
+        with pytest.raises(SerializationFailure):
+            e.commit(t2)
+        assert e.stats["ww_aborts"] == 1
+
+    def test_read_your_own_writes(self):
+        e = Engine("si")
+        t = e.begin()
+        e.write(t, "x", 42)
+        assert e.read(t, "x") == 42
+
+    def test_si_allows_write_skew(self):
+        """SI accepts write skew (non-serializable) — the baseline anomaly."""
+        e = Engine("si", record=True)
+        t1, t2 = e.begin(), e.begin()
+        e.read(t1, "a"), e.read(t1, "b")
+        e.read(t2, "a"), e.read(t2, "b")
+        e.write(t1, "a", 1)
+        e.write(t2, "b", 1)
+        e.commit(t1)
+        e.commit(t2)              # no abort under plain SI
+        assert not is_serializable(e.history)
+
+
+class TestSSI:
+    def test_ssi_aborts_write_skew(self):
+        e = Engine("ssi", record=True)
+        t1, t2 = e.begin(), e.begin()
+        e.read(t1, "a"), e.read(t1, "b")
+        e.read(t2, "a"), e.read(t2, "b")
+        e.write(t1, "a", 1)
+        e.write(t2, "b", 1)
+        aborted = (t1.status == Status.ABORTED or
+                   t2.status == Status.ABORTED)
+        if not aborted:
+            try:
+                e.commit(t1)
+                e.commit(t2)
+            except SerializationFailure:
+                aborted = True
+        assert aborted
+        assert is_serializable(e.history)
+
+    def test_read_only_anomaly_prevented(self):
+        """The paper's h_s under the engine: someone gets aborted, and the
+        committed history stays serializable."""
+        e = Engine("ssi", record=True)
+        t2 = e.begin()
+        e.read(t2, "X"), e.read(t2, "Y")
+        t1 = e.begin()
+        e.read(t1, "Y")
+        e.write(t1, "Y", 20)
+        e.commit(t1)
+        t3 = e.begin(read_only=True)
+        try:
+            e.read(t3, "X")
+            e.read(t3, "Y")
+            e.commit(t3)
+            e.write(t2, "X", -11)
+            e.commit(t2)
+        except SerializationFailure:
+            pass
+        assert e.stats["aborts"] >= 1 or is_serializable(e.history)
+        assert is_serializable(e.history)
+        assert not dangerous_structures(e.history)
+
+
+class TestRssMode:
+    def test_rss_reader_never_waits_or_aborts(self):
+        htap = SingleNodeHTAP("ssi+rss")
+        t = htap.oltp_begin()
+        htap.engine.write(t, "x", 1)
+        htap.engine.commit(t)
+        htap.refresh_rss()
+        # writer mid-flight while reader works: no interference either way
+        w = htap.oltp_begin()
+        htap.engine.write(w, "x", 2)
+        r = htap.olap_begin()
+        assert r is not None                  # wait-free
+        assert htap.olap_read(r, "x") == 1    # snapshot, not dirty
+        htap.olap_commit(r)                   # commit never fails
+        htap.engine.commit(w)
+        assert htap.engine.stats["reader_aborts"] == 0
+
+    def test_rss_reader_sees_consistent_prefix(self):
+        htap = SingleNodeHTAP("ssi+rss")
+        for i in range(5):
+            t = htap.oltp_begin()
+            htap.engine.write(t, "x", i)
+            htap.engine.write(t, "y", i)
+            htap.engine.commit(t)
+        htap.refresh_rss()
+        r = htap.olap_begin()
+        assert htap.olap_read(r, "x") == htap.olap_read(r, "y")
+        htap.olap_commit(r)
+
+
+class TestMultiNode:
+    def test_replica_lags_then_catches_up(self):
+        htap = MultiNodeHTAP("ssi+rss")
+        t = htap.oltp_begin()
+        htap.primary.write(t, "x", 7)
+        htap.primary.commit(t)
+        snap0 = htap.olap_snapshot()
+        assert htap.olap_read(snap0, "x") == 0     # not shipped yet
+        htap.ship_log()
+        snap1 = htap.olap_snapshot()
+        assert htap.olap_read(snap1, "x") == 7
+
+    def test_si_replica_vs_rss_replica_visibility(self):
+        for mode in ("ssi+si", "ssi+rss"):
+            htap = MultiNodeHTAP(mode)
+            t = htap.oltp_begin()
+            htap.primary.write(t, "k", 1)
+            htap.primary.commit(t)
+            htap.ship_log()
+            snap = htap.olap_snapshot()
+            assert htap.olap_read(snap, "k") == 1
+
+
+class TestDrivers:
+    def test_driver_modes_run_and_rss_is_wait_and_abort_free(self):
+        for mode in ("ssi", "ssi+safesnapshots", "ssi+rss"):
+            m = run_single_node(olap_mode=mode, oltp_clients=4,
+                                olap_clients=2, rounds=1500, seed=3)
+            assert m.oltp_commits > 0 and m.olap_commits > 0, mode
+            if mode == "ssi+rss":
+                assert m.olap_aborts == 0
+                assert m.olap_wait_rounds == 0
+            if mode == "ssi+safesnapshots":
+                assert m.olap_aborts == 0
+
+    def test_multinode_driver(self):
+        for mode in ("ssi+si", "ssi+rss"):
+            m = run_multi_node(olap_mode=mode, oltp_clients=4,
+                               olap_clients=2, rounds=1200, seed=3)
+            assert m.oltp_commits > 0 and m.olap_commits > 0
+            assert m.olap_aborts == 0

@@ -1,0 +1,116 @@
+"""Property-based validation of the paper's central claims.
+
+Strategy: drive random concurrent workloads through the executable SSI
+engine (which emits Adya histories), then check at EVERY prefix that
+Algorithm 1's RSS — constructed from only the information the WAL carries at
+that prefix — satisfies Definition 4.1 against the FINAL history's
+dependency graph (i.e. it is safe against all dependencies that appear
+later: the "prophetic" guarantee that makes reads wait-free), and that
+adding a PRoT reader keeps the history serializable (Theorem 4.4).
+"""
+
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (construct_rss, construct_rss_ssi, clear_set,
+                        is_rss, is_serializable, ssi_accepts,
+                        vulnerable_edges, with_protected_reader)
+from repro.mvcc import Engine, SerializationFailure, Status
+
+KEYS = ["a", "b", "c", "d", "e"]
+
+
+def run_random_workload(seed: int, n_clients: int = 4, n_rounds: int = 60,
+                        read_only_prob: float = 0.3):
+    """Interleaved random transactions through the SSI engine; returns the
+    engine (history recorded)."""
+    rng = random.Random(seed)
+    eng = Engine("ssi", record=True)
+    sessions = [None] * n_clients
+    for _ in range(n_rounds):
+        i = rng.randrange(n_clients)
+        t = sessions[i]
+        if t is None or t.status != Status.ACTIVE:
+            sessions[i] = eng.begin(read_only=rng.random() < read_only_prob)
+            continue
+        try:
+            act = rng.random()
+            if act < 0.4:
+                eng.read(t, rng.choice(KEYS))
+            elif act < 0.7 and not t.read_only:
+                eng.write(t, rng.choice(KEYS), rng.randrange(100))
+            else:
+                eng.commit(t)
+                sessions[i] = None
+        except SerializationFailure:
+            sessions[i] = None
+    for t in sessions:       # settle stragglers
+        if t is not None and t.status == Status.ACTIVE:
+            try:
+                eng.commit(t)
+            except SerializationFailure:
+                pass
+    return eng
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_ssi_engine_histories_are_serializable(seed):
+    eng = run_random_workload(seed)
+    h = eng.history
+    assert is_serializable(h), h
+    assert ssi_accepts(h), h
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_algorithm1_is_rss_against_the_future(seed):
+    """RSS built at any prefix (from prefix-local info only) must satisfy
+    Def 4.1 versus the FINAL dependency graph."""
+    eng = run_random_workload(seed)
+    h = eng.history
+    final_committed = h.committed
+    for n in range(0, len(h.ops) + 1, 3):
+        p = h.prefix(n)
+        P = construct_rss(p)
+        assert P <= final_committed
+        assert is_rss(h, P), (n, P)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), prefix_frac=st.floats(0.2, 1.0))
+def test_prot_reader_keeps_serializability(seed, prefix_frac):
+    """Theorem 4.4 end-to-end: a protected reader over Algorithm 1's RSS
+    never creates a cycle, at any construction point."""
+    eng = run_random_workload(seed)
+    h = eng.history
+    n = int(len(h.ops) * prefix_frac)
+    P = construct_rss(h.prefix(n))
+    h2 = with_protected_reader(h, P, KEYS, txn_id=9_999)
+    assert is_serializable(h2), (n, P)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_algorithm1_uses_only_wal_information(seed):
+    """construct_rss (from the history) must agree with construct_rss_ssi
+    fed only begin/commit events + concurrent-rw edges — what the WAL ships."""
+    eng = run_random_workload(seed)
+    h = eng.history
+    for n in range(0, len(h.ops) + 1, 5):
+        p = h.prefix(n)
+        edges = [(v.src, v.dst) for v in vulnerable_edges(p)]
+        P_wal = construct_rss_ssi(clear_set(p), p.committed, edges)
+        assert P_wal == construct_rss(p)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_rss_contains_clear(seed):
+    eng = run_random_workload(seed)
+    h = eng.history
+    for n in range(0, len(h.ops) + 1, 7):
+        p = h.prefix(n)
+        assert clear_set(p) <= construct_rss(p)
