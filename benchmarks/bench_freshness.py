@@ -1,9 +1,14 @@
-"""Beyond-paper: RSS freshness (staleness) characterization.
+"""Beyond-paper: RSS freshness (staleness) characterization + scan path.
 
 RSS trades freshness for wait-freedom: the watermark can only include
 versions whose writers are Clear (ended before every active txn began).
 We sweep writer concurrency and refresh interval and report the visible-
 version lag (LSNs) of the exported snapshot.
+
+`scan_path_report` measures the batched-scan OLAP path (one
+VersionStore.scan per ('scan', keys) step) against the per-key generator
+walk: olap commits per round and wall time, same seed/workload — the
+speedup record for BENCH_kernels.json.
 """
 
 from __future__ import annotations
@@ -11,7 +16,7 @@ from __future__ import annotations
 import random
 import time
 
-from repro.mvcc import SingleNodeHTAP
+from repro.mvcc import SingleNodeHTAP, run_single_node
 
 
 def freshness_sweep():
@@ -46,3 +51,24 @@ def freshness_sweep():
             rows.append((f"rss_freshness:w{n_writers}:r{refresh_every}",
                          us, f"avg_lag={avg:.1f}_commits"))
     return rows
+
+
+def scan_path_report(rounds: int = 2000, seed: int = 7) -> dict:
+    """Batched-scan vs per-key OLAP path on the single-node RSS system:
+    same seed, same workload, same round budget."""
+    out = {}
+    for mode, scan in (("per_key", False), ("scan", True)):
+        t0 = time.perf_counter()
+        m = run_single_node(olap_mode="ssi+rss", oltp_clients=4,
+                            olap_clients=2, rounds=rounds, seed=seed,
+                            olap_scan=scan)
+        out[mode] = {
+            "wall_s": round(time.perf_counter() - t0, 3),
+            "olap_commits": m.olap_commits,
+            "olap_qps_per_round": round(m.olap_qps(), 6),
+            "olap_scan_steps": m.olap_scan_steps,
+        }
+    per_key, scan = out["per_key"], out["scan"]
+    out["olap_throughput_speedup"] = round(
+        scan["olap_commits"] / max(per_key["olap_commits"], 1), 2)
+    return out

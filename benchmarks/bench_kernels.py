@@ -16,6 +16,18 @@ import jax.numpy as jnp
 HBM_BW = 819e9
 PEAK = 197e12
 
+# snapshot-read kernel bench shapes (shared by the timed benches and the
+# gather_kernels_report JSON so bytes-moved never drifts from the labels)
+GATHER_P, GATHER_K, GATHER_E = 4096, 4, 2048    # 64 MB bf16 payload
+RSS_M = 1024                                    # RSS members
+
+
+def _gather_bytes(members: int = 0) -> int:
+    """HBM traffic of one snapshot-read gather: stream data + ts (+ member
+    array) in, visible payloads out."""
+    return (GATHER_P * GATHER_K * GATHER_E * 2 + GATHER_P * GATHER_K * 4 +
+            members * 4 + GATHER_P * GATHER_E * 2)
+
 
 def _time(fn, *args, iters=5):
     fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
@@ -28,16 +40,34 @@ def _time(fn, *args, iters=5):
 
 def bench_version_gather():
     from repro.kernels.version_gather.ref import version_gather_ref
-    P, K, E = 4096, 4, 2048          # 64 MB bf16 payload
+    P, K, E = GATHER_P, GATHER_K, GATHER_E
     key = jax.random.PRNGKey(0)
     data = jax.random.normal(key, (P, K, E)).astype(jnp.bfloat16)
     ts = jax.random.randint(key, (P, K), 0, 1000)
     f = jax.jit(lambda d, t: version_gather_ref(d, t, jnp.int32(500)))
     us = _time(f, data, ts)
-    bytes_moved = data.size * 2 + ts.size * 4 + P * E * 2
+    bytes_moved = _gather_bytes()
     tpu_us = bytes_moved / HBM_BW * 1e6
     return [("version_gather_ref_cpu", us, f"P={P},K={K},E={E}"),
             ("version_gather_tpu_roofline", tpu_us,
+             f"{bytes_moved/1e6:.1f}MB @819GB/s")]
+
+
+def bench_rss_gather():
+    from repro.kernels.rss_gather.ref import rss_gather_ref
+    P, K, E, M = GATHER_P, GATHER_K, GATHER_E, RSS_M
+    key = jax.random.PRNGKey(1)
+    data = jax.random.normal(key, (P, K, E)).astype(jnp.bfloat16)
+    ts = jax.random.randint(key, (P, K), 0, 4096)
+    members = jnp.sort(jax.random.choice(
+        jax.random.fold_in(key, 1), 4096, (M,), replace=False)).astype(
+        jnp.int32)
+    f = jax.jit(lambda d, t, m: rss_gather_ref(d, t, m))
+    us = _time(f, data, ts, members)
+    bytes_moved = _gather_bytes(M)
+    tpu_us = bytes_moved / HBM_BW * 1e6
+    return [("rss_gather_ref_cpu", us, f"P={P},K={K},E={E},M={M}"),
+            ("rss_gather_tpu_roofline", tpu_us,
              f"{bytes_moved/1e6:.1f}MB @819GB/s")]
 
 
@@ -94,7 +124,27 @@ def bench_wkv():
 
 def all_benches():
     rows = []
-    for fn in (bench_version_gather, bench_flash_attention,
+    for fn in (bench_version_gather, bench_rss_gather, bench_flash_attention,
                bench_decode_attention, bench_wkv):
         rows.extend(fn())
     return rows
+
+
+def gather_kernels_report() -> dict:
+    """Measured CPU-ref GB/s + roofline GB/s for the two snapshot-read
+    kernels — the perf-trajectory record `benchmarks/run.py` persists to
+    BENCH_kernels.json."""
+    report = {}
+    for name, rows, nbytes in (
+            ("version_gather", bench_version_gather(), _gather_bytes()),
+            ("rss_gather", bench_rss_gather(), _gather_bytes(RSS_M))):
+        (_, cpu_us, shape), (_, tpu_us, _) = rows
+        report[name] = {
+            "shape": shape,
+            "bytes_moved_mb": round(nbytes / 1e6, 1),
+            "cpu_ref_us": round(cpu_us, 1),
+            "cpu_ref_gbps": round(nbytes / 1e9 / (cpu_us / 1e6), 2),
+            "tpu_roofline_us": round(tpu_us, 1),
+            "tpu_roofline_gbps": HBM_BW / 1e9,
+        }
+    return report

@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV rows covering:
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
@@ -43,14 +45,32 @@ def main() -> None:
         print(f"headline,0,{msg.replace(',', ';')}")
 
     # -------------------------------------------------------- freshness
-    from .bench_freshness import freshness_sweep
+    from .bench_freshness import freshness_sweep, scan_path_report
     for name, us, derived in freshness_sweep():
         print(f"{name},{us:.1f},{derived}")
 
+    # ------------------------------------------------ OLAP scan path
+    scan_report = scan_path_report()
+    for mode in ("per_key", "scan"):
+        r = scan_report[mode]
+        print(f"olap_path:{mode},{r['wall_s'] * 1e6:.0f},"
+              f"olap_commits={r['olap_commits']}")
+    print(f"olap_path:speedup,0,"
+          f"x{scan_report['olap_throughput_speedup']}_olap_commits")
+
     # ---------------------------------------------------------- kernels
-    from .bench_kernels import all_benches
+    from .bench_kernels import all_benches, gather_kernels_report
     for name, us, derived in all_benches():
         print(f"{name},{us:.1f},{derived}")
+
+    # persist the perf trajectory for future PRs
+    kernels_json = {"kernels": gather_kernels_report(),
+                    "olap_scan_path": scan_report}
+    out_path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_kernels.json")
+    with open(out_path, "w") as f:
+        json.dump(kernels_json, f, indent=2, sort_keys=True)
+    print(f"bench_kernels_json,0,{out_path}")
 
     # --------------------------------------------------------- roofline
     try:

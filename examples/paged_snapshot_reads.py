@@ -1,10 +1,17 @@
 """Page-granular snapshot reads: the SI-V read protocol on device, with the
-version_gather Pallas kernel (interpret mode on CPU).
+version_gather and rss_gather Pallas kernels (interpret mode on CPU).
 
-A writer task streams page updates (embedding rows / adapter pages) into a
-K-slot paged store while readers resolve consistent snapshots at different
-watermarks — including an RSS *member-set* read that skips a newer version
-whose writer is outside the RSS (the paper's previous-version read).
+Part 1: a writer task streams page updates (embedding rows / adapter pages)
+into a K-slot paged store while readers resolve consistent snapshots at
+different watermarks — including an RSS *member-set* read that skips a newer
+version whose writer is outside the RSS (the paper's previous-version read),
+served by the rss_gather kernel.
+
+Part 2: the same protocol end-to-end through the HTAP stack — an SSI engine
+runs transactions, its WAL is mirrored into the paged store
+(`tensorstore.mirror.PagedMirror`), an RSS snapshot is constructed from the
+same WAL, and the rss_gather kernel answers a batched membership scan over
+the mirrored pages that matches the engine's per-key protected reads.
 
     PYTHONPATH=src python examples/paged_snapshot_reads.py
 """
@@ -13,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.rss_gather.ops import snapshot_read_members as kernel_members
 from repro.kernels.version_gather.ops import snapshot_read
 from repro.tensorstore import (init_store, publish_page, snapshot_read_members,
                                snapshot_read_ref)
@@ -37,12 +45,72 @@ def main():
               f"page5={float(out[5,0]):.0f}  (kernel == oracle)")
 
     # RSS member-set read: ts=20's writer is NOT in the RSS (e.g. concurrent
-    # with an active txn) -> the reader sees the PREVIOUS version (ts=10)
+    # with an active txn) -> the reader sees the PREVIOUS version (ts=10);
+    # the rss_gather Pallas kernel and the jnp fallback agree.
     members = jnp.asarray([10, 30], jnp.int32)
-    out = snapshot_read_members(store, members)
+    out = kernel_members(store, members)             # Pallas rss_gather
+    ref = snapshot_read_members(store, members)      # jnp fallback
+    assert np.allclose(out, ref)
     print(f"RSS member read (members ts=10,30): page2="
           f"{float(out[2,0]):.0f} (skipped ts=20 non-member) "
-          f"page5={float(out[5,0]):.0f}")
+          f"page5={float(out[5,0]):.0f}  (rss_gather kernel == oracle)")
+
+    # an EMPTY RSS resolves every page to its initial version
+    out = kernel_members(store, jnp.zeros((0,), jnp.int32))
+    print(f"empty-RSS read: page2={float(out[2,0]):.0f} "
+          f"page5={float(out[5,0]):.0f}  (initial slots)")
+
+    mirrored_htap_demo()
+
+
+def mirrored_htap_demo():
+    """WAL -> paged mirror -> rss_gather: device-backed OLAP on live HTAP."""
+    from repro.core.replica import PRoTManager, RSSManager
+    from repro.mvcc import Engine
+    from repro.tensorstore import PagedMirror
+    from repro.tensorstore.mirror import decode_value
+
+    print("\n-- WAL-mirrored paged store (device-backed OLAP surface) --")
+    eng = Engine("ssi")
+    t = eng.begin()
+    for i in range(6):
+        eng.write(t, f"stock:0:{i}", 100)
+    eng.commit(t)
+    t1 = eng.begin(); eng.write(t1, "stock:0:0", 61); eng.commit(t1)
+    t2 = eng.begin()                                   # stays active ...
+    eng.write(t2, "stock:0:1", 7)
+    t3 = eng.begin(); eng.write(t3, "stock:0:2", 43); eng.commit(t3)
+    # ... so t3 is committed but NOT Clear: outside the RSS
+
+    rss = RSSManager()
+    prot = PRoTManager(rss)
+    rss.catch_up(eng.wal)
+    rss.construct()
+    mirror = PagedMirror()
+    mirror.catch_up(eng.wal, gc_floor=prot.gc_floor_seq())
+    _, snap = prot.acquire()
+    print(f"mirror: {mirror.n_pages} pages @ lsn {mirror.applied_lsn}, "
+          f"RSS members={sorted(snap.txns)} floor_seq={snap.floor_seq}")
+
+    keys = [f"stock:0:{i}" for i in range(6)]
+    # batched membership scan on the mirror (numpy fast path)
+    host = mirror.scan_members(keys, snap)
+    # commit-seq -> member-ts mapping: the RSSManager export and the
+    # mirror's own bookkeeping agree (both stamped from WAL commit seqs)
+    member_ts = rss.member_seqs(snap)
+    assert list(mirror.member_seqs_for(snap)) == member_ts
+    # the same scan through the rss_gather Pallas kernel on the exported store
+    out = np.asarray(kernel_members(mirror.jnp_store(),
+                                    jnp.asarray(member_ts, jnp.int32)))
+    dev = [decode_value(out[mirror.page_of[k]]) for k in keys]
+    # oracle: the engine's per-key protected reads
+    r = eng.begin(read_only=True, rss=snap)
+    oracle = [eng.read(r, k) for k in keys]
+    assert host == dev == oracle, (host, dev, oracle)
+    print(f"RSS scan over mirror: {host}")
+    print("  stock:0:0=61 (t1 in RSS), stock:0:2=100 (t3 committed but "
+          "concurrent with active t2 -> previous version)")
+    print("  mirror scan == rss_gather kernel == engine per-key reads")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,51 @@
+#!/usr/bin/env bash
+# Repo verification: tier-1 tests + interpret-mode kernel parity checks.
+#
+#   bash scripts/verify.sh          # tier-1 + kernel parity (fast-ish)
+#   bash scripts/verify.sh --bench  # also run the full benchmark suite
+#                                   # (writes BENCH_kernels.json)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo
+echo "== interpret-mode kernel parity (version_gather / rss_gather) =="
+python - <<'EOF'
+import numpy as np, jax, jax.numpy as jnp
+from repro.kernels.version_gather.kernel import version_gather
+from repro.kernels.version_gather.ref import version_gather_ref
+from repro.kernels.rss_gather.kernel import rss_gather
+from repro.kernels.rss_gather.ref import rss_gather_ref
+
+rng = np.random.default_rng(0)
+for P, K, E in [(16, 4, 256), (32, 3, 128)]:
+    data = jnp.asarray(rng.standard_normal((P, K, E)), jnp.float32)
+    ts = jnp.asarray(rng.integers(0, 50, (P, K)), jnp.int32)
+    for wm in (0, 13, 49):
+        np.testing.assert_array_equal(
+            np.asarray(version_gather(data, ts, wm)),
+            np.asarray(version_gather_ref(data, ts, wm)))
+    for M in (0, 5, 130):
+        mem = jnp.asarray(np.sort(rng.choice(np.arange(1, 50), size=min(M, 49),
+                                             replace=False)), jnp.int32)
+        np.testing.assert_array_equal(
+            np.asarray(rss_gather(data, ts, mem)),
+            np.asarray(rss_gather_ref(data, ts, mem)))
+print("kernel parity OK (version_gather, rss_gather; interpret mode)")
+EOF
+
+echo
+echo "== example: paged snapshot reads on the mirrored store =="
+python examples/paged_snapshot_reads.py > /dev/null && echo "example OK"
+
+if [[ "${1:-}" == "--bench" ]]; then
+    echo
+    echo "== benchmarks (writes BENCH_kernels.json) =="
+    python -m benchmarks.run
+fi
+
+echo
+echo "verify: all green"

@@ -26,9 +26,17 @@ from .wal import Wal, WalRecord
 
 @dataclass(frozen=True)
 class RssSnapshot:
-    """An immutable exported snapshot: the RSS transaction set at some LSN."""
+    """An immutable exported snapshot: the RSS transaction set at some LSN.
+
+    `floor_seq` is the snapshot's *prefix-safe* commit-seq horizon: the
+    largest commit seq h such that every transaction committed at seq <= h is
+    a member.  Pruning versions below h can never remove a version this
+    snapshot's membership read resolves to (any version in (s, h] overwriting
+    a member-visible version at seq s would itself be a member and newer) —
+    so h is the safe GC floor for a pinned reader."""
     lsn: int
     txns: frozenset[int]
+    floor_seq: int = 0
 
     def visible(self, writer_txn: int) -> bool:
         return writer_txn == 0 or writer_txn in self.txns
@@ -41,6 +49,11 @@ class RSSManager:
         self.ended: dict[int, int] = {}      # txn -> end lsn
         self.committed: set[int] = set()
         self.aborted: set[int] = set()
+        # commit bookkeeping, in LSN (== commit-seq) order: the shipped
+        # commit-seq of every committed txn, for the commit-seq -> member-ts
+        # mapping a device-resident mirror needs.
+        self.commit_seq: dict[int, int] = {}
+        self.commit_order: list[int] = []    # txn ids, commit-seq ascending
         # shipped outgoing concurrent rw edges: reader -> {writers}
         self.rw_out: dict[int, set[int]] = {}
         self._snapshot: RssSnapshot = RssSnapshot(0, frozenset())
@@ -56,6 +69,10 @@ class RSSManager:
             self.begun.setdefault(rec.txn, rec.lsn)
             self.ended[rec.txn] = rec.lsn
             self.committed.add(rec.txn)
+            # records without a shipped seq (legacy) get a local dense clock
+            seq = rec.seq if rec.seq else len(self.commit_order) + 1
+            self.commit_seq[rec.txn] = seq
+            self.commit_order.append(rec.txn)
         elif rec.type == "abort":
             self.begun.setdefault(rec.txn, rec.lsn)
             self.ended[rec.txn] = rec.lsn
@@ -94,12 +111,23 @@ class RSSManager:
         clear = self.clear()
         edges = [(u, w) for u, outs in self.rw_out.items() for w in outs]
         rss = construct_rss_ssi(clear, self.committed, edges)
-        self._snapshot = RssSnapshot(self.applied_lsn, frozenset(rss))
+        floor = 0
+        for t in self.commit_order:          # commit-seq ascending
+            if t not in rss:
+                break
+            floor = self.commit_seq[t]
+        self._snapshot = RssSnapshot(self.applied_lsn, frozenset(rss), floor)
         return self._snapshot
 
     @property
     def snapshot(self) -> RssSnapshot:
         return self._snapshot
+
+    def member_seqs(self, snap: RssSnapshot) -> list[int]:
+        """Sorted commit seqs of the snapshot's members — the member-ts array
+        a device-resident paged mirror feeds to `rss_gather`."""
+        return sorted(self.commit_seq[t] for t in snap.txns
+                      if t in self.commit_seq)
 
 
 class PRoTManager:
@@ -131,6 +159,20 @@ class PRoTManager:
         if not self._pins:
             return self.manager.snapshot.lsn
         return min(s.lsn for s in self._pins.values())
+
+    def gc_floor_seq(self) -> int:
+        """Version-GC floor in commit-seq units: the minimum prefix-safe
+        horizon over pinned snapshots.  `Store.prune(floor)` at this floor
+        preserves every version any pinned RSS reader can still resolve to
+        (prune only drops versions below the floor, and below the floor the
+        member-visible version IS the newest at-or-below it).  K-slot paged
+        stores (`publish_page(..., gc_floor=floor)`) give the weaker bounded
+        guarantee: the floor-visible slot is never recycled, but member
+        versions above the floor survive only while publishers outrun
+        readers by fewer than K-1 versions per page."""
+        if not self._pins:
+            return self.manager.snapshot.floor_seq
+        return min(s.floor_seq for s in self._pins.values())
 
     @property
     def pinned(self) -> int:

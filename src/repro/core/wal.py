@@ -32,6 +32,11 @@ class WalRecord:
     # for "commit": the committed writeset (key, value) — the data payload a
     # physical/logical replication stream ships to replicas.
     writes: tuple[tuple[str, object], ...] = ()
+    # for "commit": the primary's commit sequence number (the version
+    # timestamp installed into the store).  Lets replicas stamp mirrored
+    # versions with the SAME clock the RSS membership mapping uses (0 =
+    # unknown / legacy record; replicas then fall back to a local counter).
+    seq: int = 0
 
     def to_json(self) -> str:
         d = {"lsn": self.lsn, "type": self.type, "txn": self.txn}
@@ -39,6 +44,8 @@ class WalRecord:
             d["out_rw"] = list(self.out_rw)
         if self.writes:
             d["writes"] = [list(kv) for kv in self.writes]
+        if self.seq:
+            d["seq"] = self.seq
         return json.dumps(d, separators=(",", ":"))
 
     @staticmethod
@@ -46,7 +53,8 @@ class WalRecord:
         d = json.loads(s)
         return WalRecord(d["lsn"], d["type"], d["txn"],
                          tuple(d.get("out_rw", ())),
-                         tuple((k, v) for k, v in d.get("writes", ())))
+                         tuple((k, v) for k, v in d.get("writes", ())),
+                         d.get("seq", 0))
 
 
 class Wal:
@@ -65,9 +73,10 @@ class Wal:
 
     def _append(self, type: RecordType, txn: int,
                 out_rw: Sequence[int] = (),
-                writes: Sequence[tuple[str, object]] = ()) -> WalRecord:
+                writes: Sequence[tuple[str, object]] = (),
+                seq: int = 0) -> WalRecord:
         rec = WalRecord(len(self.records) + 1, type, txn, tuple(out_rw),
-                        tuple(writes))
+                        tuple(writes), seq)
         self.records.append(rec)
         return rec
 
@@ -75,8 +84,9 @@ class Wal:
         return self._append("begin", txn)
 
     def log_commit(self, txn: int,
-                   writes: Sequence[tuple[str, object]] = ()) -> WalRecord:
-        return self._append("commit", txn, writes=writes)
+                   writes: Sequence[tuple[str, object]] = (),
+                   seq: int = 0) -> WalRecord:
+        return self._append("commit", txn, writes=writes, seq=seq)
 
     def log_abort(self, txn: int) -> WalRecord:
         return self._append("abort", txn)

@@ -1,6 +1,7 @@
 """Pallas TPU kernels (validated in interpret mode on CPU).
 
 version_gather   — SI-V snapshot visibility gather (the paper's hot spot)
+rss_gather       — RSS set-membership visibility gather (previous-version read)
 flash_attention  — causal/SWA GQA prefill-train attention
 decode_attention — one-token GQA decode over ring caches
 wkv_scan         — RWKV6 data-dependent-decay recurrence

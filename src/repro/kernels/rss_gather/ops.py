@@ -1,0 +1,22 @@
+"""Public op: snapshot_read_members — Pallas kernel or jnp fallback."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import rss_gather
+from .ref import rss_gather_ref
+
+
+def snapshot_read_members(store: dict, member_ts, *, use_kernel: bool = True,
+                          interpret: bool = True) -> jax.Array:
+    """RSS membership read over a paged store {'data': [P,K,E], 'ts': [P,K]}.
+
+    member_ts is the sorted int32 array of member commit timestamps (the
+    commit-seq image of an exported `RssSnapshot`).  interpret=True (default)
+    runs the Pallas kernel in interpret mode so the same code path validates
+    on CPU; on TPU pass interpret=False."""
+    if not use_kernel:
+        return rss_gather_ref(store["data"], store["ts"], member_ts)
+    return rss_gather(store["data"], store["ts"], member_ts,
+                      interpret=interpret)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the rss_gather kernel (RSS membership read protocol)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rss_visible_slots_ref(ts: jax.Array, member_ts: jax.Array) -> jax.Array:
+    """ts [P,K] int32, member_ts sorted [M] int32 -> [P] slot index of the
+    newest slot whose ts is 0 (initial) or a member (ties: lowest slot).
+
+    M == 0 (empty RSS) resolves every page to its newest ts == 0 slot."""
+    if member_ts.shape[0] == 0:
+        is_member = ts == 0
+    else:
+        is_member = (ts == 0) | jnp.any(
+            ts[:, :, None] == member_ts[None, None, :], axis=-1)
+    masked = jnp.where(is_member, ts, -1)                   # [P,K]
+    best = jnp.max(masked, axis=1, keepdims=True)
+    onehot = masked == best
+    idx = jnp.arange(ts.shape[1], dtype=jnp.int32)[None, :]
+    return jnp.min(jnp.where(onehot, idx, ts.shape[1]), axis=1).astype(
+        jnp.int32)
+
+
+def rss_gather_ref(data: jax.Array, ts: jax.Array,
+                   member_ts: jax.Array) -> jax.Array:
+    """data [P,K,E], ts [P,K], sorted member_ts [M] -> [P,E]: payload of the
+    newest slot whose commit-ts is 0 or in the RSS member-ts set."""
+    first = rss_visible_slots_ref(ts, member_ts)
+    return jnp.take_along_axis(data, first[:, None, None], axis=1)[:, 0]

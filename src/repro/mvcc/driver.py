@@ -29,8 +29,10 @@ class Metrics:
     olap_commits: int = 0
     olap_aborts: int = 0
     olap_wait_rounds: int = 0
+    olap_scan_steps: int = 0     # batched ("scan", keys) steps served
     rounds: int = 0
     by_abort_reason: dict = field(default_factory=dict)
+    olap_outputs: list = field(default_factory=list)  # ("out", v) results
 
     def oltp_tps(self) -> float:
         return self.oltp_commits / max(self.rounds, 1)
@@ -104,8 +106,10 @@ class _OltpClient:
 class _OlapClientSingle:
     """OLAP client against the unified (single-node) architecture."""
 
-    def __init__(self, htap: SingleNodeHTAP, rng, sc: Scale, m: Metrics):
+    def __init__(self, htap: SingleNodeHTAP, rng, sc: Scale, m: Metrics,
+                 *, batched: bool = False):
         self.htap, self.rng, self.sc, self.m = htap, rng, sc, m
+        self.batched = batched
         self.txn = None
         self.gen = None
         self.pending = None
@@ -118,11 +122,13 @@ class _OlapClientSingle:
                 self._step_deferred(eng)
                 return
             self.txn = self.htap.olap_begin()
-            self.gen, _ = olap_query(self.rng, self.sc)
+            self.gen, _ = olap_query(self.rng, self.sc,
+                                     batched=self.batched)
             self.pending = None
             return
         if self.txn.status == Status.ABORTED:
             self.m.olap_aborts += 1
+            self.htap.olap_abandon(self.txn)
             self.txn = None
             return
         try:
@@ -130,7 +136,7 @@ class _OlapClientSingle:
             self.pending = None
         except StopIteration:
             try:
-                eng.commit(self.txn)
+                self.htap.olap_commit(self.txn)
                 self.m.olap_commits += 1
             except SerializationFailure:
                 self.m.olap_aborts += 1
@@ -139,6 +145,11 @@ class _OlapClientSingle:
         try:
             if step[0] == "r":
                 self.pending = eng.read(self.txn, step[1])
+            elif step[0] == "scan":
+                self.pending = self.htap.olap_scan(self.txn, step[1])
+                self.m.olap_scan_steps += 1
+            elif step[0] == "out":
+                self.m.olap_outputs.append(step[1])
         except SerializationFailure:
             self.m.olap_aborts += 1
             self.txn = None
@@ -166,7 +177,7 @@ class _OlapClientSingle:
             return
         self.txn = eng.begin(read_only=True, skip_siread=True,
                              snapshot_seq=self.deferred["seq"])
-        self.gen, _ = olap_query(self.rng, self.sc)
+        self.gen, _ = olap_query(self.rng, self.sc, batched=self.batched)
         self.pending = None
         self.deferred = None
 
@@ -174,8 +185,10 @@ class _OlapClientSingle:
 class _OlapClientMulti:
     """OLAP client against the log-shipping replica."""
 
-    def __init__(self, htap: MultiNodeHTAP, rng, sc: Scale, m: Metrics):
+    def __init__(self, htap: MultiNodeHTAP, rng, sc: Scale, m: Metrics,
+                 *, batched: bool = False):
         self.htap, self.rng, self.sc, self.m = htap, rng, sc, m
+        self.batched = batched
         self.snap = None
         self.gen = None
         self.pending = None
@@ -183,7 +196,8 @@ class _OlapClientMulti:
     def step(self) -> None:
         if self.snap is None:
             self.snap = self.htap.olap_snapshot()
-            self.gen, _ = olap_query(self.rng, self.sc)
+            self.gen, _ = olap_query(self.rng, self.sc,
+                                     batched=self.batched)
             self.pending = None
             return
         try:
@@ -191,23 +205,39 @@ class _OlapClientMulti:
             self.pending = None
         except StopIteration:
             self.m.olap_commits += 1
+            self.htap.olap_release(self.snap)
             self.snap = None
             return
         if step[0] == "r":
             self.pending = self.htap.olap_read(self.snap, step[1])
+        elif step[0] == "scan":
+            self.pending = self.htap.olap_scan(self.snap, step[1])
+            self.m.olap_scan_steps += 1
+        elif step[0] == "out":
+            self.m.olap_outputs.append(step[1])
 
 
 def run_single_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
                     rounds: int = 20_000, seed: int = 0,
                     scale: Scale = Scale(),
-                    rss_refresh_every: int = 50) -> Metrics:
-    htap = SingleNodeHTAP(olap_mode)
+                    rss_refresh_every: int = 50,
+                    olap_scan: bool = False,
+                    paged_olap: bool = False,
+                    check_scans: bool = False) -> Metrics:
+    """olap_scan=True routes OLAP queries through batched ("scan", keys)
+    steps served by one VersionStore.scan each; paged_olap=True additionally
+    serves protected readers from the WAL-mirrored paged store; and
+    check_scans=True asserts every batched scan equals the per-key engine
+    read path (the oracle)."""
+    htap = SingleNodeHTAP(olap_mode, paged=paged_olap,
+                          check_scans=check_scans)
     load_initial(htap.engine, scale)
     m = Metrics()
     rng = random.Random(seed)
     clients = [_OltpClient(htap.engine, random.Random(rng.random()), scale, m)
                for _ in range(oltp_clients)]
-    clients += [_OlapClientSingle(htap, random.Random(rng.random()), scale, m)
+    clients += [_OlapClientSingle(htap, random.Random(rng.random()), scale, m,
+                                  batched=olap_scan)
                 for _ in range(olap_clients)]
     if olap_mode == "ssi+rss":
         htap.refresh_rss()
@@ -223,15 +253,20 @@ def run_single_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
 def run_multi_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
                    rounds: int = 20_000, seed: int = 0,
                    scale: Scale = Scale(),
-                   ship_every: int = 25) -> Metrics:
-    htap = MultiNodeHTAP(olap_mode)
+                   ship_every: int = 25,
+                   olap_scan: bool = False,
+                   paged_olap: bool = False,
+                   check_scans: bool = False) -> Metrics:
+    htap = MultiNodeHTAP(olap_mode, paged_olap=paged_olap,
+                         check_scans=check_scans)
     load_initial(htap.primary, scale)
     htap.ship_log()
     m = Metrics()
     rng = random.Random(seed)
     clients = [_OltpClient(htap.primary, random.Random(rng.random()), scale, m)
                for _ in range(oltp_clients)]
-    clients += [_OlapClientMulti(htap, random.Random(rng.random()), scale, m)
+    clients += [_OlapClientMulti(htap, random.Random(rng.random()), scale, m,
+                                 batched=olap_scan)
                 for _ in range(olap_clients)]
     for rnd in range(rounds):
         m.rounds = rnd + 1

@@ -24,12 +24,13 @@ from __future__ import annotations
 import itertools
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import Any, Iterable, Optional
+from typing import Any, Iterable, Optional, Sequence
 
 from ..core.history import History, b as op_b, r as op_r, w as op_w, \
     c as op_c, a as op_a
 from ..core.replica import RssSnapshot
 from ..core.wal import Wal, WalRecord
+from ..tensorstore.version_store import ChainVersionStore, VersionStore
 from .store import Store, Version
 
 
@@ -79,6 +80,9 @@ class Engine:
         assert mode in ("si", "ssi")
         self.mode = mode
         self.store = Store()
+        # unified read surface over the chain store; HTAP facades may swap in
+        # a paged/mirrored VersionStore for the batched OLAP scan path
+        self.version_store: VersionStore = ChainVersionStore(self.store)
         self.wal = Wal()
         # optional Adya-history recorder for specification-level checks
         self.history: Optional[History] = History() if record else None
@@ -163,6 +167,27 @@ class Engine:
                     self._add_rw_edge(t, u)
         return v.value
 
+    # ------------------------------------------------------------------ scans
+    def scan(self, t: Txn, keys: Sequence[str]) -> list[Any]:
+        """Batched snapshot scan: resolve the whole key sequence in ONE
+        `VersionStore.scan` call instead of N per-key chain walks.
+
+        Only transactions outside SSI conflict tracking (RSS protected
+        readers, safe-snapshot readers, plain-SI transactions) take the
+        batched path — their reads are pure visibility resolution with no
+        SIRead side effects.  SSI-tracked transactions fall back to per-key
+        `read` so rw-antidependency detection observes every key."""
+        self._check_active(t)
+        if self.mode == "ssi" and not t.skip_siread:
+            return [self.read(t, k) for k in keys]
+        if t.rss is not None:
+            vals = self.version_store.scan_members(keys, t.rss)
+        else:
+            vals = self.version_store.scan_at(keys, t.begin_seq)
+        if t.writes:                              # read-your-own-writes
+            vals = [t.writes.get(k, v) for k, v in zip(keys, vals)]
+        return vals
+
     # ----------------------------------------------------------------- writes
     def write(self, t: Txn, key: str, value: Any) -> None:
         self._check_active(t)
@@ -199,7 +224,7 @@ class Engine:
             self.store.chain(key).install(cseq, t.tid, value)
         t.status, t.end_seq = Status.COMMITTED, cseq
         self.active.pop(t.tid, None)
-        self.wal.log_commit(t.tid, sorted(t.writes.items()))
+        self.wal.log_commit(t.tid, sorted(t.writes.items()), seq=cseq)
         if self.history is not None:
             self.history.append(op_c(t.tid))
         if t.out_rw:

@@ -14,6 +14,14 @@ log-shipping replica applies committed writesets and serves OLAP:
                  (NOT serializable: read-only anomalies possible; baseline)
   * "ssi+rss"  — replica-side RSSManager replays begin/commit/abort + deps
                  records and serves RSS snapshots (serializable, wait-free)
+
+Both facades serve OLAP *scans* through the unified `VersionStore` interface:
+one batched visibility resolution per key sequence instead of N per-key chain
+walks.  With `paged=True` they additionally mirror committed writesets into
+the device-resident K-slot paged store (`tensorstore.mirror.PagedMirror`) and
+serve RSS scans from it — the Pallas-kernel-shaped OLAP surface.  With
+`check_scans=True` every batched scan is asserted equal to the per-key engine
+read path (the oracle).
 """
 
 from __future__ import annotations
@@ -22,18 +30,29 @@ from dataclasses import dataclass, field
 from typing import Any, Optional, Sequence
 
 from ..core.replica import PRoTManager, RSSManager, RssSnapshot
+from ..tensorstore.mirror import PagedMirror
+from ..tensorstore.version_store import (ChainVersionStore, PagedVersionStore,
+                                         VersionStore)
 from .engine import AbortReason, Engine, SerializationFailure, Status, Txn
 from .store import Store
 
 
 # --------------------------------------------------------------- single node
 class SingleNodeHTAP:
-    def __init__(self, olap_mode: str = "ssi+rss") -> None:
+    def __init__(self, olap_mode: str = "ssi+rss", *, paged: bool = False,
+                 check_scans: bool = False) -> None:
         assert olap_mode in ("ssi", "ssi+safesnapshots", "ssi+rss")
         self.olap_mode = olap_mode
         self.engine = Engine("ssi")
         self.rss_manager = RSSManager()
         self.prot = PRoTManager(self.rss_manager)
+        self.check_scans = check_scans
+        # device-backed OLAP surface: WAL-mirrored paged store + kernel-shaped
+        # scans for protected readers
+        self.mirror: Optional[PagedMirror] = PagedMirror() if paged else None
+        self.paged_store: Optional[PagedVersionStore] = \
+            PagedVersionStore(self.mirror) if paged else None
+        self._pins: dict[int, int] = {}       # txn tid -> PRoT reader id
 
     # OLTP path -------------------------------------------------------------
     def oltp_begin(self, *, read_only: bool = False) -> Txn:
@@ -41,9 +60,15 @@ class SingleNodeHTAP:
 
     # OLAP path -------------------------------------------------------------
     def refresh_rss(self) -> RssSnapshot:
-        """RSS construction invoker: replay own WAL, rebuild RSS (Sec 5.2)."""
+        """RSS construction invoker: replay own WAL, rebuild RSS (Sec 5.2);
+        with a paged mirror, also advance the device store to the same LSN
+        under the pinned-reader GC floor."""
         self.rss_manager.catch_up(self.engine.wal)
-        return self.rss_manager.construct()
+        snap = self.rss_manager.construct()
+        if self.mirror is not None:
+            self.mirror.catch_up(self.engine.wal,
+                                 gc_floor=self.prot.gc_floor_seq())
+        return snap
 
     def olap_begin(self) -> Optional[Txn]:
         """Returns None when the reader must wait (SafeSnapshots only)."""
@@ -52,41 +77,94 @@ class SingleNodeHTAP:
         if self.olap_mode == "ssi+safesnapshots":
             return self.engine.begin_deferred()   # None => reader-wait
         # ssi+rss: wait-free protected read over the freshest constructed RSS
-        _, snap = self.prot.acquire()
-        return self.engine.begin(read_only=True, rss=snap)
+        rid, snap = self.prot.acquire()
+        t = self.engine.begin(read_only=True, rss=snap)
+        self._pins[t.tid] = rid
+        return t
 
     def olap_read(self, t: Txn, key: str) -> Any:
         return self.engine.read(t, key)
 
+    def olap_scan(self, t: Txn, keys: Sequence[str]) -> list[Any]:
+        """Batched OLAP scan: ONE VersionStore.scan for the key sequence.
+        Protected readers are served from the paged mirror when present."""
+        if self.paged_store is not None and t.rss is not None:
+            self.engine._check_active(t)
+            vals = self.paged_store.scan_members(keys, t.rss)
+        else:
+            vals = self.engine.scan(t, keys)
+        if self.check_scans:
+            oracle = [self.engine.read(t, k) for k in keys]
+            assert vals == oracle, (vals, oracle)
+        return vals
+
     def olap_commit(self, t: Txn) -> None:
-        self.engine.commit(t)
+        try:
+            self.engine.commit(t)
+        finally:
+            self._release(t)
+
+    def olap_abandon(self, t: Txn) -> None:
+        """Drop the PRoT pin of a finished/aborted OLAP transaction."""
+        self._release(t)
+
+    def _release(self, t: Txn) -> None:
+        rid = self._pins.pop(t.tid, None)
+        if rid is not None:
+            self.prot.release(rid)
+
+    # GC --------------------------------------------------------------------
+    def gc_versions(self) -> int:
+        """hot_standby_feedback loop: prune chain versions below the pinned
+        PRoT floor (never above an active transaction's snapshot)."""
+        floor = self.prot.gc_floor_seq()
+        active = min((t.begin_seq for t in self.engine.active.values()),
+                     default=self.engine.seq)
+        return self.engine.prune_versions(min(floor, active))
 
 
 # ---------------------------------------------------------------- multi node
 class Replica:
     """Asynchronous log-shipping replica: applies committed writesets in LSN
     order into its own store; optionally maintains an RSSManager from the
-    same stream (begin/commit/abort + deps records)."""
+    same stream (begin/commit/abort + deps records) and a device-resident
+    paged mirror serving batched kernel-shaped scans."""
 
-    def __init__(self, *, with_rss: bool) -> None:
+    def __init__(self, *, with_rss: bool, paged: bool = False,
+                 check_scans: bool = False) -> None:
         self.store = Store()
+        self.version_store: VersionStore = ChainVersionStore(self.store)
         self.applied_lsn = 0
         self.applied_seq = 0          # commit-seq horizon for SI readers
         self._commit_seq = 0
         self.with_rss = with_rss
+        self.check_scans = check_scans
         self.rss_manager = RSSManager() if with_rss else None
         self.prot = PRoTManager(self.rss_manager) if with_rss else None
+        self.mirror: Optional[PagedMirror] = PagedMirror() if paged else None
+        self.paged_store: Optional[PagedVersionStore] = \
+            PagedVersionStore(self.mirror) if paged else None
 
     def catch_up(self, primary: Engine, *, max_records: int = 0) -> int:
         n = 0
+        # GC floor for mirror publishes: pinned PRoT snapshots (RSS) or the
+        # pre-catch-up SI horizon.  Bounded, not absolute: an SI reader that
+        # holds its snapshot across multiple ship rounds (or an RSS member
+        # version above the prefix floor) is protected only while publishers
+        # stay < K-1 versions ahead per page — the K-slot staleness bound.
+        gc_floor = self.prot.gc_floor_seq() if self.prot is not None \
+            else self.applied_seq
         for rec in primary.wal.tail(self.applied_lsn):
             if max_records and n >= max_records:
                 break
             self.applied_lsn = rec.lsn
             if self.rss_manager is not None:
                 self.rss_manager.apply(rec)
+            if self.mirror is not None:
+                self.mirror.apply(rec, gc_floor=gc_floor)
             if rec.type == "commit":
-                self._commit_seq += 1
+                self._commit_seq = rec.seq if rec.seq else \
+                    self._commit_seq + 1
                 for key, value in rec.writes:
                     self.store.chain(key).install(self._commit_seq, rec.txn,
                                                   value)
@@ -100,24 +178,48 @@ class Replica:
     def si_snapshot(self) -> int:
         return self.applied_seq
 
-    def rss_snapshot(self) -> RssSnapshot:
+    def rss_snapshot(self) -> tuple[int, RssSnapshot]:
+        """Acquire (pin) the freshest exported snapshot; release the returned
+        reader id via `release(rid)` when the reader finishes."""
         assert self.prot is not None
-        _, snap = self.prot.acquire()
-        return snap
+        return self.prot.acquire()
+
+    def release(self, reader_id: int) -> None:
+        if self.prot is not None:
+            self.prot.release(reader_id)
 
     def read_si(self, snapshot_seq: int, key: str) -> Any:
-        return self.store.chain(key).visible_at(snapshot_seq).value
+        return self.version_store.read_at(key, snapshot_seq)
 
     def read_rss(self, snap: RssSnapshot, key: str) -> Any:
-        return self.store.chain(key).visible_in(snap.visible).value
+        return self.version_store.read_members(key, snap)
+
+    # batched scans ----------------------------------------------------------
+    def scan_si(self, snapshot_seq: int, keys: Sequence[str]) -> list[Any]:
+        store = self.paged_store or self.version_store
+        vals = store.scan_at(keys, snapshot_seq)
+        if self.check_scans:
+            oracle = [self.read_si(snapshot_seq, k) for k in keys]
+            assert vals == oracle, (vals, oracle)
+        return vals
+
+    def scan_rss(self, snap: RssSnapshot, keys: Sequence[str]) -> list[Any]:
+        store = self.paged_store or self.version_store
+        vals = store.scan_members(keys, snap)
+        if self.check_scans:
+            oracle = [self.read_rss(snap, k) for k in keys]
+            assert vals == oracle, (vals, oracle)
+        return vals
 
 
 class MultiNodeHTAP:
-    def __init__(self, olap_mode: str = "ssi+rss") -> None:
+    def __init__(self, olap_mode: str = "ssi+rss", *, paged_olap: bool = False,
+                 check_scans: bool = False) -> None:
         assert olap_mode in ("ssi+si", "ssi+rss")
         self.olap_mode = olap_mode
         self.primary = Engine("ssi")
-        self.replica = Replica(with_rss=(olap_mode == "ssi+rss"))
+        self.replica = Replica(with_rss=(olap_mode == "ssi+rss"),
+                               paged=paged_olap, check_scans=check_scans)
 
     def oltp_begin(self, *, read_only: bool = False) -> Txn:
         return self.primary.begin(read_only=read_only)
@@ -128,11 +230,23 @@ class MultiNodeHTAP:
 
     def olap_snapshot(self):
         if self.olap_mode == "ssi+si":
-            return ("si", self.replica.si_snapshot())
-        return ("rss", self.replica.rss_snapshot())
+            return ("si", 0, self.replica.si_snapshot())
+        rid, snap = self.replica.rss_snapshot()
+        return ("rss", rid, snap)
 
     def olap_read(self, snap, key: str) -> Any:
-        kind, s = snap
+        kind, _, s = snap
         if kind == "si":
             return self.replica.read_si(s, key)
         return self.replica.read_rss(s, key)
+
+    def olap_scan(self, snap, keys: Sequence[str]) -> list[Any]:
+        kind, _, s = snap
+        if kind == "si":
+            return self.replica.scan_si(s, keys)
+        return self.replica.scan_rss(s, keys)
+
+    def olap_release(self, snap) -> None:
+        kind, rid, _ = snap
+        if kind == "rss":
+            self.replica.release(rid)

@@ -38,8 +38,10 @@ class Scale:
 
 
 # Each yielded step is ('r', key) or ('w', key, update_fn) where update_fn
-# maps the read value to the written value;  or ('out', value) to emit a
-# result.  The driver executes steps against an engine transaction.
+# maps the read value to the written value;  ('scan', keys) to read a whole
+# key sequence in ONE batched VersionStore.scan (the generator receives the
+# list of values);  or ('out', value) to emit a result.  The driver executes
+# steps against an engine transaction.
 Step = tuple
 
 
@@ -103,28 +105,58 @@ def oltp_transaction(rng: random.Random, sc: Scale):
 
 
 # ----------------------------------------------------------------- OLAP side
-def stock_level_scan(rng: random.Random, sc: Scale) -> Iterator[Step]:
+# Every query has two execution shapes over the SAME read set: the per-key
+# generator walk (one engine.read per round — the oracle, and the shape that
+# keeps a query active for hundreds of rounds) and the batched shape
+# (('scan', keys) steps served by one VersionStore.scan each).
+def stock_level_scan(rng: random.Random, sc: Scale,
+                     batched: bool = False) -> Iterator[Step]:
     """CH Q-like: total stock below threshold across every warehouse."""
     low = 0
-    for key in sc.all_stock_keys():
-        q = yield ("r", key)
-        if isinstance(q, int) and q < 50:
-            low += 1
+    if batched:
+        vals = yield ("scan", sc.all_stock_keys())
+        low = sum(1 for q in vals if isinstance(q, int) and q < 50)
+    else:
+        for key in sc.all_stock_keys():
+            q = yield ("r", key)
+            if isinstance(q, int) and q < 50:
+                low += 1
     yield ("out", low)
 
 
-def customer_balance(rng: random.Random, sc: Scale) -> Iterator[Step]:
+def customer_balance(rng: random.Random, sc: Scale,
+                     batched: bool = False) -> Iterator[Step]:
     total = 0
-    for key in sc.all_customer_keys():
-        v = yield ("r", key)
-        if isinstance(v, int):
-            total += v
+    if batched:
+        vals = yield ("scan", sc.all_customer_keys())
+        total = sum(v for v in vals if isinstance(v, int))
+    else:
+        for key in sc.all_customer_keys():
+            v = yield ("r", key)
+            if isinstance(v, int):
+                total += v
     yield ("out", total)
 
 
-def order_revenue(rng: random.Random, sc: Scale) -> Iterator[Step]:
+def order_revenue(rng: random.Random, sc: Scale,
+                  batched: bool = False) -> Iterator[Step]:
     """Scan districts then recent orders; aggregates revenue."""
     rev = 0
+    if batched:
+        dkeys = [f"district:{w}:{d}" for w in range(sc.warehouses)
+                 for d in range(sc.districts)]
+        dists = yield ("scan", dkeys)
+        okeys = []
+        for dk, dist in zip(dkeys, dists):
+            _, w, d = dk.split(":")
+            hi = (dist or {"next_o_id": 0})["next_o_id"]
+            okeys += [f"order:{w}:{d}:{o}" for o in range(max(hi - 5, 0), hi)]
+        if okeys:
+            orders = yield ("scan", okeys)
+            rev = sum(o.get("total", 0) for o in orders
+                      if isinstance(o, dict))
+        yield ("out", rev)
+        return
     for w in range(sc.warehouses):
         for d in range(sc.districts):
             dist = yield ("r", f"district:{w}:{d}")
@@ -139,9 +171,9 @@ def order_revenue(rng: random.Random, sc: Scale) -> Iterator[Step]:
 OLAP_QUERIES = (stock_level_scan, customer_balance, order_revenue)
 
 
-def olap_query(rng: random.Random, sc: Scale):
+def olap_query(rng: random.Random, sc: Scale, *, batched: bool = False):
     fn = OLAP_QUERIES[rng.randrange(len(OLAP_QUERIES))]
-    return fn(rng, sc), fn.__name__
+    return fn(rng, sc, batched=batched), fn.__name__
 
 
 def load_initial(engine, sc: Scale) -> None:

@@ -4,9 +4,14 @@ from .versioned import VersionedParamStore
 from .paged import (init_store, visible_slots, snapshot_read_ref,
                     visible_slots_members, snapshot_read_members,
                     publish_page)
+from .mirror import PagedMirror, decode_value, encode_value
+from .version_store import (ChainVersionStore, PagedVersionStore,
+                            VersionStore)
 
 __all__ = [
     "VersionedParamStore",
     "init_store", "visible_slots", "snapshot_read_ref",
     "visible_slots_members", "snapshot_read_members", "publish_page",
+    "PagedMirror", "encode_value", "decode_value",
+    "VersionStore", "ChainVersionStore", "PagedVersionStore",
 ]

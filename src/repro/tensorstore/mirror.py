@@ -1,0 +1,226 @@
+"""WAL -> paged-store mirror: a device-shaped OLAP surface over the HTAP WAL.
+
+`PagedMirror` applies committed writesets from `Wal.tail()` into K-slot page
+versions (the `tensorstore.paged` layout), stamping each version with the
+primary's commit seq shipped in the commit record — the SAME clock the
+RSS membership mapping uses.  That gives replicas (and the single-node HTAP
+facade) a columnar, batch-scannable image of the keyspace:
+
+  * `scan_at(keys, watermark)`       — SI-V snapshot scan (prefix visibility)
+  * `scan_members(keys, snapshot)`   — RSS membership scan (set visibility)
+
+Both resolve visibility for all requested pages in one vectorized pass (the
+`version_gather` / `rss_gather` algorithms on host numpy buffers — mutable
+in-place, so publishes are O(K+E) and scans allocation-light), and
+`jnp_store()` exports the live buffers as a `{'data','ts'}` paged store for
+the Pallas kernels (interpret mode on CPU, compiled on TPU).
+
+The key -> page codec is `encode_value`/`decode_value`: a fixed-width int32
+payload per page tagged by value shape (int / district / order), chosen so
+the CH-like workload of `mvcc.workload` round-trips bit-exactly — scans over
+the mirror must equal per-key engine reads.
+
+GC: publishes honour a `gc_floor` (commit-seq units, from
+`PRoTManager.gc_floor_seq()`): the newest slot at-or-below the floor is never
+recycled (hot_standby_feedback analogue).  Like the paper's K-slot design
+this is a BOUNDED-staleness guarantee: pinned readers' versions above the
+floor survive only while publishers outrun readers by fewer than K-1
+versions per page — size K (`slots`) to the publish rate between reader
+release points, and use `check_scans` to assert parity against the
+unbounded chain store in-run.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Iterable, Sequence
+
+import numpy as np
+
+from ..core.replica import RssSnapshot
+from ..core.wal import Wal, WalRecord
+
+# payload tags (element 0 of every page payload)
+TAG_INIT = 0        # never-written page: decodes to the initial value 0
+TAG_INT = 1         # [1, v]
+TAG_DISTRICT = 2    # [2, next_o_id, ytd]
+TAG_ORDER = 3       # [3, total, n_items, items...]
+
+_INT32 = np.iinfo(np.int32)
+
+
+def encode_value(value: Any, elems: int) -> np.ndarray:
+    """Encode a workload value into a fixed [elems] int32 payload."""
+    out = np.zeros(elems, np.int32)
+    if isinstance(value, (int, np.integer)) and not isinstance(value, bool):
+        assert _INT32.min <= value <= _INT32.max, value
+        out[0], out[1] = TAG_INT, value
+        return out
+    if isinstance(value, dict):
+        if set(value) <= {"next_o_id", "ytd"}:
+            out[0] = TAG_DISTRICT
+            out[1] = value.get("next_o_id", 0)
+            out[2] = value.get("ytd", 0)
+            return out
+        if set(value) <= {"items", "total"}:
+            items = list(value.get("items", ()))
+            assert len(items) + 3 <= elems, \
+                f"order with {len(items)} items needs page_elems >= " \
+                f"{len(items) + 3}"
+            out[0], out[1], out[2] = TAG_ORDER, value.get("total", 0), \
+                len(items)
+            out[3:3 + len(items)] = items
+            return out
+    raise TypeError(f"no paged-store codec for value {value!r}")
+
+
+def decode_value(row: np.ndarray) -> Any:
+    """Inverse of encode_value; TAG_INIT decodes to the chain-store initial
+    value 0."""
+    tag = int(row[0])
+    if tag == TAG_INIT:
+        return 0
+    if tag == TAG_INT:
+        return int(row[1])
+    if tag == TAG_DISTRICT:
+        return {"next_o_id": int(row[1]), "ytd": int(row[2])}
+    if tag == TAG_ORDER:
+        n = int(row[2])
+        return {"items": [int(x) for x in row[3:3 + n]],
+                "total": int(row[1])}
+    raise ValueError(f"corrupt page payload tag {tag}")
+
+
+class PagedMirror:
+    def __init__(self, *, slots: int = 8, page_elems: int = 32,
+                 capacity: int = 64) -> None:
+        assert page_elems >= 3
+        self.slots = slots
+        self.page_elems = page_elems
+        self.data = np.zeros((capacity, slots, page_elems), np.int32)
+        self.ts = np.zeros((capacity, slots), np.int32)
+        self.page_of: dict[str, int] = {}
+        self.keys: list[str] = []
+        self.applied_lsn = 0
+        self.commit_seq: dict[int, int] = {}   # txn -> commit seq
+        self.watermark = 0                     # newest applied commit seq
+        self._seq_counter = 0
+
+    # ----------------------------------------------------------- page alloc
+    @property
+    def n_pages(self) -> int:
+        return len(self.keys)
+
+    def _ensure_page(self, key: str) -> int:
+        page = self.page_of.get(key)
+        if page is not None:
+            return page
+        page = len(self.keys)
+        if page == self.data.shape[0]:         # grow by doubling
+            self.data = np.concatenate([self.data, np.zeros_like(self.data)])
+            self.ts = np.concatenate([self.ts, np.zeros_like(self.ts)])
+        self.page_of[key] = page
+        self.keys.append(key)
+        return page
+
+    # -------------------------------------------------------------- publish
+    def _publish(self, page: int, payload: np.ndarray, seq: int,
+                 gc_floor: int) -> None:
+        """numpy twin of `paged.publish_page`: recycle the oldest slot, but
+        never the newest slot at-or-below gc_floor (a pinned reader may still
+        resolve to it)."""
+        row = self.ts[page]
+        masked = np.where(row <= gc_floor, row, -1)
+        protected = int(masked.argmax())
+        order = row.astype(np.int64).copy()
+        order[protected] = np.iinfo(np.int64).max
+        victim = int(order.argmin())
+        self.data[page, victim] = payload
+        self.ts[page, victim] = seq
+
+    # --------------------------------------------------------------- replay
+    def apply(self, rec: WalRecord, *, gc_floor: int = 0) -> bool:
+        """Apply one WAL record (idempotent by LSN); returns True when the
+        record installed new versions."""
+        if rec.lsn <= self.applied_lsn:
+            return False
+        self.applied_lsn = rec.lsn
+        if rec.type != "commit":
+            return False
+        self._seq_counter += 1
+        seq = rec.seq if rec.seq else self._seq_counter
+        self.commit_seq[rec.txn] = seq
+        self.watermark = max(self.watermark, seq)
+        for key, value in rec.writes:
+            page = self._ensure_page(key)
+            self._publish(page, encode_value(value, self.page_elems), seq,
+                          gc_floor)
+        return bool(rec.writes)
+
+    def catch_up(self, wal: Wal, *, gc_floor: int = 0) -> int:
+        """Pull and apply all records past applied_lsn; returns #applied."""
+        n = 0
+        for rec in wal.tail(self.applied_lsn):
+            self.apply(rec, gc_floor=gc_floor)
+            n += 1
+        return n
+
+    # ------------------------------------------------------ batched reads
+    def member_seqs_for(self, snap: RssSnapshot) -> np.ndarray:
+        """Sorted member commit seqs of an exported snapshot (the member-ts
+        array the rss_gather kernel takes)."""
+        seqs = [self.commit_seq[t] for t in snap.txns if t in self.commit_seq]
+        return np.asarray(sorted(seqs), np.int32)
+
+    def _visible_rows(self, rows: np.ndarray, mask_fn) -> np.ndarray:
+        """Resolve visibility for a batch of pages: [n] payload rows."""
+        ts = self.ts[rows]                                  # [n, K]
+        masked = mask_fn(ts)
+        slot = masked.argmax(1)                             # first max: ties
+        return self.data[rows, slot]                        # toward slot 0
+
+    def _scan(self, keys: Sequence[str], mask_fn) -> list[Any]:
+        pages = np.asarray([self.page_of.get(k, -1) for k in keys],
+                           np.int64)
+        out: list[Any] = [0] * len(keys)
+        hit = np.nonzero(pages >= 0)[0]
+        if hit.size:
+            payloads = self._visible_rows(pages[hit], mask_fn)
+            for i, row in zip(hit, payloads):
+                out[int(i)] = decode_value(row)
+        return out
+
+    def scan_at(self, keys: Sequence[str], watermark: int) -> list[Any]:
+        """SI-V batched snapshot scan: one vectorized visibility pass."""
+        return self._scan(
+            keys, lambda ts: np.where(ts <= watermark, ts, -1))
+
+    def scan_members(self, keys: Sequence[str],
+                     snap: RssSnapshot) -> list[Any]:
+        """RSS membership batched scan (empty member set -> initial slots)."""
+        members = self.member_seqs_for(snap)
+        return self._scan(
+            keys,
+            lambda ts: np.where((ts == 0) | np.isin(ts, members), ts, -1))
+
+    def read_at(self, key: str, watermark: int) -> Any:
+        return self.scan_at([key], watermark)[0]
+
+    def read_members(self, key: str, snap: RssSnapshot) -> Any:
+        return self.scan_members([key], snap)[0]
+
+    # -------------------------------------------------------- device export
+    def jnp_store(self) -> dict:
+        """The live mirror as a `{'data','ts'}` paged store for the Pallas
+        kernels, pages padded to a sublane multiple (padding pages hold only
+        the initial ts=0 slot and decode to 0)."""
+        import jax.numpy as jnp
+
+        p = max(self.n_pages, 1)
+        pad = (-p) % 8
+        data = self.data[:p + pad] if p + pad <= self.data.shape[0] else \
+            np.concatenate([self.data[:p],
+                            np.zeros((pad,) + self.data.shape[1:], np.int32)])
+        ts = self.ts[:p + pad] if p + pad <= self.ts.shape[0] else \
+            np.concatenate([self.ts[:p],
+                            np.zeros((pad,) + self.ts.shape[1:], np.int32)])
+        return {"data": jnp.asarray(data), "ts": jnp.asarray(ts)}

@@ -52,10 +52,17 @@ def snapshot_read_ref(store: dict, watermark: jax.Array) -> jax.Array:
 def visible_slots_members(ts: jax.Array, member_ts: jax.Array) -> jax.Array:
     """RSS-set variant: member_ts is a sorted [M] array of commit timestamps
     of transactions inside the RSS; a slot is visible iff its ts is 0
-    (initial) or a member.  Returns the newest visible slot per page."""
-    pos = jnp.searchsorted(member_ts, ts)
-    pos = jnp.clip(pos, 0, member_ts.shape[0] - 1)
-    is_member = (jnp.take(member_ts, pos) == ts) | (ts == 0)
+    (initial) or a member.  Returns the newest visible slot per page.
+
+    An empty RSS (M == 0) resolves every page to its initial (ts == 0) slot:
+    searchsorted/clip/take on a zero-length array would index garbage, so
+    membership degenerates to the ts == 0 test alone."""
+    if member_ts.shape[0] == 0:
+        is_member = ts == 0
+    else:
+        pos = jnp.searchsorted(member_ts, ts)
+        pos = jnp.clip(pos, 0, member_ts.shape[0] - 1)
+        is_member = (jnp.take(member_ts, pos) == ts) | (ts == 0)
     masked = jnp.where(is_member, ts, -1)
     return jnp.argmax(masked, axis=-1).astype(jnp.int32)
 

@@ -1,0 +1,110 @@
+"""VersionStore: one read interface over the Python chain store and the
+device-resident paged mirror.
+
+The HTAP stack has two multiversion stores with the same visibility
+semantics but different shapes:
+
+  * `mvcc.store.Store` — per-key Python version chains (the PostgreSQL-heap
+    analogue; the engine's source of truth),
+  * `tensorstore.mirror.PagedMirror` — the WAL-mirrored K-slot paged store
+    (the Pallas-kernel-shaped OLAP surface).
+
+`VersionStore` unifies them behind three operations:
+
+  * point read at a watermark        (SI-V prefix visibility),
+  * point read under RSS membership  (the paper's protected read),
+  * **batched snapshot scan** over a key sequence — ONE visibility
+    resolution for the whole read set instead of N per-key walks; this is
+    the OLAP hot path the driver routes through.
+
+Snapshots are either an int commit-seq watermark or an exported
+`RssSnapshot`; `scan()` dispatches on the type.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Protocol, Sequence, Union, runtime_checkable
+
+from ..core.replica import RssSnapshot
+from .mirror import PagedMirror
+
+Snapshot = Union[int, RssSnapshot]
+
+
+@runtime_checkable
+class VersionStore(Protocol):
+    def read_at(self, key: str, watermark: int) -> Any: ...
+
+    def read_members(self, key: str, snap: RssSnapshot) -> Any: ...
+
+    def scan_at(self, keys: Sequence[str], watermark: int) -> list[Any]: ...
+
+    def scan_members(self, keys: Sequence[str],
+                     snap: RssSnapshot) -> list[Any]: ...
+
+    def scan(self, keys: Sequence[str], snapshot: Snapshot) -> list[Any]: ...
+
+
+class _ScanDispatch:
+    def scan(self, keys: Sequence[str], snapshot: Snapshot) -> list[Any]:
+        if isinstance(snapshot, RssSnapshot):
+            return self.scan_members(keys, snapshot)
+        return self.scan_at(keys, int(snapshot))
+
+
+class ChainVersionStore(_ScanDispatch):
+    """VersionStore over a `mvcc.store.Store` (or anything exposing a
+    `chains: dict[str, VersionChain]` mapping).  Reads never materialize
+    missing chains: an unwritten key is the initial value 0."""
+
+    def __init__(self, store) -> None:
+        self.store = store
+
+    def read_at(self, key: str, watermark: int) -> Any:
+        ch = self.store.chains.get(key)
+        return ch.visible_at(watermark).value if ch is not None else 0
+
+    def read_members(self, key: str, snap: RssSnapshot) -> Any:
+        ch = self.store.chains.get(key)
+        return ch.visible_in(snap.visible).value if ch is not None else 0
+
+    def scan_at(self, keys: Sequence[str], watermark: int) -> list[Any]:
+        chains = self.store.chains
+        out = []
+        for key in keys:
+            ch = chains.get(key)
+            out.append(ch.visible_at(watermark).value if ch is not None
+                       else 0)
+        return out
+
+    def scan_members(self, keys: Sequence[str],
+                     snap: RssSnapshot) -> list[Any]:
+        chains = self.store.chains
+        visible = snap.visible
+        out = []
+        for key in keys:
+            ch = chains.get(key)
+            out.append(ch.visible_in(visible).value if ch is not None else 0)
+        return out
+
+
+class PagedVersionStore(_ScanDispatch):
+    """VersionStore over the WAL-mirrored paged store: scans are single
+    vectorized visibility passes (`version_gather`/`rss_gather` algorithm);
+    `mirror.jnp_store()` exposes the same state to the Pallas kernels."""
+
+    def __init__(self, mirror: PagedMirror) -> None:
+        self.mirror = mirror
+
+    def read_at(self, key: str, watermark: int) -> Any:
+        return self.mirror.read_at(key, watermark)
+
+    def read_members(self, key: str, snap: RssSnapshot) -> Any:
+        return self.mirror.read_members(key, snap)
+
+    def scan_at(self, keys: Sequence[str], watermark: int) -> list[Any]:
+        return self.mirror.scan_at(keys, watermark)
+
+    def scan_members(self, keys: Sequence[str],
+                     snap: RssSnapshot) -> list[Any]:
+        return self.mirror.scan_members(keys, snap)

@@ -1,0 +1,169 @@
+"""GC under pinned readers, over random publish/pin/release interleavings.
+
+Three layers of the same hot_standby_feedback contract:
+  1. `publish_page` (device store) never recycles the slot that is the
+     newest visible at `gc_floor` — a pinned reader at that floor always
+     resolves to its version,
+  2. the WAL->mirror `_publish` twin keeps the identical guarantee,
+  3. `PRoTManager.gc_floor_seq()` + `Engine.prune_versions` preserve every
+     version any pinned `RssSnapshot` can still read (the prefix-safe floor
+     of Algorithm 1 snapshots).
+
+Seeded randomness (no hypothesis dependence) so the properties execute on
+minimal containers; each seed is an independent interleaving.
+"""
+
+import random
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.wal import WalRecord
+from repro.mvcc import SingleNodeHTAP
+from repro.tensorstore import (PagedMirror, init_store, publish_page,
+                               snapshot_read_ref, visible_slots)
+
+
+def _floor_version(ts_row, floor):
+    """(slot, ts) of the newest version at-or-below floor in a [K] ts row."""
+    vis = [(t, k) for k, t in enumerate(ts_row) if t <= floor]
+    t, k = max(vis, key=lambda tk: (tk[0], -tk[1]))
+    return k, t
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_publish_page_never_recycles_floor_slot(seed):
+    rng = random.Random(seed)
+    P, K, E = 4, 3, 8
+    store = init_store(P, K, E, jnp.float32)
+    ts = 0
+    # a pinned reader at a floor frozen partway through the interleaving
+    floor, expected = 0, {p: 0.0 for p in range(P)}
+    for step in range(40):
+        ts += rng.randint(1, 3)
+        p = rng.randrange(P)
+        store = publish_page(store, p, jnp.full((E,), float(ts)),
+                             jnp.int32(ts), gc_floor=floor)
+        if step == 10:                      # pin: freeze the floor here
+            floor = ts
+            out = snapshot_read_ref(store, jnp.int32(floor))
+            expected = {q: float(out[q][0]) for q in range(P)}
+        if step >= 10:
+            # the pinned reader still resolves every page to its version
+            out = snapshot_read_ref(store, jnp.int32(floor))
+            for q in range(P):
+                assert float(out[q][0]) == expected[q], (seed, step, q)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_mirror_publish_never_recycles_floor_slot(seed):
+    rng = random.Random(seed)
+    mirror = PagedMirror(slots=3, page_elems=8)
+    keys = [f"k{i}" for i in range(4)]
+    lsn = 0
+    seq = 0
+    floor, expected = 0, {}
+
+    def commit(key, value, gc_floor):
+        nonlocal lsn, seq
+        lsn += 1
+        seq += 1
+        mirror.apply(WalRecord(lsn, "commit", seq, writes=((key, value),),
+                               seq=seq), gc_floor=gc_floor)
+
+    for step in range(40):
+        commit(rng.choice(keys), rng.randrange(1000), gc_floor=floor)
+        if step == 10:
+            floor = seq
+            expected = dict(zip(keys, mirror.scan_at(keys, floor)))
+        if step >= 10:
+            assert dict(zip(keys, mirror.scan_at(keys, floor))) == expected
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_prune_preserves_pinned_rss_reads(seed):
+    """Random commit/refresh/pin/release/prune interleavings on the
+    single-node HTAP system: after every prune at gc_floor_seq(), every
+    still-pinned snapshot reads exactly the values recorded at pin time."""
+    rng = random.Random(seed)
+    htap = SingleNodeHTAP("ssi+rss")
+    eng = htap.engine
+    keys = [f"k{i}" for i in range(6)]
+    pins = {}                    # rid -> (snap, expected values at pin time)
+
+    def chain_read(snap, key):
+        ch = eng.store.chains.get(key)
+        return ch.visible_in(snap.visible).value if ch else 0
+
+    for step in range(300):
+        act = rng.random()
+        if act < 0.5:                                   # writer commits
+            t = eng.begin()
+            for key in rng.sample(keys, rng.randint(1, 2)):
+                eng.write(t, key, rng.randrange(1000))
+            try:
+                eng.commit(t)
+            except Exception:
+                pass
+        elif act < 0.65:                                # RSS refresh
+            htap.refresh_rss()
+        elif act < 0.8:                                 # pin a reader
+            rid, snap = htap.prot.acquire()
+            pins[rid] = (snap, {k: chain_read(snap, k) for k in keys})
+        elif act < 0.9 and pins:                        # release a reader
+            rid = rng.choice(list(pins))
+            htap.prot.release(rid)
+            del pins[rid]
+        else:                                           # version GC
+            htap.gc_versions()
+        # invariant: every pinned snapshot still reads its pin-time values
+        for rid, (snap, expected) in pins.items():
+            got = {k: chain_read(snap, k) for k in keys}
+            assert got == expected, (seed, step, rid)
+    # final prune with everything released must not crash reads
+    for rid in list(pins):
+        htap.prot.release(rid)
+    htap.gc_versions()
+    assert htap.engine.store.version_count() >= len(eng.store.chains)
+
+
+def test_gc_floor_seq_tracks_minimum_pin():
+    htap = SingleNodeHTAP("ssi+rss")
+    eng = htap.engine
+    for i in range(3):
+        t = eng.begin()
+        eng.write(t, "a", i)
+        eng.commit(t)
+    htap.refresh_rss()
+    rid1, snap1 = htap.prot.acquire()
+    floor1 = htap.prot.gc_floor_seq()
+    assert floor1 == snap1.floor_seq > 0
+    for i in range(3):
+        t = eng.begin()
+        eng.write(t, "a", 10 + i)
+        eng.commit(t)
+    htap.refresh_rss()
+    rid2, snap2 = htap.prot.acquire()
+    assert snap2.floor_seq > snap1.floor_seq
+    assert htap.prot.gc_floor_seq() == snap1.floor_seq   # min over pins
+    htap.prot.release(rid1)
+    assert htap.prot.gc_floor_seq() == snap2.floor_seq
+    htap.prot.release(rid2)
+
+
+def test_prune_versions_respects_floor_visibility():
+    """Direct contract: prune at a snapshot's floor keeps the version the
+    snapshot resolves to on every key (prefix-safety of floor_seq)."""
+    htap = SingleNodeHTAP("ssi+rss")
+    eng = htap.engine
+    for i in range(5):
+        t = eng.begin()
+        eng.write(t, "x", i)
+        eng.commit(t)
+    htap.refresh_rss()
+    rid, snap = htap.prot.acquire()
+    want = eng.store.chains["x"].visible_in(snap.visible).value
+    eng.prune_versions(htap.prot.gc_floor_seq())
+    assert eng.store.chains["x"].visible_in(snap.visible).value == want
+    htap.prot.release(rid)

@@ -1,0 +1,93 @@
+"""rss_gather kernel parity: Pallas (interpret) == jnp oracle == per-page
+python scan, over randomized (P, K, E, M) shapes INCLUDING the empty member
+set — plus the paged.py empty-member-set regression.  (Seeded numpy
+randomness: runs even without hypothesis installed.)"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.rss_gather.kernel import rss_gather
+from repro.kernels.rss_gather.ops import snapshot_read_members as op_members
+from repro.kernels.rss_gather.ref import rss_gather_ref
+from repro.tensorstore import (init_store, publish_page,
+                               snapshot_read_members, visible_slots_members)
+
+
+def _python_oracle(data, ts, members):
+    """Independent per-page scan: newest slot with ts==0 or ts in members,
+    ties toward the lowest slot index; all-invisible pages -> slot 0."""
+    P, K, _ = data.shape
+    mset = set(int(m) for m in members)
+    out = np.empty((P, data.shape[2]), data.dtype)
+    for p in range(P):
+        best, best_ts = 0, -1
+        for k in range(K):
+            t = int(ts[p, k])
+            if (t == 0 or t in mset) and t > best_ts:
+                best, best_ts = k, t
+        out[p] = data[p, best]
+    return out
+
+
+SHAPES = [(8, 2, 128), (16, 4, 256), (32, 3, 128), (8, 8, 512)]
+
+
+@pytest.mark.parametrize("P,K,E", SHAPES)
+@pytest.mark.parametrize("M", [0, 1, 7, 150])
+def test_kernel_matches_oracles(P, K, E, M):
+    rng = np.random.default_rng(P * K + M)
+    data = rng.standard_normal((P, K, E)).astype(np.float32)
+    ts = rng.integers(0, 60, (P, K)).astype(np.int32)
+    members = np.sort(rng.choice(np.arange(1, 60), size=min(M, 59),
+                                 replace=False)).astype(np.int32)
+    out = np.asarray(rss_gather(jnp.asarray(data), jnp.asarray(ts),
+                                jnp.asarray(members)))
+    ref = np.asarray(rss_gather_ref(jnp.asarray(data), jnp.asarray(ts),
+                                    jnp.asarray(members)))
+    py = _python_oracle(data, ts, members)
+    np.testing.assert_array_equal(out, ref)      # kernel == jnp oracle
+    np.testing.assert_array_equal(out, py)       # kernel == python scan
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+def test_kernel_dtypes(dtype):
+    key = jax.random.PRNGKey(0)
+    data = (jax.random.normal(key, (16, 4, 256)) * 10).astype(dtype)
+    ts = jax.random.randint(jax.random.fold_in(key, 1), (16, 4), 0, 30)
+    members = jnp.asarray([3, 11, 19, 27], jnp.int32)
+    out = rss_gather(data, ts, members)
+    ref = rss_gather_ref(data, ts, members)
+    np.testing.assert_array_equal(np.asarray(out, np.float32),
+                                  np.asarray(ref, np.float32))
+
+
+def test_empty_member_set_resolves_initial_slots():
+    """Regression: the searchsorted formulation indexed garbage for M == 0;
+    an empty RSS must read every page's initial (ts=0) version."""
+    store = init_store(4, 3, 8, jnp.float32,
+                       initial=jnp.arange(32.0).reshape(4, 8))
+    store = publish_page(store, 1, jnp.full((8,), 9.0), jnp.int32(10))
+    store = publish_page(store, 2, jnp.full((8,), 7.0), jnp.int32(20))
+    empty = jnp.zeros((0,), jnp.int32)
+    # jnp fallback in tensorstore.paged
+    idx = visible_slots_members(store["ts"], empty)
+    np.testing.assert_array_equal(np.asarray(idx), np.zeros(4, np.int32))
+    out = snapshot_read_members(store, empty)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.arange(32.0).reshape(4, 8))
+    # Pallas kernel path agrees
+    kout = op_members(store, empty)
+    np.testing.assert_allclose(np.asarray(kout), np.asarray(out))
+
+
+def test_member_read_skips_non_member_version():
+    store = init_store(1, 3, 8, jnp.float32)
+    store = publish_page(store, 0, jnp.full((8,), 1.0), jnp.int32(10))
+    store = publish_page(store, 0, jnp.full((8,), 2.0), jnp.int32(20))
+    members = jnp.asarray([10], jnp.int32)           # ts=20 not a member
+    out = op_members(store, members)
+    assert float(out[0, 0]) == 1.0
+    ref = snapshot_read_members(store, members)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref))

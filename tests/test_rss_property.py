@@ -12,6 +12,8 @@ adding a PRoT reader keeps the history serializable (Theorem 4.4).
 import random
 
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (construct_rss, construct_rss_ssi, clear_set,
