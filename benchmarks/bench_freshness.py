@@ -1,14 +1,27 @@
-"""Beyond-paper: RSS freshness (staleness) characterization + scan path.
+"""Beyond-paper: RSS freshness (staleness) + construction-cost scaling.
 
 RSS trades freshness for wait-freedom: the watermark can only include
 versions whose writers are Clear (ended before every active txn began).
 We sweep writer concurrency and refresh interval and report the visible-
-version lag (LSNs) of the exported snapshot.
+version lag (commits) of the exported snapshot.
+
+`construct_cost_sweep` is the tentpole's cost claim, measured: per-round
+RSS construction cost versus replayed-history length for
+
+  * the incremental path (`RSSManager.construct`: begin-LSN heap +
+    delta-only Algorithm 1 + compressed floor/above-floor snapshot) — flat,
+  * the batch path (`RSSManager.construct_batch`: full Clear recompute +
+    full edge flatten + full member sort each round) — grows linearly.
 
 `scan_path_report` measures the batched-scan OLAP path (one
 VersionStore.scan per ('scan', keys) step) against the per-key generator
 walk: olap commits per round and wall time, same seed/workload — the
 speedup record for BENCH_kernels.json.
+
+Run standalone to refresh the freshness/construct sections of
+BENCH_kernels.json without the full benchmark suite:
+
+    PYTHONPATH=src python -m benchmarks.bench_freshness
 """
 
 from __future__ import annotations
@@ -16,6 +29,7 @@ from __future__ import annotations
 import random
 import time
 
+from repro.core import RSSManager, Wal
 from repro.mvcc import SingleNodeHTAP, run_single_node
 
 
@@ -41,16 +55,86 @@ def freshness_sweep():
                 except Exception:
                     pass
                 if i % refresh_every == 0:
-                    snap = htap.refresh_rss()
-                    n_committed = sum(1 for x in htap.engine.wal.records
-                                      if x.type == "commit")
-                    lag = n_committed - len(snap.txns)
+                    htap.refresh_rss()
+                    # committed-but-not-yet-member commits (the WAL itself
+                    # is truncated as consumers catch up, so count through
+                    # engine stats and the manager's monotone member count)
+                    lag = htap.engine.stats["commits"] - \
+                        htap.rss_manager.members_total
                     lags.append(lag)
             us = (time.perf_counter() - t0) * 1e6 / 600
             avg = sum(lags) / max(len(lags), 1)
             rows.append((f"rss_freshness:w{n_writers}:r{refresh_every}",
                          us, f"avg_lag={avg:.1f}_commits"))
     return rows
+
+
+def _synthetic_wal(n_records: int, seed: int = 0, concurrency: int = 8) \
+        -> Wal:
+    """Engine-shaped WAL stream with a steady concurrent window."""
+    rng = random.Random(seed)
+    wal = Wal()
+    active: list[int] = []
+    tid = 0
+    while wal.head_lsn < n_records:
+        if len(active) < concurrency and (rng.random() < 0.5 or not active):
+            tid += 1
+            wal.log_begin(tid)
+            active.append(tid)
+        else:
+            t = active.pop(rng.randrange(len(active)))
+            wal.log_commit(t, seq=wal.head_lsn + 1)
+            if active and rng.random() < 0.4:
+                wal.log_deps(t, sorted(rng.sample(
+                    active, rng.randint(1, min(2, len(active))))))
+    return wal
+
+
+def construct_cost_sweep(history_lengths=(1000, 2000, 4000, 8000),
+                        round_records: int = 50) -> dict:
+    """Per-round construction cost vs replayed-history length.
+
+    Both paths replay the SAME stream in rounds of `round_records` records;
+    we time only the construction call of the LAST rounds (state at full
+    history length).  Incremental additionally GCs its bookkeeping each
+    round — the sustained-load configuration."""
+    out = {"round_records": round_records, "incremental_us": {},
+           "batch_us": {}, "tracked_txns_incremental": {},
+           "tracked_txns_batch": {}}
+    for n in history_lengths:
+        wal = _synthetic_wal(n)
+        timings = {}
+        for mode in ("incremental", "batch"):
+            m = RSSManager()
+            cost_us = []
+            while m.applied_lsn < wal.head_lsn:
+                applied = 0
+                for rec in wal.tail(m.applied_lsn):
+                    m.apply(rec)
+                    applied += 1
+                    if applied >= round_records:
+                        break
+                t0 = time.perf_counter()
+                if mode == "incremental":
+                    m.construct()
+                else:
+                    m.construct_batch()
+                cost_us.append((time.perf_counter() - t0) * 1e6)
+                if mode == "incremental":
+                    m.gc()
+            # last-quarter mean: construction cost at ~full history length
+            tail = cost_us[-max(len(cost_us) // 4, 1):]
+            timings[mode] = sum(tail) / len(tail)
+            out[f"tracked_txns_{mode}"][str(n)] = m.tracked_txns()
+        out["incremental_us"][str(n)] = round(timings["incremental"], 2)
+        out["batch_us"][str(n)] = round(timings["batch"], 2)
+    ns = [str(n) for n in history_lengths]
+    out["batch_growth"] = round(
+        out["batch_us"][ns[-1]] / max(out["batch_us"][ns[0]], 1e-9), 2)
+    out["incremental_growth"] = round(
+        out["incremental_us"][ns[-1]] /
+        max(out["incremental_us"][ns[0]], 1e-9), 2)
+    return out
 
 
 def scan_path_report(rounds: int = 2000, seed: int = 7) -> dict:
@@ -72,3 +156,24 @@ def scan_path_report(rounds: int = 2000, seed: int = 7) -> dict:
     out["olap_throughput_speedup"] = round(
         scan["olap_commits"] / max(per_key["olap_commits"], 1), 2)
     return out
+
+
+def main() -> None:
+    """Refresh the rss_construct section of BENCH_kernels.json in place."""
+    from .persist import persist_bench_sections
+
+    sweep = construct_cost_sweep()
+    for n, us in sweep["incremental_us"].items():
+        print(f"rss_construct:incremental:n={n},{us},"
+              f"tracked={sweep['tracked_txns_incremental'][n]}")
+    for n, us in sweep["batch_us"].items():
+        print(f"rss_construct:batch:n={n},{us},"
+              f"tracked={sweep['tracked_txns_batch'][n]}")
+    print(f"rss_construct:growth,0,batch=x{sweep['batch_growth']};"
+          f"incremental=x{sweep['incremental_growth']}")
+    path = persist_bench_sections(rss_construct=sweep)
+    print(f"bench_kernels_json,0,{path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Shared BENCH_kernels.json persistence (merge semantics).
+
+Every benchmark entry point updates only its own sections of the repo-root
+BENCH_kernels.json, so standalone runs (`python -m benchmarks.bench_freshness`)
+and the full suite (`python -m benchmarks.run`) never clobber each other's
+records.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+BENCH_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_kernels.json")
+
+
+def persist_bench_sections(**sections) -> str:
+    """Merge the given top-level sections into BENCH_kernels.json; returns
+    the file path."""
+    blob = {}
+    if os.path.exists(BENCH_PATH):
+        with open(BENCH_PATH) as f:
+            blob = json.load(f)
+    blob.update(sections)
+    with open(BENCH_PATH, "w") as f:
+        json.dump(blob, f, indent=2, sort_keys=True)
+    return BENCH_PATH

@@ -10,9 +10,6 @@ Prints ``name,us_per_call,derived`` CSV rows covering:
 
 from __future__ import annotations
 
-import json
-import os
-import sys
 import time
 
 
@@ -45,9 +42,20 @@ def main() -> None:
         print(f"headline,0,{msg.replace(',', ';')}")
 
     # -------------------------------------------------------- freshness
-    from .bench_freshness import freshness_sweep, scan_path_report
+    from .bench_freshness import (construct_cost_sweep, freshness_sweep,
+                                  scan_path_report)
     for name, us, derived in freshness_sweep():
         print(f"{name},{us:.1f},{derived}")
+
+    # ------------------------------------------- RSS construction cost
+    construct_report = construct_cost_sweep()
+    for n, us in construct_report["incremental_us"].items():
+        print(f"rss_construct:incremental:n={n},{us},per_round")
+    for n, us in construct_report["batch_us"].items():
+        print(f"rss_construct:batch:n={n},{us},per_round")
+    print(f"rss_construct:growth,0,"
+          f"batch=x{construct_report['batch_growth']};"
+          f"incremental=x{construct_report['incremental_growth']}")
 
     # ------------------------------------------------ OLAP scan path
     scan_report = scan_path_report()
@@ -63,13 +71,12 @@ def main() -> None:
     for name, us, derived in all_benches():
         print(f"{name},{us:.1f},{derived}")
 
-    # persist the perf trajectory for future PRs
-    kernels_json = {"kernels": gather_kernels_report(),
-                    "olap_scan_path": scan_report}
-    out_path = os.path.join(os.path.dirname(os.path.dirname(
-        os.path.abspath(__file__))), "BENCH_kernels.json")
-    with open(out_path, "w") as f:
-        json.dump(kernels_json, f, indent=2, sort_keys=True)
+    # persist the perf trajectory for future PRs (merge: standalone entry
+    # points own their sections)
+    from .persist import persist_bench_sections
+    out_path = persist_bench_sections(kernels=gather_kernels_report(),
+                                      olap_scan_path=scan_report,
+                                      rss_construct=construct_report)
     print(f"bench_kernels_json,0,{out_path}")
 
     # --------------------------------------------------------- roofline

@@ -90,18 +90,23 @@ def mirrored_htap_demo():
     mirror.catch_up(eng.wal, gc_floor=prot.gc_floor_seq())
     _, snap = prot.acquire()
     print(f"mirror: {mirror.n_pages} pages @ lsn {mirror.applied_lsn}, "
-          f"RSS members={sorted(snap.txns)} floor_seq={snap.floor_seq}")
+          f"RSS floor_seq={snap.floor_seq} "
+          f"above-floor members={sorted(snap.txns)}")
 
     keys = [f"stock:0:{i}" for i in range(6)]
     # batched membership scan on the mirror (numpy fast path)
     host = mirror.scan_members(keys, snap)
-    # commit-seq -> member-ts mapping: the RSSManager export and the
-    # mirror's own bookkeeping agree (both stamped from WAL commit seqs)
+    # commit-seq -> member-ts mapping: compressed snapshots carry their own
+    # above-floor seqs; the RSSManager export and the mirror's bookkeeping
+    # agree (both stamped from WAL commit seqs)
     member_ts = rss.member_seqs(snap)
     assert list(mirror.member_seqs_for(snap)) == member_ts
-    # the same scan through the rss_gather Pallas kernel on the exported store
+    # the same scan through the rss_gather Pallas kernel on the exported
+    # store: the floor covers the Clear prefix, so the member array stays
+    # bounded by the concurrent window
     out = np.asarray(kernel_members(mirror.jnp_store(),
-                                    jnp.asarray(member_ts, jnp.int32)))
+                                    jnp.asarray(member_ts, jnp.int32),
+                                    snap.floor_seq))
     dev = [decode_value(out[mirror.page_of[k]]) for k in keys]
     # oracle: the engine's per-key protected reads
     r = eng.begin(read_only=True, rss=snap)

@@ -31,10 +31,11 @@ for P, K, E in [(16, 4, 256), (32, 3, 128)]:
     for M in (0, 5, 130):
         mem = jnp.asarray(np.sort(rng.choice(np.arange(1, 50), size=min(M, 49),
                                              replace=False)), jnp.int32)
-        np.testing.assert_array_equal(
-            np.asarray(rss_gather(data, ts, mem)),
-            np.asarray(rss_gather_ref(data, ts, mem)))
-print("kernel parity OK (version_gather, rss_gather; interpret mode)")
+        for floor in (0, 17):   # compressed-snapshot watermark
+            np.testing.assert_array_equal(
+                np.asarray(rss_gather(data, ts, mem, floor)),
+                np.asarray(rss_gather_ref(data, ts, mem, floor)))
+print("kernel parity OK (version_gather, rss_gather+floor; interpret mode)")
 EOF
 
 echo

@@ -17,8 +17,8 @@ from .ssi import (si_v_holds, si_w_holds, is_si_history, vulnerable_edges,
                   dangerous_structures, fatal_dangerous_structures,
                   ssi_accepts, Vulnerable)
 from .rss import (is_rss, rss_violations, done_set, clear_set, obscure_set,
-                  construct_rss, construct_rss_ssi, latest_versions_in,
-                  protected_read, with_protected_reader)
+                  construct_rss, construct_rss_ssi, IncrementalRss, advance,
+                  latest_versions_in, protected_read, with_protected_reader)
 from .safe_snapshots import snapshot_is_safe, earliest_safe_point, reader_wait
 from .wal import Wal, WalRecord
 from .replica import RSSManager, PRoTManager, RssSnapshot, replicate
@@ -32,7 +32,8 @@ __all__ = [
     "dangerous_structures", "fatal_dangerous_structures",
     "ssi_accepts", "Vulnerable",
     "is_rss", "rss_violations", "done_set", "clear_set", "obscure_set",
-    "construct_rss", "construct_rss_ssi", "latest_versions_in",
+    "construct_rss", "construct_rss_ssi", "IncrementalRss", "advance",
+    "latest_versions_in",
     "protected_read", "with_protected_reader",
     "snapshot_is_safe", "earliest_safe_point", "reader_wait",
     "Wal", "WalRecord", "RSSManager", "PRoTManager", "RssSnapshot",

@@ -8,6 +8,11 @@ The executable artifacts:
                                 concurrent-rw (vulnerable) edges observed so
                                 far — exactly the information the paper ships
                                 through the WAL.
+  * `IncrementalRss`/`advance` — the same Algorithm 1 applied only to the
+                                *delta* of newly-committed/newly-Clear
+                                transactions and newly-shipped edges: O(1)
+                                amortized per event instead of O(history)
+                                per construction round.
   * `protected_read(...)`     — build a PRoT (Def 4.2) reading the
                                 most-recent-in-P version of each key.
 """
@@ -95,6 +100,126 @@ def construct_rss_ssi(
         if tc in clear and tu not in clear and tu in committed:
             rss.add(tu)
     return rss
+
+
+class IncrementalRss:
+    """Incremental Algorithm 1: equal to ``construct_rss_ssi(clear,
+    committed, edges)`` over the cumulative event stream, maintained in O(1)
+    amortized per event.
+
+    Events (any interleaving; each is idempotent):
+      * ``add_committed(t)`` — Tc's commit observed,
+      * ``add_clear(t)``     — Tc entered Clear(p) (caller derives Clear from
+                               begin/end ordering; see `RSSManager`),
+      * ``add_edge(u, w)``   — concurrent rw antidependency Tu -> Tw shipped.
+
+    Rule (2)-(5) of Algorithm 1 — pull committed Tu with an edge into a Clear
+    transaction — is re-checked only for the endpoints an event touches:
+    a new edge checks (u, w) directly; a transaction entering Clear drains
+    the stashed in-edges (`rw_in`); a late commit of Tu re-checks Tu's
+    stashed out-edges.  `rss` only ever grows (the monotonicity Theorem 4.4
+    readers rely on).
+    """
+
+    def __init__(self) -> None:
+        self.rss: set[int] = set()
+        self.clear: set[int] = set()
+        self.committed: set[int] = set()
+        self.rw_out: dict[int, set[int]] = {}   # reader -> shipped writers
+        self.rw_in: dict[int, set[int]] = {}    # writer -> shipped readers
+        self._new: set[int] = set()             # members added, undrained
+        self._pending_pull: set[int] = set()    # pulled before commit seen
+
+    # ------------------------------------------------------------- events
+    def _join(self, t: int) -> None:
+        if t not in self.rss:
+            self.rss.add(t)
+            self._new.add(t)
+
+    def add_committed(self, t: int) -> None:
+        if t in self.committed:
+            return
+        self.committed.add(t)
+        if t in self._pending_pull:
+            self._pending_pull.discard(t)
+            self._join(t)
+        # edges shipped before the commit (lagged/batched streams)
+        for w in self.rw_out.get(t, ()):
+            if w in self.clear:
+                self._join(t)
+                break
+
+    def add_clear(self, t: int) -> None:
+        if t in self.clear:
+            return
+        self.clear.add(t)
+        self._join(t)                       # step (1): Clear(p) ⊆ RSS
+        for u in self.rw_in.get(t, ()):     # steps (2)-(5): drain in-edges
+            if u in self.committed:
+                self._join(u)
+
+    def add_edge(self, u: int, w: int) -> None:
+        self.rw_out.setdefault(u, set()).add(w)
+        self.rw_in.setdefault(w, set()).add(u)
+        if w in self.clear and u in self.committed:
+            self._join(u)
+
+    def pull(self, u: int) -> None:
+        """Force-join a committed reader whose witness writer is no longer
+        tracked (the writer's bookkeeping was GC'd below the state
+        watermark, which implies it was Clear)."""
+        if u in self.committed:
+            self._join(u)
+        else:
+            # commit event not applied yet: joined on add_committed(u)
+            self._pending_pull.add(u)
+
+    # ------------------------------------------------------------ draining
+    def drain_new(self) -> set[int]:
+        """Members added since the last drain (the construction delta)."""
+        out, self._new = self._new, set()
+        return out
+
+    # ------------------------------------------------------------------ GC
+    def forget(self, t: int) -> None:
+        """Drop Tt's bookkeeping.  Only safe for transactions already
+        resolved below the caller's state watermark (Clear members or
+        aborted): their membership is covered by the snapshot floor and no
+        future event can reference them as a non-Clear endpoint."""
+        self.rss.discard(t)
+        self.clear.discard(t)
+        self.committed.discard(t)
+        self._new.discard(t)
+        self._pending_pull.discard(t)
+        for w in self.rw_out.pop(t, ()):
+            ins = self.rw_in.get(w)
+            if ins is not None:
+                ins.discard(t)
+                if not ins:
+                    del self.rw_in[w]
+        for u in self.rw_in.pop(t, ()):
+            outs = self.rw_out.get(u)
+            if outs is not None:
+                outs.discard(t)
+                if not outs:
+                    del self.rw_out[u]
+
+
+def advance(state: IncrementalRss, *,
+            committed: Iterable[int] = (),
+            clear: Iterable[int] = (),
+            edges: Iterable[tuple[int, int]] = ()) -> set[int]:
+    """Apply one delta of events to an `IncrementalRss` and return the set
+    of NEW members — Algorithm 1 restricted to the delta.  Feeding every
+    prefix delta reproduces `construct_rss_ssi` over the cumulative state
+    (property-tested in tests/test_rss_incremental.py)."""
+    for t in committed:
+        state.add_committed(t)
+    for u, w in edges:
+        state.add_edge(u, w)
+    for t in clear:
+        state.add_clear(t)
+    return state.drain_new()
 
 
 def construct_rss(h: History) -> set[int]:

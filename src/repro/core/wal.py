@@ -21,6 +21,22 @@ from typing import Iterator, Literal, Sequence
 RecordType = Literal["begin", "commit", "abort", "deps"]
 
 
+def effective_commit_seq(max_seen: int, shipped_seq: int) -> int:
+    """THE commit clock every WAL consumer (RSSManager, PagedMirror,
+    Replica) derives version stamps from, so their seq mappings stay
+    bit-identical.
+
+    Stamped records normally carry a seq above everything seen and keep the
+    primary's clock.  A legacy record (shipped_seq == 0) — or a stamped seq
+    that collides with / regresses below a locally-minted fallback when
+    record kinds mix — takes max(seen) + 1: the clock is strictly monotone
+    in apply order, so commit-seq order always equals commit-LSN order
+    (floor_seq prefix-safety and VersionChain.install both rely on it)."""
+    if shipped_seq > max_seen:
+        return shipped_seq
+    return max_seen + 1
+
+
 @dataclass(frozen=True)
 class WalRecord:
     lsn: int
@@ -62,20 +78,27 @@ class Wal:
 
     `tail(from_lsn)` is the streaming-replication read path: it yields
     records with lsn > from_lsn, letting a replica poll asynchronously.
+
+    `truncate(up_to_lsn)` is WAL segment recycling: once every consumer
+    (RSS manager, paged mirror, replica) has applied a prefix, the primary
+    drops it so log state stays bounded by replication lag, not history.
+    LSNs keep counting from `base_lsn`; tailing below a truncated prefix is
+    an error (a real system would re-seed the replica from a basebackup).
     """
 
     def __init__(self) -> None:
         self.records: list[WalRecord] = []
+        self.base_lsn = 0          # lsn of the newest truncated-away record
 
     @property
     def head_lsn(self) -> int:
-        return len(self.records)
+        return self.base_lsn + len(self.records)
 
     def _append(self, type: RecordType, txn: int,
                 out_rw: Sequence[int] = (),
                 writes: Sequence[tuple[str, object]] = (),
                 seq: int = 0) -> WalRecord:
-        rec = WalRecord(len(self.records) + 1, type, txn, tuple(out_rw),
+        rec = WalRecord(self.head_lsn + 1, type, txn, tuple(out_rw),
                         tuple(writes), seq)
         self.records.append(rec)
         return rec
@@ -95,11 +118,28 @@ class Wal:
         return self._append("deps", txn, out_rw)
 
     def tail(self, from_lsn: int) -> Iterator[WalRecord]:
-        yield from self.records[from_lsn:]
+        if from_lsn < self.base_lsn:
+            raise LookupError(
+                f"WAL truncated to lsn {self.base_lsn}; cannot tail from "
+                f"{from_lsn} (re-seed the consumer from a base snapshot)")
+        yield from self.records[from_lsn - self.base_lsn:]
+
+    def truncate(self, up_to_lsn: int) -> int:
+        """Drop records with lsn <= up_to_lsn (already applied by every
+        consumer); returns the number of records recycled."""
+        cut = min(max(up_to_lsn - self.base_lsn, 0), len(self.records))
+        if cut:
+            del self.records[:cut]
+            self.base_lsn += cut
+        return cut
 
     # -------------------------------------------------------- persistence
     def dump(self, path: str) -> None:
         with open(path, "w") as f:
+            if self.base_lsn:
+                # header so a fully-truncated WAL reloads with its LSN
+                # clock intact (no records left to infer it from)
+                f.write(json.dumps({"base_lsn": self.base_lsn}) + "\n")
             for rec in self.records:
                 f.write(rec.to_json() + "\n")
 
@@ -109,6 +149,13 @@ class Wal:
         with open(path) as f:
             for line in f:
                 line = line.strip()
-                if line:
+                if not line:
+                    continue
+                d = json.loads(line)
+                if "type" not in d:                  # base_lsn header
+                    wal.base_lsn = d["base_lsn"]
+                else:
                     wal.records.append(WalRecord.from_json(line))
+        if wal.records and not wal.base_lsn:
+            wal.base_lsn = wal.records[0].lsn - 1    # headerless legacy dump
         return wal

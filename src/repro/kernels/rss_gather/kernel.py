@@ -4,7 +4,16 @@ Contract (matches ref.py and `tensorstore.paged.visible_slots_members`):
     data      [P, K, E]  page payloads, K version slots per page
     ts        [P, K]     int32 commit timestamp per slot (0 = initial version)
     member_ts [M]        sorted int32 commit timestamps of RSS members
-    out       [P, E]     payload of the newest slot whose ts is 0 or a member
+                         ABOVE the snapshot floor
+    floor     scalar     compressed-snapshot watermark: every committed
+                         version at ts <= floor belongs to a member
+                         (0 = no floor: initial versions only)
+    out       [P, E]     payload of the newest slot whose ts is <= floor
+                         or a member
+
+The floor keeps the member array bounded by the concurrent transaction
+window instead of growing with history — the kernel-side half of the
+incremental-RSS compressed snapshot export.
 
 This is the RSS read protocol of the paper vectorized for TPU: instead of a
 prefix watermark (`version_gather`), visibility is membership in the exported
@@ -32,10 +41,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(mem_ref, ts_ref, data_ref, out_ref):
+def _kernel(mem_ref, floor_ref, ts_ref, data_ref, out_ref):
     ts = ts_ref[...]                           # [BP, K] int32
     mem = mem_ref[...]                         # [1, Mp] int32 (-1 padded)
-    is_member = (ts == 0) | jnp.any(
+    floor = floor_ref[0, 0]                    # scalar watermark
+    is_member = (ts <= floor) | jnp.any(
         ts[:, :, None] == mem[0][None, None, :], axis=-1)
     masked = jnp.where(is_member, ts, -1)      # non-member slots -> -1
     best = jnp.max(masked, axis=1, keepdims=True)          # [BP, 1]
@@ -54,6 +64,7 @@ def _kernel(mem_ref, ts_ref, data_ref, out_ref):
 @functools.partial(jax.jit, static_argnames=("block_pages", "block_elems",
                                              "interpret"))
 def rss_gather(data: jax.Array, ts: jax.Array, member_ts: jax.Array,
+               floor: jax.Array | int = 0,
                *, block_pages: int = 8, block_elems: int = 512,
                interpret: bool = True) -> jax.Array:
     """Pallas RSS membership read.  interpret=True executes on CPU
@@ -68,16 +79,20 @@ def rss_gather(data: jax.Array, ts: jax.Array, member_ts: jax.Array,
     mem = jnp.full((1, mp), -1, jnp.int32)
     if M:
         mem = mem.at[0, :M].set(member_ts.astype(jnp.int32))
+    # scalar floor as a lane-aligned [1, 128] tile (same idiom as members;
+    # valid commit-ts are >= 0 so the kernel only reads element [0, 0])
+    floor_tile = jnp.full((1, 128), jnp.asarray(floor, jnp.int32))
     grid = (P // bp, E // be)
     return pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, mp), lambda i, j: (0, 0)),       # members
+            pl.BlockSpec((1, 128), lambda i, j: (0, 0)),      # floor
             pl.BlockSpec((bp, K), lambda i, j: (i, 0)),       # ts
             pl.BlockSpec((bp, K, be), lambda i, j: (i, 0, j)),  # data
         ],
         out_specs=pl.BlockSpec((bp, be), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((P, E), data.dtype),
         interpret=interpret,
-    )(mem, ts, data)
+    )(mem, floor_tile, ts, data)

@@ -6,15 +6,19 @@ import jax
 import jax.numpy as jnp
 
 
-def rss_visible_slots_ref(ts: jax.Array, member_ts: jax.Array) -> jax.Array:
-    """ts [P,K] int32, member_ts sorted [M] int32 -> [P] slot index of the
-    newest slot whose ts is 0 (initial) or a member (ties: lowest slot).
+def rss_visible_slots_ref(ts: jax.Array, member_ts: jax.Array,
+                          floor: jax.Array | int = 0) -> jax.Array:
+    """ts [P,K] int32, member_ts sorted [M] int32, scalar floor -> [P] slot
+    index of the newest slot whose ts is at-or-below `floor` (compressed-
+    snapshot watermark; 0 = initial versions only) or a member (ties:
+    lowest slot).
 
-    M == 0 (empty RSS) resolves every page to its newest ts == 0 slot."""
+    M == 0 with floor 0 (empty RSS) resolves every page to its newest
+    ts == 0 slot."""
     if member_ts.shape[0] == 0:
-        is_member = ts == 0
+        is_member = ts <= floor
     else:
-        is_member = (ts == 0) | jnp.any(
+        is_member = (ts <= floor) | jnp.any(
             ts[:, :, None] == member_ts[None, None, :], axis=-1)
     masked = jnp.where(is_member, ts, -1)                   # [P,K]
     best = jnp.max(masked, axis=1, keepdims=True)
@@ -24,9 +28,10 @@ def rss_visible_slots_ref(ts: jax.Array, member_ts: jax.Array) -> jax.Array:
         jnp.int32)
 
 
-def rss_gather_ref(data: jax.Array, ts: jax.Array,
-                   member_ts: jax.Array) -> jax.Array:
-    """data [P,K,E], ts [P,K], sorted member_ts [M] -> [P,E]: payload of the
-    newest slot whose commit-ts is 0 or in the RSS member-ts set."""
-    first = rss_visible_slots_ref(ts, member_ts)
+def rss_gather_ref(data: jax.Array, ts: jax.Array, member_ts: jax.Array,
+                   floor: jax.Array | int = 0) -> jax.Array:
+    """data [P,K,E], ts [P,K], sorted member_ts [M], scalar floor -> [P,E]:
+    payload of the newest slot whose commit-ts is floor-covered or in the
+    RSS member-ts set."""
+    first = rss_visible_slots_ref(ts, member_ts, floor)
     return jnp.take_along_axis(data, first[:, None, None], axis=1)[:, 0]

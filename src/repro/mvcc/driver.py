@@ -30,6 +30,9 @@ class Metrics:
     olap_aborts: int = 0
     olap_wait_rounds: int = 0
     olap_scan_steps: int = 0     # batched ("scan", keys) steps served
+    max_engine_txns: int = 0     # peak engine per-txn state (bounded by GC)
+    max_rss_tracked: int = 0     # peak RSSManager per-txn state (ditto)
+    max_wal_records: int = 0     # peak primary WAL length (truncation bound)
     rounds: int = 0
     by_abort_reason: dict = field(default_factory=dict)
     olap_outputs: list = field(default_factory=list)  # ("out", v) results
@@ -247,6 +250,11 @@ def run_single_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
             htap.refresh_rss()   # RSS construction invoker (fixed interval)
         for cl in clients:
             cl.step()
+        m.max_engine_txns = max(m.max_engine_txns, len(htap.engine.txns))
+        m.max_rss_tracked = max(m.max_rss_tracked,
+                                htap.rss_manager.tracked_txns())
+        m.max_wal_records = max(m.max_wal_records,
+                                len(htap.engine.wal.records))
     return m
 
 
@@ -274,4 +282,10 @@ def run_multi_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
             htap.ship_log()      # asynchronous streaming replication
         for cl in clients:
             cl.step()
+        m.max_engine_txns = max(m.max_engine_txns, len(htap.primary.txns))
+        if htap.replica.rss_manager is not None:
+            m.max_rss_tracked = max(m.max_rss_tracked,
+                                    htap.replica.rss_manager.tracked_txns())
+        m.max_wal_records = max(m.max_wal_records,
+                                len(htap.primary.wal.records))
     return m

@@ -176,17 +176,34 @@ class Engine:
         readers, safe-snapshot readers, plain-SI transactions) take the
         batched path — their reads are pure visibility resolution with no
         SIRead side effects.  SSI-tracked transactions fall back to per-key
-        `read` so rw-antidependency detection observes every key."""
+        `read` so rw-antidependency detection observes every key.
+
+        The batched path still records the read set (`t.reads` and the Adya
+        history when recording): the resolved writers come out of the same
+        visibility walk, so oracle checks (`ssi_accepts`/`is_rss`) validate
+        against histories that include every scan read."""
         self._check_active(t)
         if self.mode == "ssi" and not t.skip_siread:
             return [self.read(t, k) for k in keys]
-        if t.rss is not None:
-            vals = self.version_store.scan_members(keys, t.rss)
-        else:
-            vals = self.version_store.scan_at(keys, t.begin_seq)
+        snapshot = t.rss if t.rss is not None else t.begin_seq
+        vals, writers = self.version_store.scan_with_writers(keys, snapshot)
+        self.record_scan(t, keys, writers)
         if t.writes:                              # read-your-own-writes
             vals = [t.writes.get(k, v) for k, v in zip(keys, vals)]
         return vals
+
+    def record_scan(self, t: Txn, keys: Sequence[str],
+                    writers: Sequence[int]) -> None:
+        """Record a batched scan's resolved (key -> writer) read set, like
+        per-key `read` does — skipping keys the transaction overwrote
+        (read-your-own-writes never hits the store)."""
+        hist = self.history
+        for key, writer in zip(keys, writers):
+            if key in t.writes:
+                continue
+            t.reads[key] = writer
+            if hist is not None:
+                hist.append(op_r(t.tid, key, writer))
 
     # ----------------------------------------------------------------- writes
     def write(self, t: Txn, key: str, value: Any) -> None:
@@ -302,12 +319,34 @@ class Engine:
     # --------------------------------------------------------------------- GC
     def _gc(self) -> None:
         """Forget ended txns (and their SIRead entries) that can no longer be
-        concurrent with any future transaction."""
+        concurrent with any future transaction.
+
+        rw edges between two txns that are BOTH ended below the concurrency
+        horizon are released first (the analogue of PostgreSQL's SSI SLRU
+        summarization): such an edge can never participate in a future
+        dangerous-structure decision — any new edge involves a transaction
+        whose end is at-or-above the horizon, so every pivot check that
+        could still fire only needs edges with at least one endpoint there.
+        Without this, committed transactions joined by an rw edge pinned
+        each other in `txns` forever (edges were only dropped on abort)."""
         horizon = min((t.begin_seq for t in self.active.values()),
                       default=self.seq)
-        dead = [tid for tid, t in self.txns.items()
-                if t.status != Status.ACTIVE and t.end_seq < horizon
-                and not t.in_rw and not t.out_rw]
+
+        def _released(tid: int) -> bool:
+            u = self.txns.get(tid)
+            return u is None or (u.status != Status.ACTIVE
+                                 and u.end_seq < horizon)
+
+        dead = []
+        for tid, t in self.txns.items():
+            if t.status == Status.ACTIVE or t.end_seq >= horizon:
+                continue
+            if t.in_rw:
+                t.in_rw = {x for x in t.in_rw if not _released(x)}
+            if t.out_rw:
+                t.out_rw = {x for x in t.out_rw if not _released(x)}
+            if not t.in_rw and not t.out_rw:
+                dead.append(tid)
         if not dead:
             return
         deadset = set(dead)

@@ -30,6 +30,7 @@ from dataclasses import dataclass, field
 from typing import Any, Optional, Sequence
 
 from ..core.replica import PRoTManager, RSSManager, RssSnapshot
+from ..core.wal import effective_commit_seq
 from ..tensorstore.mirror import PagedMirror
 from ..tensorstore.version_store import (ChainVersionStore, PagedVersionStore,
                                          VersionStore)
@@ -60,14 +61,24 @@ class SingleNodeHTAP:
 
     # OLAP path -------------------------------------------------------------
     def refresh_rss(self) -> RssSnapshot:
-        """RSS construction invoker: replay own WAL, rebuild RSS (Sec 5.2);
-        with a paged mirror, also advance the device store to the same LSN
-        under the pinned-reader GC floor."""
+        """RSS construction invoker: replay the WAL delta and advance the
+        incrementally-maintained RSS — O(records since the last round), not
+        O(history) (Sec 5.2).  With a paged mirror, also advance the device
+        store to the same LSN under the pinned-reader GC floor.  Afterwards,
+        bound the bookkeeping: prune RSS per-txn state below the oldest
+        pinned PRoT snapshot and recycle the WAL prefix every consumer has
+        applied."""
         self.rss_manager.catch_up(self.engine.wal)
         snap = self.rss_manager.construct()
         if self.mirror is not None:
             self.mirror.catch_up(self.engine.wal,
                                  gc_floor=self.prot.gc_floor_seq())
+        self.rss_manager.gc(keep_lsn=self.prot.gc_floor(),
+                            keep_seq=self.prot.gc_floor_seq())
+        consumed = self.rss_manager.applied_lsn
+        if self.mirror is not None:
+            consumed = min(consumed, self.mirror.applied_lsn)
+        self.engine.wal.truncate(consumed)
         return snap
 
     def olap_begin(self) -> Optional[Txn]:
@@ -87,14 +98,23 @@ class SingleNodeHTAP:
 
     def olap_scan(self, t: Txn, keys: Sequence[str]) -> list[Any]:
         """Batched OLAP scan: ONE VersionStore.scan for the key sequence.
-        Protected readers are served from the paged mirror when present."""
+        Protected readers are served from the paged mirror when present
+        (read-set recording included: the mirror resolves writers in the
+        same vectorized pass)."""
         if self.paged_store is not None and t.rss is not None:
             self.engine._check_active(t)
-            vals = self.paged_store.scan_members(keys, t.rss)
+            vals, writers = self.paged_store.scan_with_writers(keys, t.rss)
+            self.engine.record_scan(t, keys, writers)
         else:
             vals = self.engine.scan(t, keys)
         if self.check_scans:
-            oracle = [self.engine.read(t, k) for k in keys]
+            # oracle reads bypass history recording: the scan above already
+            # recorded the read set, and the check must not double it
+            hist, self.engine.history = self.engine.history, None
+            try:
+                oracle = [self.engine.read(t, k) for k in keys]
+            finally:
+                self.engine.history = hist
             assert vals == oracle, (vals, oracle)
         return vals
 
@@ -136,7 +156,6 @@ class Replica:
         self.version_store: VersionStore = ChainVersionStore(self.store)
         self.applied_lsn = 0
         self.applied_seq = 0          # commit-seq horizon for SI readers
-        self._commit_seq = 0
         self.with_rss = with_rss
         self.check_scans = check_scans
         self.rss_manager = RSSManager() if with_rss else None
@@ -163,15 +182,19 @@ class Replica:
             if self.mirror is not None:
                 self.mirror.apply(rec, gc_floor=gc_floor)
             if rec.type == "commit":
-                self._commit_seq = rec.seq if rec.seq else \
-                    self._commit_seq + 1
+                # the shared WAL commit clock (effective_commit_seq), so
+                # manager/mirror/store version stamps agree and installs
+                # stay strictly monotone even across mixed record kinds
+                seq = effective_commit_seq(self.applied_seq, rec.seq)
                 for key, value in rec.writes:
-                    self.store.chain(key).install(self._commit_seq, rec.txn,
-                                                  value)
-                self.applied_seq = self._commit_seq
+                    self.store.chain(key).install(seq, rec.txn, value)
+                self.applied_seq = seq
             n += 1
         if self.rss_manager is not None and n:
             self.rss_manager.construct()
+            # bound replica-side RSS bookkeeping by the active/pinned window
+            self.rss_manager.gc(keep_lsn=self.prot.gc_floor(),
+                                keep_seq=self.prot.gc_floor_seq())
         return n
 
     # reader snapshots -------------------------------------------------------
@@ -225,8 +248,12 @@ class MultiNodeHTAP:
         return self.primary.begin(read_only=read_only)
 
     def ship_log(self, *, max_records: int = 0) -> int:
-        """One asynchronous replication round."""
-        return self.replica.catch_up(self.primary, max_records=max_records)
+        """One asynchronous replication round; afterwards the primary
+        recycles the WAL prefix the replica has applied (bounded log
+        state)."""
+        n = self.replica.catch_up(self.primary, max_records=max_records)
+        self.primary.wal.truncate(self.replica.applied_lsn)
+        return n
 
     def olap_snapshot(self):
         if self.olap_mode == "ssi+si":

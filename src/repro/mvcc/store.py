@@ -44,11 +44,14 @@ class VersionChain:
         i = bisect_right(seqs, snapshot_seq) - 1
         return self.versions[max(i, 0)]
 
-    def visible_in(self, member: Callable[[int], bool]) -> Version:
+    def visible_in(self, member: Callable[[int, int], bool]) -> Version:
         """RSS read protocol: newest version whose writer is in the snapshot
-        set (walk newest-to-oldest; RSS closure guarantees consistency)."""
+        set (walk newest-to-oldest; RSS closure guarantees consistency).
+        `member` is called with (writer txn id, commit seq) — the seq lets
+        compressed snapshots resolve floor-covered members without per-txn
+        bookkeeping (`RssSnapshot.visible`)."""
         for v in reversed(self.versions):
-            if v.writer == 0 or member(v.writer):
+            if v.writer == 0 or member(v.writer, v.commit_seq):
                 return v
         return self.versions[0]
 

@@ -37,7 +37,7 @@ from typing import Any, Iterable, Sequence
 import numpy as np
 
 from ..core.replica import RssSnapshot
-from ..core.wal import Wal, WalRecord
+from ..core.wal import Wal, WalRecord, effective_commit_seq
 
 # payload tags (element 0 of every page payload)
 TAG_INIT = 0        # never-written page: decodes to the initial value 0
@@ -98,12 +98,12 @@ class PagedMirror:
         self.page_elems = page_elems
         self.data = np.zeros((capacity, slots, page_elems), np.int32)
         self.ts = np.zeros((capacity, slots), np.int32)
+        self.writer = np.zeros((capacity, slots), np.int32)  # txn per slot
         self.page_of: dict[str, int] = {}
         self.keys: list[str] = []
         self.applied_lsn = 0
         self.commit_seq: dict[int, int] = {}   # txn -> commit seq
         self.watermark = 0                     # newest applied commit seq
-        self._seq_counter = 0
 
     # ----------------------------------------------------------- page alloc
     @property
@@ -118,12 +118,14 @@ class PagedMirror:
         if page == self.data.shape[0]:         # grow by doubling
             self.data = np.concatenate([self.data, np.zeros_like(self.data)])
             self.ts = np.concatenate([self.ts, np.zeros_like(self.ts)])
+            self.writer = np.concatenate([self.writer,
+                                          np.zeros_like(self.writer)])
         self.page_of[key] = page
         self.keys.append(key)
         return page
 
     # -------------------------------------------------------------- publish
-    def _publish(self, page: int, payload: np.ndarray, seq: int,
+    def _publish(self, page: int, payload: np.ndarray, seq: int, writer: int,
                  gc_floor: int) -> None:
         """numpy twin of `paged.publish_page`: recycle the oldest slot, but
         never the newest slot at-or-below gc_floor (a pinned reader may still
@@ -136,6 +138,7 @@ class PagedMirror:
         victim = int(order.argmin())
         self.data[page, victim] = payload
         self.ts[page, victim] = seq
+        self.writer[page, victim] = writer
 
     # --------------------------------------------------------------- replay
     def apply(self, rec: WalRecord, *, gc_floor: int = 0) -> bool:
@@ -146,14 +149,15 @@ class PagedMirror:
         self.applied_lsn = rec.lsn
         if rec.type != "commit":
             return False
-        self._seq_counter += 1
-        seq = rec.seq if rec.seq else self._seq_counter
+        # the shared WAL commit clock (effective_commit_seq), so member-ts
+        # mapping and mirrored version stamps never diverge from RSSManager
+        seq = effective_commit_seq(self.watermark, rec.seq)
         self.commit_seq[rec.txn] = seq
-        self.watermark = max(self.watermark, seq)
+        self.watermark = seq
         for key, value in rec.writes:
             page = self._ensure_page(key)
             self._publish(page, encode_value(value, self.page_elems), seq,
-                          gc_floor)
+                          rec.txn, gc_floor)
         return bool(rec.writes)
 
     def catch_up(self, wal: Wal, *, gc_floor: int = 0) -> int:
@@ -166,28 +170,46 @@ class PagedMirror:
 
     # ------------------------------------------------------ batched reads
     def member_seqs_for(self, snap: RssSnapshot) -> np.ndarray:
-        """Sorted member commit seqs of an exported snapshot (the member-ts
-        array the rss_gather kernel takes)."""
+        """Sorted member commit seqs ABOVE the snapshot's floor (with
+        `snap.floor_seq`, the member-ts state the rss_gather kernel takes).
+        Compressed snapshots carry their own seqs; explicit-set snapshots
+        map `txns` through the mirror's commit-seq bookkeeping."""
+        if snap.member_seqs is not None:
+            return np.asarray(snap.member_seqs, np.int32)
         seqs = [self.commit_seq[t] for t in snap.txns if t in self.commit_seq]
         return np.asarray(sorted(seqs), np.int32)
 
-    def _visible_rows(self, rows: np.ndarray, mask_fn) -> np.ndarray:
-        """Resolve visibility for a batch of pages: [n] payload rows."""
+    def _visible_slots(self, rows: np.ndarray, mask_fn) -> np.ndarray:
+        """Resolve visibility for a batch of pages: [n] slot indices."""
         ts = self.ts[rows]                                  # [n, K]
         masked = mask_fn(ts)
-        slot = masked.argmax(1)                             # first max: ties
-        return self.data[rows, slot]                        # toward slot 0
+        return masked.argmax(1)                             # first max: ties
+                                                            # toward slot 0
 
-    def _scan(self, keys: Sequence[str], mask_fn) -> list[Any]:
+    def _scan(self, keys: Sequence[str], mask_fn, *,
+              with_writers: bool = False):
         pages = np.asarray([self.page_of.get(k, -1) for k in keys],
                            np.int64)
         out: list[Any] = [0] * len(keys)
+        writers = [0] * len(keys)
         hit = np.nonzero(pages >= 0)[0]
         if hit.size:
-            payloads = self._visible_rows(pages[hit], mask_fn)
-            for i, row in zip(hit, payloads):
+            rows = pages[hit]
+            slot = self._visible_slots(rows, mask_fn)
+            payloads = self.data[rows, slot]
+            for i, row, wtr in zip(hit, payloads, self.writer[rows, slot]):
                 out[int(i)] = decode_value(row)
-        return out
+                writers[int(i)] = int(wtr)
+        return (out, writers) if with_writers else out
+
+    @staticmethod
+    def _member_mask(snap: RssSnapshot, members: np.ndarray):
+        """Slot visibility under a compressed snapshot: initial (ts == 0),
+        floor-covered (ts <= floor_seq), or an explicit above-floor
+        member."""
+        floor = snap.floor_seq
+        return lambda ts: np.where(
+            (ts <= floor) | np.isin(ts, members), ts, -1)
 
     def scan_at(self, keys: Sequence[str], watermark: int) -> list[Any]:
         """SI-V batched snapshot scan: one vectorized visibility pass."""
@@ -197,10 +219,20 @@ class PagedMirror:
     def scan_members(self, keys: Sequence[str],
                      snap: RssSnapshot) -> list[Any]:
         """RSS membership batched scan (empty member set -> initial slots)."""
-        members = self.member_seqs_for(snap)
         return self._scan(
-            keys,
-            lambda ts: np.where((ts == 0) | np.isin(ts, members), ts, -1))
+            keys, self._member_mask(snap, self.member_seqs_for(snap)))
+
+    def scan_with_writers(self, keys: Sequence[str], snapshot) \
+            -> tuple[list[Any], list[int]]:
+        """Batched scan returning (values, writer txn ids) — the writers
+        feed read-set recording on the engine's batched scan path."""
+        if isinstance(snapshot, RssSnapshot):
+            mask = self._member_mask(snapshot,
+                                     self.member_seqs_for(snapshot))
+        else:
+            wm = int(snapshot)
+            mask = lambda ts: np.where(ts <= wm, ts, -1)
+        return self._scan(keys, mask, with_writers=True)
 
     def read_at(self, key: str, watermark: int) -> Any:
         return self.scan_at([key], watermark)[0]

@@ -49,26 +49,33 @@ def snapshot_read_ref(store: dict, watermark: jax.Array) -> jax.Array:
         store["data"], idx[:, None, None], axis=1)[:, 0]
 
 
-def visible_slots_members(ts: jax.Array, member_ts: jax.Array) -> jax.Array:
+def visible_slots_members(ts: jax.Array, member_ts: jax.Array,
+                          floor: jax.Array | int = 0) -> jax.Array:
     """RSS-set variant: member_ts is a sorted [M] array of commit timestamps
-    of transactions inside the RSS; a slot is visible iff its ts is 0
-    (initial) or a member.  Returns the newest visible slot per page.
+    of RSS members ABOVE the snapshot's floor; a slot is visible iff its ts
+    is at-or-below `floor` (0 = initial versions only — every committed
+    version at seq <= floor belongs to a floor-covered member) or an
+    explicit member.  Returns the newest visible slot per page.
 
-    An empty RSS (M == 0) resolves every page to its initial (ts == 0) slot:
-    searchsorted/clip/take on a zero-length array would index garbage, so
-    membership degenerates to the ts == 0 test alone."""
+    The floor is the compressed-snapshot watermark of `RssSnapshot`: it
+    keeps the member array bounded by the concurrent window instead of
+    growing with history.  An empty member array (M == 0) with floor 0
+    resolves every page to its initial (ts == 0) slot: searchsorted/clip/
+    take on a zero-length array would index garbage, so membership
+    degenerates to the prefix test alone."""
     if member_ts.shape[0] == 0:
-        is_member = ts == 0
+        is_member = ts <= floor
     else:
         pos = jnp.searchsorted(member_ts, ts)
         pos = jnp.clip(pos, 0, member_ts.shape[0] - 1)
-        is_member = (jnp.take(member_ts, pos) == ts) | (ts == 0)
+        is_member = (jnp.take(member_ts, pos) == ts) | (ts <= floor)
     masked = jnp.where(is_member, ts, -1)
     return jnp.argmax(masked, axis=-1).astype(jnp.int32)
 
 
-def snapshot_read_members(store: dict, member_ts: jax.Array) -> jax.Array:
-    idx = visible_slots_members(store["ts"], member_ts)
+def snapshot_read_members(store: dict, member_ts: jax.Array,
+                          floor: jax.Array | int = 0) -> jax.Array:
+    idx = visible_slots_members(store["ts"], member_ts, floor)
     return jnp.take_along_axis(
         store["data"], idx[:, None, None], axis=1)[:, 0]
 

@@ -44,6 +44,9 @@ class VersionStore(Protocol):
 
     def scan(self, keys: Sequence[str], snapshot: Snapshot) -> list[Any]: ...
 
+    def scan_with_writers(self, keys: Sequence[str], snapshot: Snapshot) \
+        -> tuple[list[Any], list[int]]: ...
+
 
 class _ScanDispatch:
     def scan(self, keys: Sequence[str], snapshot: Snapshot) -> list[Any]:
@@ -69,23 +72,36 @@ class ChainVersionStore(_ScanDispatch):
         return ch.visible_in(snap.visible).value if ch is not None else 0
 
     def scan_at(self, keys: Sequence[str], watermark: int) -> list[Any]:
-        chains = self.store.chains
-        out = []
-        for key in keys:
-            ch = chains.get(key)
-            out.append(ch.visible_at(watermark).value if ch is not None
-                       else 0)
-        return out
+        return self.scan_with_writers(keys, watermark)[0]
 
     def scan_members(self, keys: Sequence[str],
                      snap: RssSnapshot) -> list[Any]:
+        return self.scan_with_writers(keys, snap)[0]
+
+    def scan_with_writers(self, keys: Sequence[str], snapshot: Snapshot) \
+            -> tuple[list[Any], list[int]]:
+        """Batched scan returning (values, writer txn ids) in one chain
+        walk — the single visibility-resolution loop `scan_at` and
+        `scan_members` delegate to; the writers let the engine record the
+        read set without a second per-key pass."""
         chains = self.store.chains
-        visible = snap.visible
-        out = []
+        if isinstance(snapshot, RssSnapshot):
+            visible = snapshot.visible
+            resolve = lambda ch: ch.visible_in(visible)
+        else:
+            wm = int(snapshot)
+            resolve = lambda ch: ch.visible_at(wm)
+        vals, writers = [], []
         for key in keys:
             ch = chains.get(key)
-            out.append(ch.visible_in(visible).value if ch is not None else 0)
-        return out
+            if ch is None:
+                vals.append(0)
+                writers.append(0)
+            else:
+                v = resolve(ch)
+                vals.append(v.value)
+                writers.append(v.writer)
+        return vals, writers
 
 
 class PagedVersionStore(_ScanDispatch):
@@ -108,3 +124,7 @@ class PagedVersionStore(_ScanDispatch):
     def scan_members(self, keys: Sequence[str],
                      snap: RssSnapshot) -> list[Any]:
         return self.mirror.scan_members(keys, snap)
+
+    def scan_with_writers(self, keys: Sequence[str], snapshot: Snapshot) \
+            -> tuple[list[Any], list[int]]:
+        return self.mirror.scan_with_writers(keys, snapshot)

@@ -79,8 +79,14 @@ class VersionedParamStore:
 
     def _newest_visible(self, snap: RssSnapshot) -> Optional[_Slot]:
         best = None
+        commit_seq = self.rss.commit_seq
         for s in self.slots:
-            if s.valid and (s.txn_id == 0 or snap.visible(s.txn_id)):
+            # compressed snapshots fold Clear members into floor_seq, so
+            # membership needs the writer's commit seq (resolved through
+            # this store's own RSS manager — never GC'd here)
+            if s.valid and (s.txn_id == 0
+                            or snap.visible(s.txn_id,
+                                            commit_seq.get(s.txn_id))):
                 if best is None or s.commit_lsn > best.commit_lsn:
                     best = s
         return best

@@ -152,6 +152,49 @@ def test_gc_floor_seq_tracks_minimum_pin():
     htap.prot.release(rid2)
 
 
+@pytest.mark.parametrize("seed", range(4))
+def test_sustained_load_state_bounded_with_pins(seed):
+    """Acceptance: under a sustained workload with refresh_rss (state GC +
+    WAL truncation) every round, RSSManager per-txn state, engine.txns and
+    the primary WAL stay bounded by the active/pinned window — and no
+    pinned reader's reads change."""
+    rng = random.Random(seed)
+    htap = SingleNodeHTAP("ssi+rss")
+    eng = htap.engine
+    keys = [f"k{i}" for i in range(6)]
+    pins = {}
+    peaks = {"rss": 0, "txns": 0, "wal": 0}
+    for step in range(1200):
+        t = eng.begin()
+        for key in rng.sample(keys, rng.randint(1, 2)):
+            eng.write(t, key, rng.randrange(1000))
+        try:
+            eng.commit(t)
+        except Exception:
+            pass
+        if step % 7 == 0:
+            htap.refresh_rss()
+        if rng.random() < 0.1 and len(pins) < 3:
+            rid, snap = htap.prot.acquire()
+            pins[rid] = (step, snap,
+                         {k: eng.version_store.read_members(k, snap)
+                          for k in keys})
+        for rid in [r for r, (born, _, _) in pins.items()
+                    if step - born > 25 or rng.random() < 0.05]:
+            htap.prot.release(rid)
+            del pins[rid]
+        peaks["rss"] = max(peaks["rss"], htap.rss_manager.tracked_txns())
+        peaks["txns"] = max(peaks["txns"], len(eng.txns))
+        peaks["wal"] = max(peaks["wal"], len(eng.wal.records))
+        for rid, (_, snap, expected) in pins.items():
+            got = {k: eng.version_store.read_members(k, snap) for k in keys}
+            assert got == expected, (seed, step, rid)
+    # bounded by the pinned/active window, not the 1200-commit history
+    assert peaks["rss"] < 120, peaks
+    assert peaks["txns"] < 120, peaks
+    assert peaks["wal"] < 120, peaks
+
+
 def test_prune_versions_respects_floor_visibility():
     """Direct contract: prune at a snapshot's floor keeps the version the
     snapshot resolves to on every key (prefix-safety of floor_seq)."""

@@ -15,9 +15,10 @@ from repro.tensorstore import (init_store, publish_page,
                                snapshot_read_members, visible_slots_members)
 
 
-def _python_oracle(data, ts, members):
-    """Independent per-page scan: newest slot with ts==0 or ts in members,
-    ties toward the lowest slot index; all-invisible pages -> slot 0."""
+def _python_oracle(data, ts, members, floor=0):
+    """Independent per-page scan: newest slot with ts<=floor or ts in
+    members, ties toward the lowest slot index; all-invisible pages ->
+    slot 0."""
     P, K, _ = data.shape
     mset = set(int(m) for m in members)
     out = np.empty((P, data.shape[2]), data.dtype)
@@ -25,7 +26,7 @@ def _python_oracle(data, ts, members):
         best, best_ts = 0, -1
         for k in range(K):
             t = int(ts[p, k])
-            if (t == 0 or t in mset) and t > best_ts:
+            if (t <= floor or t in mset) and t > best_ts:
                 best, best_ts = k, t
         out[p] = data[p, best]
     return out
@@ -91,3 +92,46 @@ def test_member_read_skips_non_member_version():
     assert float(out[0, 0]) == 1.0
     ref = snapshot_read_members(store, members)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("P,K,E", SHAPES[:2])
+@pytest.mark.parametrize("M", [0, 5])
+@pytest.mark.parametrize("floor", [0, 13, 59])
+def test_floor_compressed_membership(P, K, E, M, floor):
+    """Compressed-snapshot visibility: ts <= floor is always a member's
+    version, with the explicit member array only covering the above-floor
+    window — kernel == jnp oracle == python scan."""
+    rng = np.random.default_rng(P + M + floor)
+    data = rng.standard_normal((P, K, E)).astype(np.float32)
+    ts = rng.integers(0, 60, (P, K)).astype(np.int32)
+    members = np.sort(rng.choice(np.arange(floor + 1, floor + 60),
+                                 size=M, replace=False)).astype(np.int32)
+    out = np.asarray(rss_gather(jnp.asarray(data), jnp.asarray(ts),
+                                jnp.asarray(members), floor))
+    ref = np.asarray(rss_gather_ref(jnp.asarray(data), jnp.asarray(ts),
+                                    jnp.asarray(members), floor))
+    py = _python_oracle(data, ts, members, floor)
+    np.testing.assert_array_equal(out, ref)
+    np.testing.assert_array_equal(out, py)
+    # paged.py host path agrees
+    idx = visible_slots_members(jnp.asarray(ts), jnp.asarray(members), floor)
+    np.testing.assert_array_equal(
+        np.take_along_axis(data, np.asarray(idx)[:, None, None], 1)[:, 0],
+        py)
+
+
+def test_floor_equivalence_to_explicit_members():
+    """A floor is exactly equivalent to enumerating every committed seq at
+    or below it in the member array (the uncompressed representation)."""
+    rng = np.random.default_rng(3)
+    data = rng.standard_normal((16, 4, 64)).astype(np.float32)
+    ts = rng.integers(0, 40, (16, 4)).astype(np.int32)
+    above = np.asarray([25, 31, 39], np.int32)
+    floor = 20
+    explicit = np.asarray(sorted(set(range(1, floor + 1)) | set(above)),
+                          np.int32)
+    a = np.asarray(rss_gather(jnp.asarray(data), jnp.asarray(ts),
+                              jnp.asarray(above), floor))
+    b = np.asarray(rss_gather(jnp.asarray(data), jnp.asarray(ts),
+                              jnp.asarray(explicit), 0))
+    np.testing.assert_array_equal(a, b)

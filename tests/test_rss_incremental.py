@@ -1,0 +1,236 @@
+"""Incremental RSS construction == the batch oracle, under lag and GC.
+
+The tentpole contract: `RSSManager.construct()` (incremental: begin-LSN
+heap Done/Clear tracking + `core.rss.IncrementalRss` delta application +
+compressed floor/above-floor snapshots) must produce exactly the same
+membership, floor and member-seq export as the O(history) batch path
+(`construct_batch`, i.e. Algorithm 1 via `construct_rss_ssi` over the full
+prefix) at EVERY replication round — including batched/lagged shipping
+(rounds that split commit/deps pairs) and resumption after state GC.
+
+Seeded-random stream tests always run; hypothesis widens the search when
+available (same pattern as tests/test_gc_pins.py).
+"""
+
+import random
+
+import pytest
+
+from repro.core import (IncrementalRss, PRoTManager, RSSManager, Wal,
+                        advance, construct_rss_ssi)
+from repro.mvcc import Engine, SerializationFailure, Status
+
+
+# --------------------------------------------------------------- generators
+def random_wal_stream(rng, steps=300, *, legacy_prob=0.0):
+    """Engine-shaped random WAL: begins/commits/aborts with deps logged
+    immediately after the reader's commit, listing only writers that were
+    concurrent with it and not yet aborted (the invariants `Engine.commit`
+    guarantees)."""
+    wal = Wal()
+    active = []
+    tid = 0
+    for _ in range(steps):
+        act = rng.random()
+        if act < 0.35 or not active:
+            tid += 1
+            wal.log_begin(tid)
+            active.append(tid)
+        elif act < 0.75:
+            t = active.pop(rng.randrange(len(active)))
+            seq = 0 if rng.random() < legacy_prob else wal.head_lsn + 1
+            wal.log_commit(t, seq=seq)
+            if active and rng.random() < 0.6:
+                k = rng.randint(1, min(3, len(active)))
+                wal.log_deps(t, sorted(rng.sample(active, k)))
+        else:
+            t = active.pop(rng.randrange(len(active)))
+            wal.log_abort(t)
+    return wal
+
+
+def full_members(manager, snap):
+    """Explicit membership of a compressed snapshot, resolved through an
+    un-GC'd manager's commit-seq bookkeeping."""
+    return {t for t, s in manager.commit_seq.items()
+            if s <= snap.floor_seq} | set(snap.txns)
+
+
+def check_stream(seed, *, gc_prob=0.0, legacy_prob=0.0, pin_prob=0.0):
+    rng = random.Random(seed)
+    wal = random_wal_stream(rng, legacy_prob=legacy_prob)
+    inc = RSSManager()               # incremental, possibly GC'd
+    ora = RSSManager()               # oracle: full state, batch construct
+    prot = PRoTManager(inc)
+    pins = []
+    prev_floor = 0
+    while inc.applied_lsn < wal.head_lsn:
+        batch = rng.randint(1, 12)   # lagged shipping, splits commit/deps
+        for rec in wal.tail(inc.applied_lsn):
+            inc.apply(rec)
+            ora.apply(rec)
+            batch -= 1
+            if batch <= 0:
+                break
+        s_inc = inc.construct()
+        s_ora = ora.construct_batch()
+        assert s_inc.floor_seq == s_ora.floor_seq, seed
+        assert s_inc.member_seqs == s_ora.member_seqs, seed
+        assert s_inc.floor_seq >= prev_floor, "floor_seq must be monotone"
+        prev_floor = s_inc.floor_seq
+        want = full_members(ora, s_ora)
+        for t in list(ora.committed):
+            assert inc.is_member(t, s_inc) == (t in want), (seed, t)
+        if pin_prob and rng.random() < pin_prob:
+            pins.append(prot.acquire()[0])
+        if pins and rng.random() < 0.3:
+            prot.release(pins.pop(rng.randrange(len(pins))))
+        if gc_prob and rng.random() < gc_prob:
+            inc.gc(keep_lsn=prot.gc_floor(), keep_seq=prot.gc_floor_seq())
+    # post-GC resumption reached the same final state
+    s_inc, s_ora = inc.construct(), ora.construct_batch()
+    assert s_inc.floor_seq == s_ora.floor_seq
+    assert s_inc.member_seqs == s_ora.member_seqs
+
+
+# ------------------------------------------------------------ always-run
+@pytest.mark.parametrize("seed", range(12))
+def test_incremental_equals_batch_oracle(seed):
+    check_stream(seed)
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_incremental_equals_oracle_with_gc_and_pins(seed):
+    check_stream(seed, gc_prob=0.5, pin_prob=0.3)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_incremental_equals_oracle_with_legacy_records(seed):
+    check_stream(seed, legacy_prob=0.3, gc_prob=0.3)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_state_bounded_and_drains(seed):
+    """After sustained load + GC, retained per-txn state is bounded by the
+    window concurrent with the oldest active transaction — and drains to
+    zero once every transaction settles."""
+    rng = random.Random(seed)
+    wal = Wal()
+    active = []
+    tid = 0
+    m = RSSManager()
+    peak = 0
+    for _ in range(2000):
+        act = rng.random()
+        if act < 0.4 or not active:
+            tid += 1
+            wal.log_begin(tid); active.append(tid)
+        elif act < 0.85:
+            t = active.pop(rng.randrange(len(active)))
+            wal.log_commit(t, seq=wal.head_lsn + 1)
+            if active and rng.random() < 0.5:
+                wal.log_deps(t, sorted(rng.sample(active, 1)))
+        else:
+            t = active.pop(rng.randrange(len(active)))
+            wal.log_abort(t)
+        if rng.random() < 0.2:
+            m.catch_up(wal); m.construct(); m.gc()
+            peak = max(peak, m.tracked_txns())
+    for t in active:
+        wal.log_abort(t)
+    m.catch_up(wal); m.construct(); m.gc()
+    assert m.tracked_txns() == 0
+    assert len(m.commit_order) == 0 and not m.rw_out
+    assert peak < 2000 // 4          # far below total history
+
+
+def test_incremental_from_engine_wal_matches_oracle():
+    """End-to-end: the incremental manager replaying a real SSI engine's WAL
+    agrees with the batch oracle at every replication round."""
+    rng = random.Random(11)
+    eng = Engine("ssi")
+    sessions = [None] * 4
+    inc, ora = RSSManager(), RSSManager()
+    prev_floor = 0
+    for step in range(400):
+        i = rng.randrange(4)
+        t = sessions[i]
+        try:
+            if t is None or t.status != Status.ACTIVE:
+                sessions[i] = eng.begin()
+            elif rng.random() < 0.5:
+                eng.read(t, rng.choice("abcde"))
+            elif rng.random() < 0.7:
+                eng.write(t, rng.choice("abcde"), rng.randrange(100))
+            else:
+                eng.commit(t)
+                sessions[i] = None
+        except SerializationFailure:
+            sessions[i] = None
+        if step % 17 == 0:
+            inc.catch_up(eng.wal); ora.catch_up(eng.wal)
+            s_inc, s_ora = inc.construct(), ora.construct_batch()
+            assert s_inc.floor_seq == s_ora.floor_seq
+            assert s_inc.member_seqs == s_ora.member_seqs
+            assert s_inc.floor_seq >= prev_floor
+            prev_floor = s_inc.floor_seq
+            inc.gc()
+
+
+def test_deps_after_reader_gc_is_dropped_without_leak():
+    """Lag-split shipping: a reader's commit lands in one batch, state GC
+    runs, then its deps record arrives.  The reader is already a
+    floor-covered member; the record must be dropped, not stashed forever
+    in IncrementalRss._pending_pull (bounded-state leak)."""
+    wal = Wal()
+    wal.log_begin(1); wal.log_commit(1, seq=1)
+    wal.log_begin(2); wal.log_commit(2, seq=2)     # the reader
+    m = RSSManager()
+    m.catch_up(wal)
+    m.construct()
+    m.gc()                                         # both pruned (all Clear)
+    assert m.tracked_txns() == 0
+    wal.log_deps(2, [1])                           # arrives after the GC
+    m.catch_up(wal)
+    snap = m.construct()
+    assert m.is_member(1, snap) and m.is_member(2, snap)
+    assert not m._inc._pending_pull                # nothing stashed
+    assert m.tracked_txns() == 0
+
+
+# --------------------------------------------------- IncrementalRss direct
+@pytest.mark.parametrize("seed", range(10))
+def test_advance_matches_construct_rss_ssi(seed):
+    """`advance` deltas reproduce Algorithm 1's batch result regardless of
+    event interleaving (edges before/after commits, late clears)."""
+    rng = random.Random(seed)
+    txns = list(range(1, 30))
+    committed = set(rng.sample(txns, 18))
+    clear = set(rng.sample(sorted(committed), 9))
+    edges = [(rng.choice(txns), rng.choice(txns)) for _ in range(25)]
+    events = ([("c", t) for t in committed] + [("k", t) for t in clear]
+              + [("e", e) for e in edges])
+    rng.shuffle(events)
+    state = IncrementalRss()
+    added = set()
+    for kind, payload in events:
+        added |= advance(state,
+                         committed=[payload] if kind == "c" else (),
+                         clear=[payload] if kind == "k" else (),
+                         edges=[payload] if kind == "e" else ())
+    want = construct_rss_ssi(clear, committed, edges)
+    assert state.rss == want == added
+
+
+# ------------------------------------------------------------- hypothesis
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 10_000), gc=st.booleans(),
+           legacy=st.booleans())
+    def test_incremental_equals_oracle_hypothesis(seed, gc, legacy):
+        check_stream(seed, gc_prob=0.5 if gc else 0.0,
+                     legacy_prob=0.3 if legacy else 0.0, pin_prob=0.2)
+except ImportError:                      # pragma: no cover
+    pass
