@@ -30,7 +30,7 @@ import random
 import time
 
 from repro.core import RSSManager, Wal
-from repro.mvcc import SingleNodeHTAP, run_single_node
+from repro.mvcc import SingleNodeHTAP, run_multi_node, run_single_node
 
 
 def freshness_sweep():
@@ -137,6 +137,69 @@ def construct_cost_sweep(history_lengths=(1000, 2000, 4000, 8000),
     return out
 
 
+def replica_lag_sweep(rounds: int = 1000, seed: int = 9) -> dict:
+    """Replica-cluster freshness/throughput: N replicas × ship interval ×
+    routing policy, on the skewed-lag multinode driver (replica i ships
+    every `ship_every * (1 + i)` rounds).
+
+    Per configuration: OLAP commits + qps (logical throughput), wall time
+    (real throughput — ship-then-serve rounds are paid here), the mean
+    replication lag of served snapshots (freshness), ship-then-serve count,
+    and the per-replica serve distribution.  The headline is the
+    bounded-staleness trade: versus round_robin at the laggiest
+    configuration it serves far fresher snapshots (lag ratio) at a
+    wall-clock cost (overhead pct)."""
+    policies = (("freshest", False), ("round_robin", False),
+                ("bounded_staleness", True))   # bounded routes with the
+    #                                            workload's freshness hints
+    sweep = []
+    for policy, hints in policies:
+        for n_replicas in (1, 2, 4):
+            for ship_every in (20, 100):
+                t0 = time.perf_counter()
+                m = run_multi_node(
+                    olap_mode="ssi+rss", oltp_clients=4, olap_clients=2,
+                    rounds=rounds, seed=seed, olap_scan=True,
+                    ship_every=ship_every, n_replicas=n_replicas,
+                    route_policy=policy, max_staleness=40, ship_skew=1,
+                    freshness_hints=hints)
+                sweep.append({
+                    "policy": policy,
+                    "n_replicas": n_replicas,
+                    "ship_every": ship_every,
+                    "wall_s": round(time.perf_counter() - t0, 3),
+                    "olap_commits": m.olap_commits,
+                    "olap_qps_per_round": round(m.olap_qps(), 6),
+                    "avg_lag_records": m.olap_avg_lag_records,
+                    "ship_then_serve": m.olap_ship_then_serve,
+                    "served_by": m.olap_served_by,
+                    "max_wal_records": m.max_wal_records,
+                })
+    def pick(policy, n, ship):
+        return next(r for r in sweep if r["policy"] == policy
+                    and r["n_replicas"] == n and r["ship_every"] == ship)
+    laggy_rr = pick("round_robin", 4, 100)
+    laggy_bs = pick("bounded_staleness", 4, 100)
+    acquires = sum(laggy_bs["served_by"])
+    return {
+        "rounds": rounds,
+        "sweep": sweep,
+        "headline": {
+            # bounded staleness buys freshness (lag ratio vs round_robin)...
+            "bounded_vs_round_robin_lag_ratio": round(
+                laggy_bs["avg_lag_records"] /
+                max(laggy_rr["avg_lag_records"], 1e-9), 3),
+            # ... and pays in throughput: read-path acquisitions stall on a
+            # synchronous replication round when no replica meets the bound
+            "bounded_sync_ship_rounds": laggy_bs["ship_then_serve"],
+            "bounded_sync_ship_per_acquire": round(
+                laggy_bs["ship_then_serve"] / max(acquires, 1), 3),
+            "bounded_wall_ratio_vs_round_robin": round(
+                laggy_bs["wall_s"] / max(laggy_rr["wall_s"], 1e-9), 3),
+        },
+    }
+
+
 def scan_path_report(rounds: int = 2000, seed: int = 7) -> dict:
     """Batched-scan vs per-key OLAP path on the single-node RSS system:
     same seed, same workload, same round budget."""
@@ -158,8 +221,24 @@ def scan_path_report(rounds: int = 2000, seed: int = 7) -> dict:
     return out
 
 
+def print_replica_lag_rows(lag: dict) -> None:
+    for r in lag["sweep"]:
+        print(f"replica_lag:{r['policy']}:n{r['n_replicas']}:"
+              f"s{r['ship_every']},{r['wall_s'] * 1e6:.0f},"
+              f"avg_lag={r['avg_lag_records']};"
+              f"olap_commits={r['olap_commits']};"
+              f"ship_then_serve={r['ship_then_serve']}")
+    h = lag["headline"]
+    print(f"replica_lag:headline,0,"
+          f"bounded_lag=x{h['bounded_vs_round_robin_lag_ratio']}_vs_rr;"
+          f"sync_ships={h['bounded_sync_ship_rounds']}"
+          f"({h['bounded_sync_ship_per_acquire']}/acquire);"
+          f"wall=x{h['bounded_wall_ratio_vs_round_robin']}_vs_rr")
+
+
 def main() -> None:
-    """Refresh the rss_construct section of BENCH_kernels.json in place."""
+    """Refresh the rss_construct + replica_lag sections of
+    BENCH_kernels.json in place."""
     from .persist import persist_bench_sections
 
     sweep = construct_cost_sweep()
@@ -171,7 +250,9 @@ def main() -> None:
               f"tracked={sweep['tracked_txns_batch'][n]}")
     print(f"rss_construct:growth,0,batch=x{sweep['batch_growth']};"
           f"incremental=x{sweep['incremental_growth']}")
-    path = persist_bench_sections(rss_construct=sweep)
+    lag = replica_lag_sweep()
+    print_replica_lag_rows(lag)
+    path = persist_bench_sections(rss_construct=sweep, replica_lag=lag)
     print(f"bench_kernels_json,0,{path}")
 
 

@@ -43,9 +43,14 @@ def main() -> None:
 
     # -------------------------------------------------------- freshness
     from .bench_freshness import (construct_cost_sweep, freshness_sweep,
+                                  print_replica_lag_rows, replica_lag_sweep,
                                   scan_path_report)
     for name, us, derived in freshness_sweep():
         print(f"{name},{us:.1f},{derived}")
+
+    # -------------------------------------------- replica-cluster routing
+    lag_report = replica_lag_sweep()
+    print_replica_lag_rows(lag_report)
 
     # ------------------------------------------- RSS construction cost
     construct_report = construct_cost_sweep()
@@ -76,7 +81,8 @@ def main() -> None:
     from .persist import persist_bench_sections
     out_path = persist_bench_sections(kernels=gather_kernels_report(),
                                       olap_scan_path=scan_report,
-                                      rss_construct=construct_report)
+                                      rss_construct=construct_report,
+                                      replica_lag=lag_report)
     print(f"bench_kernels_json,0,{out_path}")
 
     # --------------------------------------------------------- roofline

@@ -34,15 +34,33 @@ def model_100m() -> ModelConfig:
     )
 
 
+def model_tiny() -> ModelConfig:
+    # CI smoke shape: same code paths, seconds not minutes
+    return ModelConfig(
+        name="demo-tiny", family="dense",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=4, head_dim=32,
+        d_ff=256, vocab_size=512,
+        pattern=(LayerSpec(mixer="attn", mlp="dense"),),
+        mlp_act="swiglu", norm="rmsnorm",
+        remat="none", microbatches=1, fsdp=False,
+        param_dtype="float32", compute_dtype="float32",
+    )
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--serve-every", type=int, default=25)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny model + few steps (CI demo-rot check)")
     args = ap.parse_args()
 
-    cfg = model_100m()
+    if args.smoke:
+        args.steps, args.batch, args.seq = 10, 2, 32
+        args.serve_every = 5
+    cfg = model_tiny() if args.smoke else model_100m()
     print(f"model: {cfg.param_count()/1e6:.0f}M params")
     store = VersionedParamStore(slots=2)
     trainer = Trainer(cfg, batch=args.batch, seq_len=args.seq, store=store,

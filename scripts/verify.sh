@@ -39,8 +39,13 @@ print("kernel parity OK (version_gather, rss_gather+floor; interpret mode)")
 EOF
 
 echo
-echo "== example: paged snapshot reads on the mirrored store =="
-python examples/paged_snapshot_reads.py > /dev/null && echo "example OK"
+echo "== examples (smoke mode: demos must not rot) =="
+for ex in quickstart anomaly_demo paged_snapshot_reads cluster_fanout; do
+    python "examples/$ex.py" > /dev/null
+    echo "example OK: $ex"
+done
+python examples/htap_train_serve.py --smoke > /dev/null
+echo "example OK: htap_train_serve (--smoke)"
 
 if [[ "${1:-}" == "--bench" ]]; then
     echo

@@ -4,6 +4,7 @@ reproduced as a multi-pod JAX training/serving framework.
 Subpackages:
   core        the paper's contribution (RSS theory, Algorithm 1, SSI, WAL)
   mvcc        executable MVCC engine + HTAP architectures + CH-benchmark
+  cluster     N-way WAL fan-out replica cluster + lag-aware RSS routing
   tensorstore versioned parameter/page stores (SI-V snapshot reads)
   models      the 10 assigned architectures, config-driven
   configs     architecture registry (get_config / list_archs)

@@ -1,0 +1,142 @@
+"""N-way WAL fan-out: one primary, N log-shipping replicas (paper Sec 5.1).
+
+`ReplicaCluster` is the unit of decoupled-storage HTAP design at N > 1:
+
+  * **Fan-out** — every replica is registered as a named WAL consumer
+    (replication slot) on the primary's log; `ship(i)` replays the tail
+    into replica i (its own RSSManager, paged mirror, and PRoT pin table)
+    and acks the applied LSN back to the slot.
+  * **Bounded log** — after every ship round the primary WAL is recycled
+    up to `min_acked_lsn()`: the minimum applied LSN across ALL consumers.
+    A lagging replica holds the log; it can never be handed a recycled
+    prefix (the single-consumer truncation bug this subsystem replaces).
+  * **Routing** — snapshot acquisition goes through a `RoutingPolicy`
+    (freshest / round_robin / bounded_staleness); when no replica meets
+    the staleness bound the cluster *ships-then-serves*: one synchronous
+    replication round on the freshest replica, then serve it.
+  * **Cluster-wide GC floor** — `gc_floor_seq()` is the min over replicas
+    of min(replication horizon, oldest pinned snapshot); `gc_versions()`
+    prunes every replica's version chains under its own floor, and the
+    facade (`mvcc.htap.MultiNodeHTAP`) additionally prunes the primary
+    under min(cluster floor, active-transaction horizon).
+
+Snapshot handles are `(kind, replica_idx, reader_id, snapshot)` tuples —
+kind is "rss" (an `RssSnapshot`, PRoT-pinned) or "si" (a commit-seq
+horizon, pinned in the replica's SI pin table); `release(handle)` drops
+the pin on the replica that served it.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Iterable, Optional, Sequence, Union
+
+from .routing import Freshest, RoutingPolicy, make_policy
+
+# handle: (kind, replica_idx, reader_id, snapshot)
+SnapshotHandle = tuple
+
+
+class ReplicaCluster:
+    def __init__(self, primary, replicas: Iterable,
+                 *, policy: Union[str, RoutingPolicy] = "freshest",
+                 max_lag: int = 100) -> None:
+        """`primary` is the OLTP engine (only its `.wal` and `.seq` are
+        touched here); `replicas` are `mvcc.htap.Replica` instances (or
+        anything with the same catch_up/snapshot/release surface)."""
+        self.primary = primary
+        self.replicas = list(replicas)
+        assert self.replicas, "a cluster needs at least one replica"
+        self.policy = make_policy(policy, max_lag=max_lag)
+        self._slots: list[str] = []
+        for i, rep in enumerate(self.replicas):
+            name = primary.wal.register_consumer(f"replica{i}",
+                                                 start_lsn=rep.applied_lsn)
+            self._slots.append(name)
+        self.stats: dict[str, Any] = {
+            "served": [0] * len(self.replicas),
+            "acquires": 0,
+            "ship_then_serve": 0,
+            "lag_records_sum": 0,       # summed over served snapshots
+            "truncated_records": 0,
+        }
+
+    def __len__(self) -> int:
+        return len(self.replicas)
+
+    # ------------------------------------------------------------ lag state
+    def lag_records(self, i: int) -> int:
+        """Replication lag of replica i, in unapplied WAL records."""
+        return self.primary.wal.head_lsn - self.replicas[i].applied_lsn
+
+    def min_applied_lsn(self) -> int:
+        return min(rep.applied_lsn for rep in self.replicas)
+
+    def freshest_idx(self) -> int:
+        return Freshest().choose(self)
+
+    # -------------------------------------------------------------- fan-out
+    def ship(self, replica: Optional[int] = None, *,
+             max_records: int = 0) -> int:
+        """One replication round: replay the WAL tail into one replica
+        (or all, when `replica` is None), ack the applied LSNs, then
+        recycle the primary WAL prefix EVERY consumer has applied."""
+        idxs = range(len(self.replicas)) if replica is None else [replica]
+        n = 0
+        for i in idxs:
+            rep = self.replicas[i]
+            n += rep.catch_up(self.primary, max_records=max_records)
+            self.primary.wal.ack(self._slots[i], rep.applied_lsn)
+        self.stats["truncated_records"] += self.primary.wal.truncate()
+        return n
+
+    # -------------------------------------------------------------- routing
+    def acquire(self, *, max_lag: Optional[int] = None) -> SnapshotHandle:
+        """Route a snapshot acquisition through the policy.  When no
+        replica satisfies the staleness bound, ship-then-serve: catch the
+        freshest replica up synchronously, then serve it."""
+        idx = self.policy.choose(self, max_lag=max_lag)
+        if idx is None:
+            idx = self.freshest_idx()
+            self.ship(idx)
+            self.stats["ship_then_serve"] += 1
+        self.stats["acquires"] += 1
+        self.stats["served"][idx] += 1
+        self.stats["lag_records_sum"] += self.lag_records(idx)
+        rep = self.replicas[idx]
+        if rep.with_rss:
+            rid, snap = rep.rss_snapshot()
+            return ("rss", idx, rid, snap)
+        rid, seq = rep.si_snapshot_pinned()
+        return ("si", idx, rid, seq)
+
+    def avg_served_lag(self) -> float:
+        """Mean replication lag (WAL records) of served snapshots — the
+        cluster's freshness metric per routing policy."""
+        return self.stats["lag_records_sum"] / max(self.stats["acquires"], 1)
+
+    # ---------------------------------------------------------------- reads
+    def read(self, handle: SnapshotHandle, key: str) -> Any:
+        kind, idx, _, s = handle
+        rep = self.replicas[idx]
+        return rep.read_si(s, key) if kind == "si" else rep.read_rss(s, key)
+
+    def scan(self, handle: SnapshotHandle, keys: Sequence[str]) -> list[Any]:
+        kind, idx, _, s = handle
+        rep = self.replicas[idx]
+        return rep.scan_si(s, keys) if kind == "si" else rep.scan_rss(s, keys)
+
+    def release(self, handle: SnapshotHandle) -> None:
+        _, idx, rid, _ = handle
+        self.replicas[idx].release(rid)
+
+    # ------------------------------------------------------------------- GC
+    def gc_floor_seq(self) -> int:
+        """The cluster-wide version-GC floor (commit-seq units): the min
+        over replicas of min(replication horizon, oldest pinned
+        snapshot)."""
+        return min(rep.gc_floor_seq() for rep in self.replicas)
+
+    def gc_versions(self) -> int:
+        """Prune every replica's chain versions under its own pinned floor;
+        returns total versions dropped."""
+        return sum(rep.gc_versions() for rep in self.replicas)

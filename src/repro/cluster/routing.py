@@ -1,0 +1,113 @@
+"""Snapshot routing policies over a lag-skewed replica fleet.
+
+A decoupled-storage HTAP cluster (paper Sec 5.1 at N > 1) serves OLAP
+readers from whichever replica a *routing policy* picks.  Replicas lag the
+primary by different amounts (each ships the WAL on its own cadence), so the
+policy is where the freshness/throughput trade-off lives:
+
+  * `Freshest`          — route to the replica with the maximum applied
+                          commit horizon (minimum replication lag).  Best
+                          staleness, but concentrates the read load on one
+                          node.
+  * `RoundRobin`        — spread readers uniformly across the fleet.  Best
+                          load balance, worst-case staleness is the slowest
+                          replica's lag.
+  * `BoundedStaleness`  — serve from any replica within `max_lag` WAL
+                          records of the primary (round-robin among the
+                          eligible set, so load still spreads).  When EVERY
+                          replica is too stale the policy abstains
+                          (`choose` returns None) and the cluster falls
+                          back to ship-then-serve: synchronously catch one
+                          replica up, then serve it — freshness bought with
+                          one synchronous replication round.
+
+Policies see the cluster read-only through `lag_records(i)` /
+`replicas[i].applied_lsn`; a per-call `max_lag` (e.g. a query-class
+freshness hint from the workload) narrows ANY policy's eligible set the
+same way, so `Freshest` and `RoundRobin` also degrade to ship-then-serve
+when a hint is unsatisfiable.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Union
+
+
+class RoutingPolicy:
+    """Pick a replica index for the next snapshot acquisition, or None when
+    no replica satisfies the staleness bound (caller ships-then-serves)."""
+
+    name = "policy"
+
+    def choose(self, cluster, *, max_lag: Optional[int] = None) \
+            -> Optional[int]:
+        raise NotImplementedError
+
+    def _eligible(self, cluster, max_lag: Optional[int]) -> list[int]:
+        idxs = range(len(cluster.replicas))
+        if max_lag is None:
+            return list(idxs)
+        return [i for i in idxs if cluster.lag_records(i) <= max_lag]
+
+
+class Freshest(RoutingPolicy):
+    """Max applied commit horizon == min replication lag; ties break toward
+    the lowest replica index (deterministic)."""
+
+    name = "freshest"
+
+    def choose(self, cluster, *, max_lag: Optional[int] = None) \
+            -> Optional[int]:
+        elig = self._eligible(cluster, max_lag)
+        if not elig:
+            return None
+        return min(elig, key=lambda i: (cluster.lag_records(i), i))
+
+
+class RoundRobin(RoutingPolicy):
+    name = "round_robin"
+
+    def __init__(self) -> None:
+        self._next = 0
+
+    def choose(self, cluster, *, max_lag: Optional[int] = None) \
+            -> Optional[int]:
+        elig = self._eligible(cluster, max_lag)
+        if not elig:
+            return None
+        idx = elig[self._next % len(elig)]
+        self._next += 1
+        return idx
+
+
+class BoundedStaleness(RoundRobin):
+    """Any replica within `max_lag` WAL records of the primary may serve;
+    round-robin among the eligible set spreads load.  A per-call `max_lag`
+    (query freshness hint) overrides the policy default when tighter."""
+
+    name = "bounded_staleness"
+
+    def __init__(self, max_lag: int = 100) -> None:
+        super().__init__()
+        self.max_lag = max_lag
+
+    def choose(self, cluster, *, max_lag: Optional[int] = None) \
+            -> Optional[int]:
+        bound = self.max_lag if max_lag is None else min(self.max_lag,
+                                                         max_lag)
+        return super().choose(cluster, max_lag=bound)
+
+
+def make_policy(spec: Union[str, RoutingPolicy], *,
+                max_lag: int = 100) -> RoutingPolicy:
+    """Resolve a policy spec: an instance passes through; a name constructs
+    one ('bounded_staleness' takes `max_lag` as its default bound)."""
+    if isinstance(spec, RoutingPolicy):
+        return spec
+    if spec == "freshest":
+        return Freshest()
+    if spec == "round_robin":
+        return RoundRobin()
+    if spec == "bounded_staleness":
+        return BoundedStaleness(max_lag)
+    raise ValueError(f"unknown routing policy {spec!r}")

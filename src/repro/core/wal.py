@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import json
 from dataclasses import dataclass, field
-from typing import Iterator, Literal, Sequence
+from typing import Iterator, Literal, Optional, Sequence
 
 RecordType = Literal["begin", "commit", "abort", "deps"]
 
@@ -84,11 +84,21 @@ class Wal:
     drops it so log state stays bounded by replication lag, not history.
     LSNs keep counting from `base_lsn`; tailing below a truncated prefix is
     an error (a real system would re-seed the replica from a basebackup).
+
+    Multi-consumer accounting (replication slots): `register_consumer`
+    declares a named consumer, `ack(name, lsn)` records the prefix it has
+    durably applied, and `truncate` then never discards a record any
+    registered consumer still needs — the recycle point is clamped to
+    `min_acked_lsn()`, the minimum applied LSN across all consumers.  A WAL
+    with no registered consumers keeps the legacy single-consumer contract:
+    the caller is the only consumer and `truncate(lsn)` is taken at face
+    value.
     """
 
     def __init__(self) -> None:
         self.records: list[WalRecord] = []
         self.base_lsn = 0          # lsn of the newest truncated-away record
+        self.consumers: dict[str, int] = {}   # name -> acked (applied) lsn
 
     @property
     def head_lsn(self) -> int:
@@ -124,9 +134,46 @@ class Wal:
                 f"{from_lsn} (re-seed the consumer from a base snapshot)")
         yield from self.records[from_lsn - self.base_lsn:]
 
-    def truncate(self, up_to_lsn: int) -> int:
+    # ---------------------------------------------------- consumer slots
+    def register_consumer(self, name: str, *,
+                          start_lsn: Optional[int] = None) -> str:
+        """Declare a named consumer (replication-slot analogue).  It holds
+        the truncation point at `start_lsn` (default: the current base —
+        the earliest prefix still tailable) until it acks progress."""
+        start = self.base_lsn if start_lsn is None else start_lsn
+        if start < self.base_lsn:
+            raise LookupError(
+                f"WAL truncated to lsn {self.base_lsn}; consumer {name!r} "
+                f"cannot start at {start} (re-seed from a base snapshot)")
+        self.consumers[name] = start
+        return name
+
+    def deregister_consumer(self, name: str) -> None:
+        self.consumers.pop(name, None)
+
+    def ack(self, name: str, lsn: int) -> None:
+        """Record that `name` has applied the prefix up to `lsn` (monotone:
+        a stale ack never moves a slot backwards)."""
+        if name not in self.consumers:
+            raise KeyError(f"unregistered WAL consumer {name!r}")
+        self.consumers[name] = max(self.consumers[name], lsn)
+
+    def min_acked_lsn(self) -> int:
+        """The cluster-wide recycle horizon: the minimum applied LSN across
+        registered consumers (head when none are registered)."""
+        return min(self.consumers.values(), default=self.head_lsn)
+
+    def truncate(self, up_to_lsn: Optional[int] = None) -> int:
         """Drop records with lsn <= up_to_lsn (already applied by every
-        consumer); returns the number of records recycled."""
+        consumer); returns the number of records recycled.
+
+        With registered consumers the cut is clamped to `min_acked_lsn()`,
+        so no consumer can ever be handed a recycled prefix; passing no
+        argument recycles exactly up to that horizon."""
+        if up_to_lsn is None:
+            up_to_lsn = self.min_acked_lsn()
+        elif self.consumers:
+            up_to_lsn = min(up_to_lsn, self.min_acked_lsn())
         cut = min(max(up_to_lsn - self.base_lsn, 0), len(self.records))
         if cut:
             del self.records[:cut]
@@ -136,10 +183,14 @@ class Wal:
     # -------------------------------------------------------- persistence
     def dump(self, path: str) -> None:
         with open(path, "w") as f:
-            if self.base_lsn:
+            if self.base_lsn or self.consumers:
                 # header so a fully-truncated WAL reloads with its LSN
-                # clock intact (no records left to infer it from)
-                f.write(json.dumps({"base_lsn": self.base_lsn}) + "\n")
+                # clock intact (no records left to infer it from) and
+                # consumer slots survive restarts
+                hdr = {"base_lsn": self.base_lsn}
+                if self.consumers:
+                    hdr["consumers"] = self.consumers
+                f.write(json.dumps(hdr) + "\n")
             for rec in self.records:
                 f.write(rec.to_json() + "\n")
 
@@ -154,6 +205,7 @@ class Wal:
                 d = json.loads(line)
                 if "type" not in d:                  # base_lsn header
                     wal.base_lsn = d["base_lsn"]
+                    wal.consumers = dict(d.get("consumers", {}))
                 else:
                     wal.records.append(WalRecord.from_json(line))
         if wal.records and not wal.base_lsn:

@@ -3,7 +3,8 @@
 from .store import Store, Version, VersionChain
 from .engine import (Engine, Txn, Status, AbortReason, SerializationFailure)
 from .htap import SingleNodeHTAP, MultiNodeHTAP, Replica
-from .workload import Scale, load_initial, oltp_transaction, olap_query
+from .workload import (Scale, load_initial, oltp_transaction, olap_query,
+                       olap_freshness)
 from .driver import Metrics, run_single_node, run_multi_node
 
 __all__ = [
@@ -11,5 +12,6 @@ __all__ = [
     "Engine", "Txn", "Status", "AbortReason", "SerializationFailure",
     "SingleNodeHTAP", "MultiNodeHTAP", "Replica",
     "Scale", "load_initial", "oltp_transaction", "olap_query",
+    "olap_freshness",
     "Metrics", "run_single_node", "run_multi_node",
 ]

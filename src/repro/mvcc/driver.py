@@ -18,7 +18,8 @@ from typing import Optional
 
 from .engine import SerializationFailure, Status
 from .htap import MultiNodeHTAP, SingleNodeHTAP
-from .workload import Scale, load_initial, olap_query, oltp_transaction
+from .workload import (Scale, load_initial, olap_freshness, olap_query,
+                       oltp_transaction)
 
 
 @dataclass
@@ -36,6 +37,11 @@ class Metrics:
     rounds: int = 0
     by_abort_reason: dict = field(default_factory=dict)
     olap_outputs: list = field(default_factory=list)  # ("out", v) results
+    # replica-cluster routing (multi-node at N >= 1)
+    olap_served_by: list = field(default_factory=list)  # per-replica serves
+    olap_ship_then_serve: int = 0   # sync catch-ups forced by staleness
+    olap_avg_lag_records: float = 0.0  # mean served-snapshot lag (records)
+    gc_versions_pruned: int = 0     # chain versions pruned cluster-wide
 
     def oltp_tps(self) -> float:
         return self.oltp_commits / max(self.rounds, 1)
@@ -186,21 +192,26 @@ class _OlapClientSingle:
 
 
 class _OlapClientMulti:
-    """OLAP client against the log-shipping replica."""
+    """OLAP client against the log-shipping replica cluster.  With
+    `freshness_hints` the query's bounded-staleness requirement
+    (`workload.olap_freshness`) narrows the routing policy's eligible
+    replica set per acquisition."""
 
     def __init__(self, htap: MultiNodeHTAP, rng, sc: Scale, m: Metrics,
-                 *, batched: bool = False):
+                 *, batched: bool = False, freshness_hints: bool = False):
         self.htap, self.rng, self.sc, self.m = htap, rng, sc, m
         self.batched = batched
+        self.freshness_hints = freshness_hints
         self.snap = None
         self.gen = None
         self.pending = None
 
     def step(self) -> None:
         if self.snap is None:
-            self.snap = self.htap.olap_snapshot()
-            self.gen, _ = olap_query(self.rng, self.sc,
-                                     batched=self.batched)
+            self.gen, name = olap_query(self.rng, self.sc,
+                                        batched=self.batched)
+            max_lag = olap_freshness(name) if self.freshness_hints else None
+            self.snap = self.htap.olap_snapshot(max_lag=max_lag)
             self.pending = None
             return
         try:
@@ -264,9 +275,21 @@ def run_multi_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
                    ship_every: int = 25,
                    olap_scan: bool = False,
                    paged_olap: bool = False,
-                   check_scans: bool = False) -> Metrics:
+                   check_scans: bool = False,
+                   n_replicas: int = 1,
+                   route_policy="freshest",
+                   max_staleness: int = 100,
+                   ship_skew: int = 0,
+                   freshness_hints: bool = False) -> Metrics:
+    """N-replica decoupled-storage run.  `ship_skew` staggers the fleet:
+    replica i ships every `ship_every * (1 + i * ship_skew)` rounds, so the
+    run exercises skewed per-replica lag (the routing policies' input);
+    `freshness_hints` routes each OLAP query with its bounded-staleness
+    requirement from `workload.OLAP_FRESHNESS`."""
     htap = MultiNodeHTAP(olap_mode, paged_olap=paged_olap,
-                         check_scans=check_scans)
+                         check_scans=check_scans, n_replicas=n_replicas,
+                         route_policy=route_policy,
+                         max_staleness=max_staleness)
     load_initial(htap.primary, scale)
     htap.ship_log()
     m = Metrics()
@@ -274,18 +297,29 @@ def run_multi_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
     clients = [_OltpClient(htap.primary, random.Random(rng.random()), scale, m)
                for _ in range(oltp_clients)]
     clients += [_OlapClientMulti(htap, random.Random(rng.random()), scale, m,
-                                 batched=olap_scan)
+                                 batched=olap_scan,
+                                 freshness_hints=freshness_hints)
                 for _ in range(olap_clients)]
     for rnd in range(rounds):
         m.rounds = rnd + 1
+        for i in range(n_replicas):   # asynchronous streaming replication,
+            if rnd % (ship_every * (1 + i * ship_skew)) == 0:  # skewed lag
+                htap.ship_log(replica=i)
         if rnd % ship_every == 0:
-            htap.ship_log()      # asynchronous streaming replication
+            # cluster-wide GC floor: replicas + primary prune versions
+            # under min(replication horizon, oldest pin) per replica
+            m.gc_versions_pruned += htap.gc_versions()
         for cl in clients:
             cl.step()
         m.max_engine_txns = max(m.max_engine_txns, len(htap.primary.txns))
-        if htap.replica.rss_manager is not None:
-            m.max_rss_tracked = max(m.max_rss_tracked,
-                                    htap.replica.rss_manager.tracked_txns())
+        for rep in htap.cluster.replicas:
+            if rep.rss_manager is not None:
+                m.max_rss_tracked = max(m.max_rss_tracked,
+                                        rep.rss_manager.tracked_txns())
         m.max_wal_records = max(m.max_wal_records,
                                 len(htap.primary.wal.records))
+    st = htap.cluster.stats
+    m.olap_served_by = list(st["served"])
+    m.olap_ship_then_serve = st["ship_then_serve"]
+    m.olap_avg_lag_records = round(htap.cluster.avg_served_lag(), 2)
     return m

@@ -29,6 +29,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Optional, Sequence
 
+from ..cluster import ReplicaCluster
 from ..core.replica import PRoTManager, RSSManager, RssSnapshot
 from ..core.wal import effective_commit_seq
 from ..tensorstore.mirror import PagedMirror
@@ -54,6 +55,11 @@ class SingleNodeHTAP:
         self.paged_store: Optional[PagedVersionStore] = \
             PagedVersionStore(self.mirror) if paged else None
         self._pins: dict[int, int] = {}       # txn tid -> PRoT reader id
+        # in-process WAL consumers as registered slots: truncation goes
+        # through the same min-acked accounting the replica cluster uses
+        self.engine.wal.register_consumer("rss")
+        if self.mirror is not None:
+            self.engine.wal.register_consumer("mirror")
 
     # OLTP path -------------------------------------------------------------
     def oltp_begin(self, *, read_only: bool = False) -> Txn:
@@ -75,10 +81,10 @@ class SingleNodeHTAP:
                                  gc_floor=self.prot.gc_floor_seq())
         self.rss_manager.gc(keep_lsn=self.prot.gc_floor(),
                             keep_seq=self.prot.gc_floor_seq())
-        consumed = self.rss_manager.applied_lsn
+        self.engine.wal.ack("rss", self.rss_manager.applied_lsn)
         if self.mirror is not None:
-            consumed = min(consumed, self.mirror.applied_lsn)
-        self.engine.wal.truncate(consumed)
+            self.engine.wal.ack("mirror", self.mirror.applied_lsn)
+        self.engine.wal.truncate()
         return snap
 
     def olap_begin(self) -> Optional[Txn]:
@@ -163,16 +169,18 @@ class Replica:
         self.mirror: Optional[PagedMirror] = PagedMirror() if paged else None
         self.paged_store: Optional[PagedVersionStore] = \
             PagedVersionStore(self.mirror) if paged else None
+        self._si_pins: dict[int, int] = {}    # reader id -> pinned seq
+        self._next_si_reader = 1
 
     def catch_up(self, primary: Engine, *, max_records: int = 0) -> int:
         n = 0
         # GC floor for mirror publishes: pinned PRoT snapshots (RSS) or the
-        # pre-catch-up SI horizon.  Bounded, not absolute: an SI reader that
-        # holds its snapshot across multiple ship rounds (or an RSS member
-        # version above the prefix floor) is protected only while publishers
-        # stay < K-1 versions ahead per page — the K-slot staleness bound.
-        gc_floor = self.prot.gc_floor_seq() if self.prot is not None \
-            else self.applied_seq
+        # oldest pinned SI snapshot.  Bounded, not absolute: an SI reader
+        # that holds its snapshot across multiple ship rounds (or an RSS
+        # member version above the prefix floor) is protected only while
+        # publishers stay < K-1 versions ahead per page — the K-slot
+        # staleness bound.
+        gc_floor = self.gc_floor_seq()
         for rec in primary.wal.tail(self.applied_lsn):
             if max_records and n >= max_records:
                 break
@@ -201,6 +209,16 @@ class Replica:
     def si_snapshot(self) -> int:
         return self.applied_seq
 
+    def si_snapshot_pinned(self) -> tuple[int, int]:
+        """Acquire (pin) the replication horizon as an SI snapshot; the pin
+        holds this replica's version-GC floor until `release(rid)`.  SI
+        reader ids are NEGATIVE — disjoint from the PRoT manager's positive
+        ids, so releasing one kind of pin can never drop the other's."""
+        rid = -self._next_si_reader
+        self._next_si_reader += 1
+        self._si_pins[rid] = self.applied_seq
+        return rid, self.applied_seq
+
     def rss_snapshot(self) -> tuple[int, RssSnapshot]:
         """Acquire (pin) the freshest exported snapshot; release the returned
         reader id via `release(rid)` when the reader finishes."""
@@ -208,8 +226,25 @@ class Replica:
         return self.prot.acquire()
 
     def release(self, reader_id: int) -> None:
-        if self.prot is not None:
+        if reader_id < 0:
+            self._si_pins.pop(reader_id, None)
+        elif self.prot is not None:
             self.prot.release(reader_id)
+
+    # GC ---------------------------------------------------------------------
+    def gc_floor_seq(self) -> int:
+        """This replica's version-GC floor: min(oldest pinned snapshot —
+        PRoT or SI — and the replication horizon) in commit-seq units, the
+        per-replica term of the cluster-wide GC floor."""
+        floor = self.prot.gc_floor_seq() if self.prot is not None \
+            else self.applied_seq
+        si_floor = min(self._si_pins.values(), default=floor)
+        return min(floor, si_floor)
+
+    def gc_versions(self) -> int:
+        """Prune replica-side chain versions below the pinned floor
+        (hot_standby_feedback analogue on the replica's own store)."""
+        return self.store.prune(self.gc_floor_seq())
 
     def read_si(self, snapshot_seq: int, key: str) -> Any:
         return self.version_store.read_at(key, snapshot_seq)
@@ -236,44 +271,61 @@ class Replica:
 
 
 class MultiNodeHTAP:
+    """Primary + N-replica decoupled-storage cluster.  Snapshot handles are
+    the cluster's `(kind, replica_idx, reader_id, snapshot)` tuples; all
+    log shipping, WAL recycling (min applied LSN across consumers), snapshot
+    routing, and version GC flow through `cluster.ReplicaCluster`."""
+
     def __init__(self, olap_mode: str = "ssi+rss", *, paged_olap: bool = False,
-                 check_scans: bool = False) -> None:
+                 check_scans: bool = False, n_replicas: int = 1,
+                 route_policy="freshest", max_staleness: int = 100) -> None:
         assert olap_mode in ("ssi+si", "ssi+rss")
+        assert n_replicas >= 1
         self.olap_mode = olap_mode
         self.primary = Engine("ssi")
-        self.replica = Replica(with_rss=(olap_mode == "ssi+rss"),
-                               paged=paged_olap, check_scans=check_scans)
+        replicas = [Replica(with_rss=(olap_mode == "ssi+rss"),
+                            paged=paged_olap, check_scans=check_scans)
+                    for _ in range(n_replicas)]
+        self.cluster = ReplicaCluster(self.primary, replicas,
+                                      policy=route_policy,
+                                      max_lag=max_staleness)
+        self.replica = replicas[0]     # single-replica legacy surface
 
     def oltp_begin(self, *, read_only: bool = False) -> Txn:
         return self.primary.begin(read_only=read_only)
 
-    def ship_log(self, *, max_records: int = 0) -> int:
-        """One asynchronous replication round; afterwards the primary
-        recycles the WAL prefix the replica has applied (bounded log
-        state)."""
-        n = self.replica.catch_up(self.primary, max_records=max_records)
-        self.primary.wal.truncate(self.replica.applied_lsn)
-        return n
+    def ship_log(self, *, max_records: int = 0,
+                 replica: Optional[int] = None) -> int:
+        """One asynchronous replication round into one replica (or all);
+        afterwards the primary recycles the WAL prefix EVERY consumer has
+        applied — truncation only ever discards records below the minimum
+        applied LSN across the fleet (bounded log state at N > 1)."""
+        return self.cluster.ship(replica, max_records=max_records)
 
-    def olap_snapshot(self):
-        if self.olap_mode == "ssi+si":
-            return ("si", 0, self.replica.si_snapshot())
-        rid, snap = self.replica.rss_snapshot()
-        return ("rss", rid, snap)
+    def olap_snapshot(self, *, max_lag: Optional[int] = None):
+        """Route a snapshot acquisition through the cluster's policy;
+        `max_lag` is a per-query freshness hint (bounded staleness in WAL
+        records) — unsatisfiable hints trigger ship-then-serve."""
+        return self.cluster.acquire(max_lag=max_lag)
 
     def olap_read(self, snap, key: str) -> Any:
-        kind, _, s = snap
-        if kind == "si":
-            return self.replica.read_si(s, key)
-        return self.replica.read_rss(s, key)
+        return self.cluster.read(snap, key)
 
     def olap_scan(self, snap, keys: Sequence[str]) -> list[Any]:
-        kind, _, s = snap
-        if kind == "si":
-            return self.replica.scan_si(s, keys)
-        return self.replica.scan_rss(s, keys)
+        return self.cluster.scan(snap, keys)
 
     def olap_release(self, snap) -> None:
-        kind, rid, _ = snap
-        if kind == "rss":
-            self.replica.release(rid)
+        self.cluster.release(snap)
+
+    # GC --------------------------------------------------------------------
+    def gc_versions(self) -> int:
+        """Cluster-wide hot_standby_feedback: every replica prunes its chain
+        versions under its own pinned floor, and the primary prunes under
+        min(cluster-wide floor, active-transaction horizon) — the min over
+        replicas of min(replication horizon, oldest pin)."""
+        n = self.cluster.gc_versions()
+        active = min((t.begin_seq for t in self.primary.active.values()),
+                     default=self.primary.seq)
+        n += self.primary.prune_versions(
+            min(self.cluster.gc_floor_seq(), active))
+        return n

@@ -170,6 +170,22 @@ def order_revenue(rng: random.Random, sc: Scale,
 
 OLAP_QUERIES = (stock_level_scan, customer_balance, order_revenue)
 
+# Per-query freshness requirements (bounded staleness, in WAL records) for
+# replica-cluster snapshot routing: None tolerates any replication lag; a
+# bound narrows the eligible replica set, and an unsatisfiable bound makes
+# the cluster ship-then-serve.  Shapes the skewed-lag mix: trend scans ride
+# the laggiest replica while the revenue dashboard demands near-real-time.
+OLAP_FRESHNESS = {
+    "stock_level_scan": None,     # historical trend: any replica will do
+    "customer_balance": 400,      # moderately fresh balance sheet
+    "order_revenue": 120,         # near-real-time revenue dashboard
+}
+
+
+def olap_freshness(name: str):
+    """Max tolerated replication lag (WAL records) for a query, or None."""
+    return OLAP_FRESHNESS.get(name)
+
 
 def olap_query(rng: random.Random, sc: Scale, *, batched: bool = False):
     fn = OLAP_QUERIES[rng.randrange(len(OLAP_QUERIES))]

@@ -1,0 +1,339 @@
+"""Replica-cluster fan-out: multi-consumer WAL truncation, lag-aware
+routing, RSS-vs-oracle parity under skewed per-replica ship schedules, and
+cluster-wide GC (state drains to the bounded window when the fleet catches
+up).
+
+Oracle strategy: a shadow copy of every WAL record (taken before the
+primary recycles its prefix) feeds one un-GC'd `RSSManager` per replica to
+the replica's applied LSN; its `construct_batch` (Algorithm 1 over the full
+prefix) must agree with the replica's incrementally-maintained snapshot,
+and the replica's batched RSS scans must equal per-key protected reads on
+the primary engine at that snapshot.
+
+Seeded-random schedules always run; hypothesis widens the search when
+available (same pattern as tests/test_rss_incremental.py).
+"""
+
+import random
+
+import pytest
+
+from repro.cluster import (BoundedStaleness, Freshest, ReplicaCluster,
+                           RoundRobin, make_policy)
+from repro.core import RSSManager, Wal
+from repro.mvcc import (MultiNodeHTAP, SerializationFailure, Status,
+                        run_multi_node)
+
+KEYS = [f"k{i}" for i in range(8)]
+
+
+# ------------------------------------------------------- WAL consumer slots
+class TestWalConsumers:
+    def test_truncate_clamps_to_min_acked(self):
+        wal = Wal()
+        for i in range(1, 7):
+            wal.log_begin(i)
+        wal.register_consumer("a")
+        wal.register_consumer("b")
+        wal.ack("a", 5)
+        wal.ack("b", 3)
+        assert wal.min_acked_lsn() == 3
+        assert wal.truncate(6) == 3          # clamped at min acked, not 6
+        assert wal.base_lsn == 3
+        assert wal.truncate() == 0           # nothing below the horizon left
+        wal.ack("b", 6)
+        assert wal.truncate() == 2           # up to min(5, 6)
+        assert wal.base_lsn == 5
+
+    def test_ack_is_monotone_and_requires_registration(self):
+        wal = Wal()
+        wal.log_begin(1)
+        wal.register_consumer("a")
+        wal.ack("a", 1)
+        wal.ack("a", 0)                      # stale ack: no regression
+        assert wal.consumers["a"] == 1
+        with pytest.raises(KeyError):
+            wal.ack("ghost", 1)
+
+    def test_register_below_base_is_an_error(self):
+        wal = Wal()
+        wal.log_begin(1); wal.log_begin(2)
+        wal.truncate(2)
+        with pytest.raises(LookupError):
+            wal.register_consumer("late", start_lsn=0)
+        wal.register_consumer("ok")          # defaults to base_lsn
+        assert wal.consumers["ok"] == 2
+
+    def test_unregistered_wal_keeps_legacy_truncation(self):
+        """Regression for the old single-consumer path: with no registered
+        slots, `truncate(lsn)` is taken at face value."""
+        wal = Wal()
+        for i in range(1, 5):
+            wal.log_begin(i)
+        assert wal.truncate(3) == 3
+        assert wal.base_lsn == 3
+
+    def test_consumers_survive_dump_load(self, tmp_path):
+        wal = Wal()
+        wal.log_begin(1); wal.log_begin(2)
+        wal.register_consumer("replica0")
+        wal.ack("replica0", 1)
+        wal.truncate()
+        p = str(tmp_path / "wal.jsonl")
+        wal.dump(p)
+        wal2 = Wal.load(p)
+        assert wal2.consumers == {"replica0": 1}
+        assert wal2.base_lsn == 1
+        assert wal2.truncate(2) == 0         # still held by the slot
+
+
+# ------------------------------------------------------- single-replica path
+class TestSingleReplicaRegression:
+    def test_ship_log_truncates_at_the_replica_lsn(self):
+        """The old MultiNodeHTAP observable: with one replica, shipping
+        recycles exactly the applied prefix."""
+        htap = MultiNodeHTAP("ssi+rss")
+        e = htap.primary
+        t = e.begin(); e.write(t, "x", 1); e.commit(t)
+        htap.ship_log()
+        assert htap.primary.wal.base_lsn == htap.replica.applied_lsn
+        assert not htap.primary.wal.records
+
+    def test_second_consumer_no_longer_reads_a_recycled_prefix(self):
+        """THE bug this subsystem fixes: previously `ship_log` truncated at
+        the single replica's LSN, so a second, laggier consumer tailing the
+        WAL hit a recycled prefix (LookupError).  Now truncation is held at
+        the minimum applied LSN across registered consumers."""
+        htap = MultiNodeHTAP("ssi+rss", n_replicas=2)
+        e = htap.primary
+        t = e.begin(); e.write(t, "x", 1); e.commit(t)
+        htap.ship_log(replica=0)             # replica 1 has applied nothing
+        assert htap.primary.wal.base_lsn == 0
+        assert htap.ship_log(replica=1) > 0  # no LookupError: prefix intact
+        assert htap.primary.wal.base_lsn == \
+            min(r.applied_lsn for r in htap.cluster.replicas)
+
+
+# ------------------------------------------------------------ routing logic
+def _mini_cluster(n=3, *, policy="freshest", max_lag=100):
+    htap = MultiNodeHTAP("ssi+rss", n_replicas=n, route_policy=policy,
+                         max_staleness=max_lag)
+    e = htap.primary
+    for i in range(6):
+        t = e.begin(); e.write(t, f"k{i}", i); e.commit(t)
+    return htap
+
+
+class TestRouting:
+    def test_freshest_picks_min_lag(self):
+        htap = _mini_cluster(policy="freshest")
+        htap.ship_log(replica=1)             # replica 1 fully caught up
+        assert htap.cluster.policy.choose(htap.cluster) == 1
+        kind, idx, rid, snap = htap.olap_snapshot()
+        assert (kind, idx) == ("rss", 1)
+        htap.olap_release((kind, idx, rid, snap))
+
+    def test_round_robin_cycles(self):
+        htap = _mini_cluster(policy="round_robin")
+        htap.ship_log()
+        picked = [htap.cluster.policy.choose(htap.cluster) for _ in range(6)]
+        assert picked == [0, 1, 2, 0, 1, 2]
+
+    def test_bounded_staleness_ship_then_serve(self):
+        """When every replica exceeds the bound, acquisition synchronously
+        catches the freshest replica up before serving (freshness bought
+        with one replication round)."""
+        htap = _mini_cluster(policy="bounded_staleness", max_lag=3)
+        cl = htap.cluster
+        assert all(cl.lag_records(i) > 3 for i in range(3))
+        assert cl.policy.choose(cl) is None
+        handle = cl.acquire()
+        assert cl.stats["ship_then_serve"] == 1
+        assert cl.lag_records(handle[1]) == 0   # served fresh
+        cl.release(handle)
+
+    def test_per_query_hint_narrows_any_policy(self):
+        htap = _mini_cluster(policy="freshest")
+        cl = htap.cluster
+        assert cl.policy.choose(cl, max_lag=0) is None   # all too stale
+        handle = cl.acquire(max_lag=0)                   # ship-then-serve
+        assert cl.stats["ship_then_serve"] == 1
+        cl.release(handle)
+
+    def test_make_policy_specs(self):
+        assert isinstance(make_policy("freshest"), Freshest)
+        assert isinstance(make_policy("round_robin"), RoundRobin)
+        p = make_policy("bounded_staleness", max_lag=7)
+        assert isinstance(p, BoundedStaleness) and p.max_lag == 7
+        assert make_policy(p) is p
+        with pytest.raises(ValueError):
+            make_policy("nope")
+
+
+# --------------------------------------- RSS vs oracle under skewed shipping
+def _random_oltp_step(eng, sessions, rng):
+    i = rng.randrange(len(sessions))
+    t = sessions[i]
+    try:
+        if t is None or t.status != Status.ACTIVE:
+            sessions[i] = eng.begin()
+        elif rng.random() < 0.45:
+            eng.read(t, rng.choice(KEYS))
+        elif rng.random() < 0.75:
+            eng.write(t, rng.choice(KEYS), rng.randrange(1000))
+        else:
+            eng.commit(t)
+            sessions[i] = None
+    except SerializationFailure:
+        sessions[i] = None
+
+
+def check_cluster_vs_oracle(seed, *, n_replicas=3, steps=250):
+    """Randomized per-replica ship schedule: every replica's compressed RSS
+    snapshot equals the batch oracle at its applied LSN, batched replica
+    scans equal per-key protected reads on the primary, and the WAL only
+    ever recycles below min(applied LSN) across consumers."""
+    rng = random.Random(seed)
+    htap = MultiNodeHTAP("ssi+rss", n_replicas=n_replicas)
+    eng = htap.primary
+    wal = eng.wal
+    cluster = htap.cluster
+    sessions = [None] * 4
+    shadow = []                      # full record stream (never truncated)
+    oracles = [RSSManager() for _ in range(n_replicas)]
+
+    def sync_shadow():
+        have = shadow[-1].lsn if shadow else 0
+        shadow.extend(wal.tail(have))
+
+    for _ in range(steps):
+        _random_oltp_step(eng, sessions, rng)
+        sync_shadow()
+        if rng.random() < 0.4:
+            i = rng.randrange(n_replicas)
+            base_before = wal.base_lsn
+            htap.ship_log(replica=i,
+                          max_records=rng.choice((0, 1, 3, 7)))
+            rep = cluster.replicas[i]
+            # truncation invariant: never beyond any consumer's applied LSN
+            assert wal.base_lsn <= cluster.min_applied_lsn()
+            assert wal.base_lsn >= base_before
+            # oracle replay to the same LSN
+            ora = oracles[i]
+            for rec in shadow[ora.applied_lsn:rep.applied_lsn]:
+                ora.apply(rec)
+            assert ora.applied_lsn == rep.applied_lsn
+            s_ora = ora.construct_batch()
+            rid, s_rep = rep.rss_snapshot()
+            assert s_rep.floor_seq == s_ora.floor_seq, seed
+            assert s_rep.member_seqs == s_ora.member_seqs, seed
+            # replica batched scan == primary per-key protected reads
+            vals = rep.scan_rss(s_rep, KEYS)
+            r = eng.begin(read_only=True, rss=s_rep)
+            assert vals == [eng.read(r, k) for k in KEYS], seed
+            rep.release(rid)
+    return htap, shadow, oracles
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_cluster_rss_matches_batch_oracle(seed):
+    check_cluster_vs_oracle(seed)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_cluster_state_drains_when_fleet_catches_up(seed):
+    """Once every transaction settles, every replica ships to head, and all
+    pins are released: the WAL drains to empty, every RSSManager's per-txn
+    bookkeeping GCs to zero, and engine state is bounded."""
+    htap, _, _ = check_cluster_vs_oracle(seed, steps=200)
+    eng = htap.primary
+    for t in list(eng.active.values()):
+        try:
+            eng.commit(t)
+        except SerializationFailure:
+            pass
+    htap.ship_log()                          # all replicas to head
+    assert not eng.wal.records               # min acked == head: drained
+    assert eng.wal.base_lsn == eng.wal.head_lsn
+    for rep in htap.cluster.replicas:
+        assert rep.applied_lsn == eng.wal.head_lsn
+        rep.rss_manager.gc(keep_lsn=rep.prot.gc_floor(),
+                           keep_seq=rep.prot.gc_floor_seq())
+        assert rep.rss_manager.tracked_txns() == 0
+    assert htap.gc_versions() >= 0           # cluster-wide floor well-formed
+
+
+def test_mixed_si_and_prot_pins_on_one_replica():
+    """SI and PRoT pins on the same (with_rss) replica: disjoint reader-id
+    namespaces (releasing an SI handle never drops a PRoT pin) and the GC
+    floor honours BOTH kinds — an old SI pin holds version pruning even
+    while the RSS floor advances."""
+    htap = MultiNodeHTAP("ssi+rss")
+    e, rep = htap.primary, htap.replica
+    t = e.begin(); e.write(t, "x", 1); e.commit(t)
+    htap.ship_log()
+    si_rid, si_seq = rep.si_snapshot_pinned()
+    prot_rid, snap = rep.rss_snapshot()
+    assert si_rid < 0 < prot_rid                  # disjoint id spaces
+    for i in range(5):                            # floor moves past si_seq
+        t = e.begin(); e.write(t, "x", 10 + i); e.commit(t)
+    htap.ship_log()
+    assert rep.gc_floor_seq() <= si_seq           # SI pin holds the floor
+    rep.gc_versions()
+    assert rep.read_si(si_seq, "x") == 1          # pinned version survived
+    rep.release(si_rid)                           # must not drop the PRoT pin
+    assert rep.prot.pinned == 1
+    assert rep.gc_floor_seq() <= snap.floor_seq   # PRoT pin still in force
+    rep.release(prot_rid)
+    assert rep.prot.pinned == 0 and not rep._si_pins
+
+
+def test_cluster_gc_floor_and_version_pruning():
+    """The cluster-wide GC floor is the min over replicas of min(horizon,
+    oldest pin); a lagging replica (or an old pin) holds version pruning
+    everywhere below it."""
+    htap = MultiNodeHTAP("ssi+rss", n_replicas=2)
+    e = htap.primary
+    for i in range(10):
+        t = e.begin(); e.write(t, "x", i); e.commit(t)
+    htap.ship_log(replica=0)
+    # replica 1 never shipped: floor pinned at its (empty) horizon
+    assert htap.cluster.gc_floor_seq() == 0
+    assert len(e.store.chain("x").versions) == 11
+    pruned_held = htap.gc_versions()
+    assert len(e.store.chain("x").versions) == 11   # primary held at floor 0
+    htap.ship_log(replica=1)
+    pruned = htap.gc_versions()
+    assert pruned > pruned_held
+    assert len(e.store.chain("x").versions) == 1    # newest survives
+
+
+def test_driver_multi_replica_end_to_end():
+    """Skewed-lag driver run with scan checking: wait-free OLAP across a
+    3-replica fleet, load spread per policy, snapshots scan-verified
+    against the per-key oracle in-run."""
+    m = run_multi_node(olap_mode="ssi+rss", oltp_clients=4, olap_clients=3,
+                       rounds=600, seed=5, olap_scan=True, check_scans=True,
+                       n_replicas=3, route_policy="round_robin", ship_skew=2)
+    assert m.olap_commits > 0 and m.olap_aborts == 0
+    assert len(m.olap_served_by) == 3
+    assert all(c > 0 for c in m.olap_served_by)
+    # skewed cadence => replica 0 is fresher than replica 2 on average
+    m_fresh = run_multi_node(olap_mode="ssi+rss", oltp_clients=4,
+                             olap_clients=3, rounds=600, seed=5,
+                             olap_scan=True, n_replicas=3,
+                             route_policy="freshest", ship_skew=2)
+    assert m_fresh.olap_avg_lag_records <= m.olap_avg_lag_records
+
+
+# ------------------------------------------------------------- hypothesis
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           n_replicas=st.integers(3, 5))
+    def test_cluster_rss_matches_oracle_hypothesis(seed, n_replicas):
+        check_cluster_vs_oracle(seed, n_replicas=n_replicas, steps=150)
+except ImportError:                      # pragma: no cover
+    pass
