@@ -145,13 +145,14 @@ def replica_lag_sweep(rounds: int = 1000, seed: int = 9) -> dict:
     Per configuration: OLAP commits + qps (logical throughput), wall time
     (real throughput — ship-then-serve rounds are paid here), the mean
     replication lag of served snapshots (freshness), ship-then-serve count,
-    and the per-replica serve distribution.  The headline is the
-    bounded-staleness trade: versus round_robin at the laggiest
-    configuration it serves far fresher snapshots (lag ratio) at a
-    wall-clock cost (overhead pct)."""
+    and the per-replica serve distribution.  Two headlines: the
+    bounded-staleness trade (vs round_robin at the laggiest configuration
+    it serves far fresher snapshots at a sync-ship cost), and the
+    predicted-lag dividend (cadence-aware routing replaces emergency
+    ship-then-serve rounds with scheduled ships the cadence owed)."""
     policies = (("freshest", False), ("round_robin", False),
-                ("bounded_staleness", True))   # bounded routes with the
-    #                                            workload's freshness hints
+                ("bounded_staleness", True),   # bounded/predicted route with
+                ("predicted_staleness", True))  # workload freshness hints
     sweep = []
     for policy, hints in policies:
         for n_replicas in (1, 2, 4):
@@ -171,7 +172,9 @@ def replica_lag_sweep(rounds: int = 1000, seed: int = 9) -> dict:
                     "olap_commits": m.olap_commits,
                     "olap_qps_per_round": round(m.olap_qps(), 6),
                     "avg_lag_records": m.olap_avg_lag_records,
+                    "avg_predicted_lag": m.olap_avg_predicted_lag,
                     "ship_then_serve": m.olap_ship_then_serve,
+                    "scheduled_ships": m.olap_scheduled_ships,
                     "served_by": m.olap_served_by,
                     "max_wal_records": m.max_wal_records,
                 })
@@ -180,6 +183,7 @@ def replica_lag_sweep(rounds: int = 1000, seed: int = 9) -> dict:
                     and r["n_replicas"] == n and r["ship_every"] == ship)
     laggy_rr = pick("round_robin", 4, 100)
     laggy_bs = pick("bounded_staleness", 4, 100)
+    laggy_ps = pick("predicted_staleness", 4, 100)
     acquires = sum(laggy_bs["served_by"])
     return {
         "rounds": rounds,
@@ -196,6 +200,11 @@ def replica_lag_sweep(rounds: int = 1000, seed: int = 9) -> dict:
                 laggy_bs["ship_then_serve"] / max(acquires, 1), 3),
             "bounded_wall_ratio_vs_round_robin": round(
                 laggy_bs["wall_s"] / max(laggy_rr["wall_s"], 1e-9), 3),
+            # predicted-lag routing: same bound, fewer emergency rounds
+            "predicted_sync_ship_rounds": laggy_ps["ship_then_serve"],
+            "predicted_scheduled_ships": laggy_ps["scheduled_ships"],
+            "predicted_avg_lag_records": laggy_ps["avg_lag_records"],
+            "predicted_avg_predicted_lag": laggy_ps["avg_predicted_lag"],
         },
     }
 
@@ -227,13 +236,20 @@ def print_replica_lag_rows(lag: dict) -> None:
               f"s{r['ship_every']},{r['wall_s'] * 1e6:.0f},"
               f"avg_lag={r['avg_lag_records']};"
               f"olap_commits={r['olap_commits']};"
-              f"ship_then_serve={r['ship_then_serve']}")
+              f"ship_then_serve={r['ship_then_serve']};"
+              f"scheduled={r['scheduled_ships']}")
     h = lag["headline"]
     print(f"replica_lag:headline,0,"
           f"bounded_lag=x{h['bounded_vs_round_robin_lag_ratio']}_vs_rr;"
           f"sync_ships={h['bounded_sync_ship_rounds']}"
           f"({h['bounded_sync_ship_per_acquire']}/acquire);"
           f"wall=x{h['bounded_wall_ratio_vs_round_robin']}_vs_rr")
+    print(f"replica_lag:predicted,0,"
+          f"sync_ships={h['predicted_sync_ship_rounds']}"
+          f"_vs_{h['bounded_sync_ship_rounds']}_bounded;"
+          f"scheduled={h['predicted_scheduled_ships']};"
+          f"lag={h['predicted_avg_lag_records']}"
+          f"(pred={h['predicted_avg_predicted_lag']})")
 
 
 def main() -> None:

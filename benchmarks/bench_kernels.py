@@ -71,6 +71,106 @@ def bench_rss_gather():
              f"{bytes_moved/1e6:.1f}MB @819GB/s")]
 
 
+def _workload_paged_store(P, K=4, E=32, seed=2):
+    """A workload-shaped int-tagged paged store (what the mirror exports)."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    data = np.zeros((P, K, E), np.int32)
+    data[:, :, 0] = 1                                   # TAG_INT
+    data[:, :, 1] = rng.integers(0, 200, (P, K))
+    ts = rng.integers(0, 4 * P, (P, K)).astype(np.int32)
+    members = np.sort(rng.choice(4 * P, size=min(512, P), replace=False)) \
+        .astype(np.int32)
+    floor = int(2 * P)
+    return (jnp.asarray(data), jnp.asarray(ts), jnp.asarray(members), floor)
+
+
+def _agg_paths(P):
+    """(scan+host-decode+reduce closure, fused-agg closure, bytes per path)
+    for one OLAP aggregate over P pages — the two executor shapes
+    `scan_agg_report` sweeps."""
+    import numpy as np
+    from repro.kernels.rss_gather.ref import rss_gather_ref
+    from repro.kernels.rss_scan_agg.ops import fold_partials
+    from repro.kernels.rss_scan_agg.ref import rss_scan_agg_ref
+    from repro.tensorstore.mirror import decode_value
+    from repro.tensorstore.version_store import AggOp, apply_agg, finalize_agg
+
+    data, ts, members, floor = _workload_paged_store(P)
+    op = AggOp("sum", "int")
+    gather = jax.jit(lambda d, t, m: rss_gather_ref(d, t, m, floor))
+    fused = jax.jit(lambda d, t, m: rss_scan_agg_ref(d, t, m, floor,
+                                                     tag_main=1, tag_alt=0))
+
+    def scan_then_host():
+        rows = np.asarray(gather(data, ts, members))    # leaves the device
+        return apply_agg([decode_value(r) for r in rows], op)
+
+    def fused_agg():
+        # P/8 partial rows back, folded in Python ints (overflow-safe)
+        return finalize_agg(fold_partials(fused(data, ts, members)), op)
+
+    assert scan_then_host() == fused_agg()              # parity, in-bench
+    K, E = data.shape[1], data.shape[2]
+    in_bytes = P * K * E * 4 + P * K * 4 + members.shape[0] * 4
+    return scan_then_host, fused_agg, {
+        "in": in_bytes, "scan_out": P * E * 4, "fused_out": 5 * 4}
+
+
+def _time_host(fn, iters=5):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6     # us
+
+
+def bench_rss_scan_agg():
+    P = GATHER_P
+    scan_then_host, fused_agg, nbytes = _agg_paths(P)
+    scan_us = _time_host(scan_then_host)
+    fused_us = _time_host(fused_agg)
+    scan_tpu = (nbytes["in"] + nbytes["scan_out"]) / HBM_BW * 1e6
+    fused_tpu = (nbytes["in"] + nbytes["fused_out"]) / HBM_BW * 1e6
+    return [("olap_agg_scan_host_decode_cpu", scan_us, f"P={P},sum(int)"),
+            ("olap_agg_fused_cpu", fused_us,
+             f"P={P},x{scan_us / max(fused_us, 1e-9):.1f}_vs_host_decode"),
+            ("olap_agg_fused_tpu_roofline", fused_tpu,
+             f"{(nbytes['in'] + nbytes['fused_out'])/1e6:.1f}MB@819GB/s;"
+             f"scan_writes_{nbytes['scan_out']/1e6:.1f}MB_more;"
+             f"device_roofline_{scan_tpu:.0f}us_excl_host_decode")]
+
+
+def scan_agg_report(page_counts=(1024, 4096, 16384), iters=5) -> dict:
+    """Scan-vs-fused-agg sweep: one OLAP aggregate (sum over int pages)
+    executed as (a) today's scan path — device visibility gather, then
+    page decode + reduction on host — and (b) the fused `rss_scan_agg`
+    pass returning 5 scalars.  The fused path's win grows with P because
+    the host decode loop it eliminates is linear in pages; persisted to
+    BENCH_kernels.json under `scan_agg`."""
+    sweep = {}
+    for P in page_counts:
+        scan_then_host, fused_agg, nbytes = _agg_paths(P)
+        scan_us = _time_host(scan_then_host, iters)
+        fused_us = _time_host(fused_agg, iters)
+        sweep[str(P)] = {
+            "scan_host_decode_us": round(scan_us, 1),
+            "fused_agg_us": round(fused_us, 1),
+            "speedup": round(scan_us / max(fused_us, 1e-9), 2),
+            "scan_out_bytes": nbytes["scan_out"],
+            "fused_out_bytes": nbytes["fused_out"],
+        }
+    top = str(max(page_counts))
+    return {
+        "op": "sum(int) over member-visible pages (K=4, E=32)",
+        "sweep": sweep,
+        "headline_speedup": sweep[top]["speedup"],
+        "headline_pages": int(top),
+        "tpu_roofline_note": "fused writes 20B instead of P*E*4B and "
+                             "eliminates the host decode entirely",
+    }
+
+
 def bench_flash_attention():
     from repro.models.layers import flash_attention_xla
     B, S, H, K, hd = 1, 2048, 8, 2, 64
@@ -124,8 +224,8 @@ def bench_wkv():
 
 def all_benches():
     rows = []
-    for fn in (bench_version_gather, bench_rss_gather, bench_flash_attention,
-               bench_decode_attention, bench_wkv):
+    for fn in (bench_version_gather, bench_rss_gather, bench_rss_scan_agg,
+               bench_flash_attention, bench_decode_attention, bench_wkv):
         rows.extend(fn())
     return rows
 

@@ -4,41 +4,49 @@ Prints ``name,us_per_call,derived`` CSV rows covering:
   * the paper's Figures 5-10 (HTAP throughput/abort benchmarks),
   * the measured multinode RSS-construction overhead (paper: ~10%),
   * kernel micro-benchmarks (CPU ref timing + TPU roofline),
+  * the scan-vs-fused-agg executor sweep (host decode eliminated),
   * RSS freshness-lag characterization (beyond-paper),
   * the roofline summary when dry-run artifacts exist.
+
+``--smoke`` exercises every bench entry point at tiny scale (CI: the
+entry points must not rot) WITHOUT touching BENCH_kernels.json — the
+persisted perf trajectory only records full-scale runs.
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 
 
-def main() -> None:
+def main(smoke: bool = False) -> None:
     print("name,us_per_call,derived")
+    fig_rounds = 300 if smoke else 3000
+    ov_rounds = 250 if smoke else 2500
 
     # ---------------------------------------------------- paper figures
     from . import paper_figures as pf
     t0 = time.perf_counter()
-    rows = pf.fig_5_6_7(rounds=3000)
+    rows = pf.fig_5_6_7(rounds=fig_rounds)
     dt = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
     for fig, mode, x, tps, qps, oab, aab, waits in rows:
         print(f"{fig}:{mode}:x={x},{dt:.0f},"
               f"oltp_tps={tps:.4f};olap_qps={qps:.5f};"
               f"oltp_abort={oab:.3f};olap_abort={aab:.3f};waits={waits}")
     t0 = time.perf_counter()
-    rows = pf.fig_8_9_10(rounds=3000)
+    rows = pf.fig_8_9_10(rounds=fig_rounds)
     dt = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
     for fig, mode, x, tps, qps, oab, aab, extra in rows:
         print(f"{fig}:{mode}:x={x},{dt:.0f},"
               f"oltp_tps={tps:.4f};olap_qps={qps:.5f};"
               f"oltp_abort={oab:.3f};extra={extra}")
 
-    ov = pf.rss_construction_overhead(rounds=2500)
+    ov = pf.rss_construction_overhead(rounds=ov_rounds)
     print(f"multinode_rss_oltp_overhead,0,"
           f"{ov['oltp_overhead_pct']:.1f}%_vs_ssi+si")
     print(f"multinode_rss_olap_overhead,0,"
           f"{ov['olap_overhead_pct']:.1f}%_vs_ssi+si")
-    for msg in pf.headline_checks(pf.fig_5_6_7(rounds=2500)):
+    for msg in pf.headline_checks(pf.fig_5_6_7(rounds=ov_rounds)):
         print(f"headline,0,{msg.replace(',', ';')}")
 
     # -------------------------------------------------------- freshness
@@ -49,11 +57,12 @@ def main() -> None:
         print(f"{name},{us:.1f},{derived}")
 
     # -------------------------------------------- replica-cluster routing
-    lag_report = replica_lag_sweep()
+    lag_report = replica_lag_sweep(rounds=150 if smoke else 1000)
     print_replica_lag_rows(lag_report)
 
     # ------------------------------------------- RSS construction cost
-    construct_report = construct_cost_sweep()
+    construct_report = construct_cost_sweep(
+        history_lengths=(500, 1000) if smoke else (1000, 2000, 4000, 8000))
     for n, us in construct_report["incremental_us"].items():
         print(f"rss_construct:incremental:n={n},{us},per_round")
     for n, us in construct_report["batch_us"].items():
@@ -63,7 +72,7 @@ def main() -> None:
           f"incremental=x{construct_report['incremental_growth']}")
 
     # ------------------------------------------------ OLAP scan path
-    scan_report = scan_path_report()
+    scan_report = scan_path_report(rounds=300 if smoke else 2000)
     for mode in ("per_key", "scan"):
         r = scan_report[mode]
         print(f"olap_path:{mode},{r['wall_s'] * 1e6:.0f},"
@@ -72,18 +81,34 @@ def main() -> None:
           f"x{scan_report['olap_throughput_speedup']}_olap_commits")
 
     # ---------------------------------------------------------- kernels
-    from .bench_kernels import all_benches, gather_kernels_report
+    from .bench_kernels import (all_benches, gather_kernels_report,
+                                scan_agg_report)
     for name, us, derived in all_benches():
         print(f"{name},{us:.1f},{derived}")
 
-    # persist the perf trajectory for future PRs (merge: standalone entry
-    # points own their sections)
-    from .persist import persist_bench_sections
-    out_path = persist_bench_sections(kernels=gather_kernels_report(),
-                                      olap_scan_path=scan_report,
-                                      rss_construct=construct_report,
-                                      replica_lag=lag_report)
-    print(f"bench_kernels_json,0,{out_path}")
+    # ------------------------------------- fused executor (scan vs agg)
+    agg_report = scan_agg_report(
+        page_counts=(256, 1024) if smoke else (1024, 4096, 16384),
+        iters=2 if smoke else 5)
+    for P, r in agg_report["sweep"].items():
+        print(f"scan_agg:P={P},{r['fused_agg_us']},"
+              f"host_decode={r['scan_host_decode_us']}us;"
+              f"speedup=x{r['speedup']}")
+    print(f"scan_agg:headline,0,fused=x{agg_report['headline_speedup']}"
+          f"_vs_host_decode_at_P={agg_report['headline_pages']}")
+
+    if smoke:
+        print("bench_kernels_json,0,skipped_(smoke_mode)")
+    else:
+        # persist the perf trajectory for future PRs (merge: standalone
+        # entry points own their sections)
+        from .persist import persist_bench_sections
+        out_path = persist_bench_sections(kernels=gather_kernels_report(),
+                                          olap_scan_path=scan_report,
+                                          rss_construct=construct_report,
+                                          replica_lag=lag_report,
+                                          scan_agg=agg_report)
+        print(f"bench_kernels_json,0,{out_path}")
 
     # --------------------------------------------------------- roofline
     try:
@@ -98,4 +123,8 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-scale pass over every bench entry point "
+                         "(CI); does not write BENCH_kernels.json")
+    main(smoke=ap.parse_args().smoke)

@@ -60,6 +60,14 @@ def main():
     print(f"empty-RSS read: page2={float(out[2,0]):.0f} "
           f"page5={float(out[5,0]):.0f}  (initial slots)")
 
+    # columnar multi-page gather: a key-range of pages as a device
+    # sub-store (dense ranges slice, arbitrary sets gather)
+    from repro.tensorstore import gather_pages
+    sub = gather_pages(store, [2, 5])
+    out = snapshot_read(sub, jnp.int32(35))
+    print(f"gather_pages([2,5]) @35: {float(out[0,0]):.0f}, "
+          f"{float(out[1,0]):.0f}  (columnar sub-store scan)")
+
     mirrored_htap_demo()
 
 
@@ -116,6 +124,18 @@ def mirrored_htap_demo():
     print("  stock:0:0=61 (t1 in RSS), stock:0:2=100 (t3 committed but "
           "concurrent with active t2 -> previous version)")
     print("  mirror scan == rss_gather kernel == engine per-key reads")
+
+    # device-resident OLAP executor: the same read set as ONE fused
+    # rss_scan_agg pass — visibility resolve + reduction on device, one
+    # scalar back instead of 6 decoded pages
+    from repro.tensorstore import (AggOp, AggPlan, ChainVersionStore,
+                                   PagedVersionStore)
+    plan = AggPlan(tuple(keys), AggOp("count_below", "int", 80))
+    fused = PagedVersionStore(mirror).execute(plan, snap)
+    chain = ChainVersionStore(eng.store).execute(plan, snap)
+    assert fused == chain == sum(1 for v in oracle if v < 80)
+    print(f"fused agg (count stock < 80) = {fused}  "
+          "(rss_scan_agg kernel == chain-oracle plan == python reduce)")
 
 
 if __name__ == "__main__":

@@ -12,13 +12,15 @@ echo "== tier-1: pytest =="
 python -m pytest -x -q
 
 echo
-echo "== interpret-mode kernel parity (version_gather / rss_gather) =="
+echo "== interpret-mode kernel parity (version_gather / rss_gather / rss_scan_agg) =="
 python - <<'EOF'
 import numpy as np, jax, jax.numpy as jnp
 from repro.kernels.version_gather.kernel import version_gather
 from repro.kernels.version_gather.ref import version_gather_ref
 from repro.kernels.rss_gather.kernel import rss_gather
 from repro.kernels.rss_gather.ref import rss_gather_ref
+from repro.kernels.rss_scan_agg.kernel import rss_scan_agg
+from repro.kernels.rss_scan_agg.ref import rss_scan_agg_ref
 
 rng = np.random.default_rng(0)
 for P, K, E in [(16, 4, 256), (32, 3, 128)]:
@@ -35,7 +37,23 @@ for P, K, E in [(16, 4, 256), (32, 3, 128)]:
             np.testing.assert_array_equal(
                 np.asarray(rss_gather(data, ts, mem, floor)),
                 np.asarray(rss_gather_ref(data, ts, mem, floor)))
-print("kernel parity OK (version_gather, rss_gather+floor; interpret mode)")
+for P, K, E in [(16, 4, 32), (32, 3, 16)]:
+    idata = np.zeros((P, K, E), np.int32)
+    idata[:, :, 0] = rng.integers(-1, 4, (P, K))     # tags incl. TAG_PAD
+    idata[:, :, 1] = rng.integers(-99, 99, (P, K))
+    its = jnp.asarray(rng.integers(0, 50, (P, K)), np.int32)
+    idata = jnp.asarray(idata)
+    for M in (0, 7):
+        mem = jnp.asarray(np.sort(rng.choice(np.arange(1, 50), size=M,
+                                             replace=False)), jnp.int32)
+        for floor in (0, 21):
+            for tags in [(1, 0, 50), (3, -2, 0)]:
+                np.testing.assert_array_equal(
+                    np.asarray(rss_scan_agg(idata, its, mem, floor, *tags)),
+                    np.asarray(rss_scan_agg_ref(idata, its, mem, floor,
+                                                *tags)))
+print("kernel parity OK (version_gather, rss_gather+floor, rss_scan_agg; "
+      "interpret mode)")
 EOF
 
 echo
@@ -46,6 +64,11 @@ for ex in quickstart anomaly_demo paged_snapshot_reads cluster_fanout; do
 done
 python examples/htap_train_serve.py --smoke > /dev/null
 echo "example OK: htap_train_serve (--smoke)"
+
+echo
+echo "== benchmark entry points (--smoke: tiny scale, no BENCH_kernels.json) =="
+python -m benchmarks.run --smoke > /dev/null
+echo "bench smoke OK (all entry points, incl. scan-vs-fused-agg sweep)"
 
 if [[ "${1:-}" == "--bench" ]]; then
     echo

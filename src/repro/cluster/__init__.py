@@ -1,18 +1,20 @@
 """Decoupled-storage replica cluster: N-way WAL fan-out with lag-aware
 RSS snapshot routing (paper Sec 5.1 generalized to N replicas).
 
-  cluster.py  ReplicaCluster — fan-out, min-LSN WAL recycling, routing,
+  cluster.py  ReplicaCluster — fan-out, min-LSN WAL recycling, routing
+              (+ ship-cadence tracking for predicted-lag serves),
               cluster-wide GC floor
-  routing.py  Freshest / RoundRobin / BoundedStaleness policies
-              (+ ship-then-serve fallback when every replica is too stale)
+  routing.py  Freshest / RoundRobin / BoundedStaleness /
+              PredictedStaleness policies (+ ship-then-serve fallback when
+              every replica is too stale)
 """
 
 from .cluster import ReplicaCluster, SnapshotHandle
-from .routing import (BoundedStaleness, Freshest, RoundRobin, RoutingPolicy,
-                      make_policy)
+from .routing import (BoundedStaleness, Freshest, PredictedStaleness,
+                      RoundRobin, RoutingPolicy, make_policy)
 
 __all__ = [
     "ReplicaCluster", "SnapshotHandle",
     "RoutingPolicy", "Freshest", "RoundRobin", "BoundedStaleness",
-    "make_policy",
+    "PredictedStaleness", "make_policy",
 ]

@@ -28,6 +28,7 @@ the pin on the replica that served it.
 
 from __future__ import annotations
 
+from collections import deque
 from typing import Any, Iterable, Optional, Sequence, Union
 
 from .routing import Freshest, RoutingPolicy, make_policy
@@ -52,11 +53,24 @@ class ReplicaCluster:
             name = primary.wal.register_consumer(f"replica{i}",
                                                  start_lsn=rep.applied_lsn)
             self._slots.append(name)
+        # per-replica cadence history: head LSN at each EXTERNALLY-driven
+        # ship (the replication schedule).  Serve-time ships (scheduled /
+        # ship-then-serve) are excluded — recording them would shrink the
+        # learned cadence, fire ship_due earlier, and trigger yet more
+        # serve-time ships (a self-reinforcing collapse toward shipping on
+        # every acquire).  `_last_ship_lsn` tracks ships of ANY kind so
+        # due-ness still throttles to one serve-time ship per interval.
+        self._ship_lsns: list[deque] = [deque(maxlen=8)
+                                        for _ in self.replicas]
+        self._last_ship_lsn: list[int] = [primary.wal.head_lsn
+                                          for _ in self.replicas]
         self.stats: dict[str, Any] = {
             "served": [0] * len(self.replicas),
             "acquires": 0,
             "ship_then_serve": 0,
-            "lag_records_sum": 0,       # summed over served snapshots
+            "scheduled_ships": 0,       # cadence-due ships run at serve
+            "lag_records_sum": 0,       # observed, summed over served snaps
+            "predicted_lag_sum": 0,     # predicted at routing time, ditto
             "truncated_records": 0,
         }
 
@@ -74,33 +88,98 @@ class ReplicaCluster:
     def freshest_idx(self) -> int:
         return Freshest().choose(self)
 
+    # -------------------------------------------------------- predicted lag
+    def ship_cadence(self, i: int) -> Optional[float]:
+        """Replica i's learned ship cadence in WAL records (mean head-LSN
+        gap between its recent ships), or None before two ships."""
+        h = self._ship_lsns[i]
+        if len(h) < 2:
+            return None
+        return max((h[-1] - h[0]) / (len(h) - 1), 1.0)
+
+    # a replica's next ship counts as imminent once this fraction of its
+    # cadence interval has elapsed: running it early at serve replays the
+    # same delta the schedule was about to replay (delta shipping makes
+    # total replication work invariant — only the per-ship overhead is
+    # pulled forward), at most once per window (`_last_ship_lsn` resets)
+    DUE_FRACTION = 0.5
+
+    def ship_due(self, i: int) -> bool:
+        """Has the primary appended most of a cadence interval since
+        replica i's last ship — of any kind, so a serve-time ship consumes
+        the owed interval?  (Its next scheduled ship is imminent.)"""
+        cadence = self.ship_cadence(i)
+        return cadence is not None and \
+            self.primary.wal.head_lsn - self._last_ship_lsn[i] >= \
+            self.DUE_FRACTION * cadence
+
+    def predicted_lag(self, i: int) -> int:
+        """The lag replica i would serve with at THIS moment: observed lag,
+        except ~0 when its cadence says a scheduled ship is due now (the
+        serve path runs the due ship before serving — `acquire` with a
+        predictive policy)."""
+        return 0 if self.ship_due(i) else self.lag_records(i)
+
     # -------------------------------------------------------------- fan-out
     def ship(self, replica: Optional[int] = None, *,
-             max_records: int = 0) -> int:
+             max_records: int = 0, record_cadence: bool = True) -> int:
         """One replication round: replay the WAL tail into one replica
         (or all, when `replica` is None), ack the applied LSNs, then
-        recycle the primary WAL prefix EVERY consumer has applied."""
+        recycle the primary WAL prefix EVERY consumer has applied.
+
+        `record_cadence=False` marks a serve-time ship (scheduled /
+        ship-then-serve): it advances `_last_ship_lsn` but stays out of
+        the cadence history, so the learned cadence keeps reflecting the
+        external replication schedule only."""
         idxs = range(len(self.replicas)) if replica is None else [replica]
         n = 0
         for i in idxs:
             rep = self.replicas[i]
             n += rep.catch_up(self.primary, max_records=max_records)
             self.primary.wal.ack(self._slots[i], rep.applied_lsn)
+            self._last_ship_lsn[i] = self.primary.wal.head_lsn
+            h = self._ship_lsns[i]
+            # cadence points only when the head actually advanced: two
+            # ships at the same LSN (e.g. back-to-back warm-up ships)
+            # would otherwise teach a degenerate ~0-record cadence and
+            # make every acquire look ship-due
+            if record_cadence and (not h or self.primary.wal.head_lsn >
+                                   h[-1]):
+                h.append(self.primary.wal.head_lsn)
         self.stats["truncated_records"] += self.primary.wal.truncate()
         return n
 
     # -------------------------------------------------------------- routing
     def acquire(self, *, max_lag: Optional[int] = None) -> SnapshotHandle:
-        """Route a snapshot acquisition through the policy.  When no
-        replica satisfies the staleness bound, ship-then-serve: catch the
-        freshest replica up synchronously, then serve it."""
+        """Route a snapshot acquisition through the policy.  A predictive
+        policy may pick a replica on predicted lag (its scheduled ship is
+        due): run that due ship before serving — cadence-owed work, not an
+        emergency round.  When no replica satisfies the staleness bound,
+        ship-then-serve: catch the freshest replica up synchronously, then
+        serve it."""
         idx = self.policy.choose(self, max_lag=max_lag)
+        predicted = self.predicted_lag(idx) if idx is not None else 0
         if idx is None:
             idx = self.freshest_idx()
-            self.ship(idx)
+            predicted = 0                  # served post-ship: lag ~0
+            self.ship(idx, record_cadence=False)
             self.stats["ship_then_serve"] += 1
+        elif getattr(self.policy, "predictive", False) and \
+                predicted < self.lag_records(idx):
+            # the prediction was load-bearing: this replica only met the
+            # staleness bound because its imminent ship counts as run —
+            # run it (cadence-owed work pulled forward, not an emergency
+            # round).  A replica whose OBSERVED lag already satisfies the
+            # bound is served as-is: no ship, no extra work.
+            bound = self.policy.effective_bound(max_lag)
+            if bound is not None and self.lag_records(idx) > bound:
+                self.ship(idx, record_cadence=False)
+                self.stats["scheduled_ships"] += 1
+            else:
+                predicted = self.lag_records(idx)   # served unshipped
         self.stats["acquires"] += 1
         self.stats["served"][idx] += 1
+        self.stats["predicted_lag_sum"] += predicted
         self.stats["lag_records_sum"] += self.lag_records(idx)
         rep = self.replicas[idx]
         if rep.with_rss:
@@ -110,9 +189,16 @@ class ReplicaCluster:
         return ("si", idx, rid, seq)
 
     def avg_served_lag(self) -> float:
-        """Mean replication lag (WAL records) of served snapshots — the
-        cluster's freshness metric per routing policy."""
+        """Mean observed replication lag (WAL records) of served snapshots —
+        the cluster's freshness metric per routing policy."""
         return self.stats["lag_records_sum"] / max(self.stats["acquires"], 1)
+
+    def avg_predicted_lag(self) -> float:
+        """Mean lag predicted at routing time for served snapshots; compare
+        with `avg_served_lag` to see what the cadence model promised vs
+        what the replicas delivered."""
+        return self.stats["predicted_lag_sum"] / max(self.stats["acquires"],
+                                                     1)
 
     # ---------------------------------------------------------------- reads
     def read(self, handle: SnapshotHandle, key: str) -> Any:
@@ -124,6 +210,14 @@ class ReplicaCluster:
         kind, idx, _, s = handle
         rep = self.replicas[idx]
         return rep.scan_si(s, keys) if kind == "si" else rep.scan_rss(s, keys)
+
+    def agg(self, handle: SnapshotHandle, keys: Sequence[str], op) -> int:
+        """Serve an aggregate plan on the replica that served the handle's
+        snapshot (same routing/freshness decision as the acquisition)."""
+        kind, idx, _, s = handle
+        rep = self.replicas[idx]
+        return rep.agg_si(s, keys, op) if kind == "si" \
+            else rep.agg_rss(s, keys, op)
 
     def release(self, handle: SnapshotHandle) -> None:
         _, idx, rid, _ = handle

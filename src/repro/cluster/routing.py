@@ -20,6 +20,17 @@ policy is where the freshness/throughput trade-off lives:
                           back to ship-then-serve: synchronously catch one
                           replica up, then serve it — freshness bought with
                           one synchronous replication round.
+  * `PredictedStaleness` — bounded staleness on PREDICTED lag at serve
+                          time: the cluster knows each replica's ship
+                          cadence (`ReplicaCluster.ship_cadence`, learned
+                          from the slot-ack history), so a replica whose
+                          scheduled ship is due predicts lag ~0 and stays
+                          eligible even when its observed lag exceeds the
+                          bound.  The cluster then runs that due ship at
+                          serve (a *scheduled* ship the replication cadence
+                          owed anyway) instead of an emergency
+                          ship-then-serve round on the freshest replica —
+                          cutting sync fallbacks on cadence-skewed fleets.
 
 Policies see the cluster read-only through `lag_records(i)` /
 `replicas[i].applied_lsn`; a per-call `max_lag` (e.g. a query-class
@@ -43,11 +54,22 @@ class RoutingPolicy:
             -> Optional[int]:
         raise NotImplementedError
 
+    def _lag(self, cluster, i: int) -> float:
+        """The staleness measure eligibility filters on; predictive
+        policies override (observed lag by default)."""
+        return cluster.lag_records(i)
+
+    def effective_bound(self, max_lag: Optional[int]) -> Optional[int]:
+        """The staleness bound this policy actually enforced for a choice
+        made with `max_lag` (the per-query hint; bounded-staleness
+        policies tighten it with their default)."""
+        return max_lag
+
     def _eligible(self, cluster, max_lag: Optional[int]) -> list[int]:
         idxs = range(len(cluster.replicas))
         if max_lag is None:
             return list(idxs)
-        return [i for i in idxs if cluster.lag_records(i) <= max_lag]
+        return [i for i in idxs if self._lag(cluster, i) <= max_lag]
 
 
 class Freshest(RoutingPolicy):
@@ -93,15 +115,33 @@ class BoundedStaleness(RoundRobin):
 
     def choose(self, cluster, *, max_lag: Optional[int] = None) \
             -> Optional[int]:
-        bound = self.max_lag if max_lag is None else min(self.max_lag,
-                                                         max_lag)
-        return super().choose(cluster, max_lag=bound)
+        return super().choose(cluster, max_lag=self.effective_bound(max_lag))
+
+    def effective_bound(self, max_lag: Optional[int]) -> Optional[int]:
+        return self.max_lag if max_lag is None else min(self.max_lag,
+                                                        max_lag)
+
+
+class PredictedStaleness(BoundedStaleness):
+    """Bounded staleness evaluated on `cluster.predicted_lag(i)` — the lag
+    replica i will serve with once its cadence-due scheduled ship runs —
+    instead of last-observed lag.  The `predictive` marker tells the
+    cluster to actually run that due ship before serving, so the served
+    snapshot honours the bound; clusters without cadence tracking degrade
+    to observed lag."""
+
+    name = "predicted_staleness"
+    predictive = True
+
+    def _lag(self, cluster, i: int) -> float:
+        return getattr(cluster, "predicted_lag", cluster.lag_records)(i)
 
 
 def make_policy(spec: Union[str, RoutingPolicy], *,
                 max_lag: int = 100) -> RoutingPolicy:
     """Resolve a policy spec: an instance passes through; a name constructs
-    one ('bounded_staleness' takes `max_lag` as its default bound)."""
+    one ('bounded_staleness' / 'predicted_staleness' take `max_lag` as
+    their default bound)."""
     if isinstance(spec, RoutingPolicy):
         return spec
     if spec == "freshest":
@@ -110,4 +150,6 @@ def make_policy(spec: Union[str, RoutingPolicy], *,
         return RoundRobin()
     if spec == "bounded_staleness":
         return BoundedStaleness(max_lag)
+    if spec == "predicted_staleness":
+        return PredictedStaleness(max_lag)
     raise ValueError(f"unknown routing policy {spec!r}")

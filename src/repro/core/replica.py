@@ -334,28 +334,53 @@ class PRoTManager:
     pinned snapshot's LSN horizon must be preserved (hot_standby_feedback
     analogue).  `gc_floor()` returns the lowest pinned LSN, or the current
     snapshot's LSN when nothing is pinned.
+
+    Pins are SHARED: every reader acquiring at the same horizon (the same
+    constructed-snapshot LSN) refcounts ONE pin-table entry holding one
+    `RssSnapshot`, instead of one entry per reader — at high PRoT reader
+    counts the pin table is bounded by the number of distinct live horizons
+    (<= refresh rounds spanned by the oldest reader), not by reader count.
+    The floor semantics are unchanged: an entry holds the GC floor until its
+    LAST sharer releases, and because readers only ever pin the newest
+    snapshot (whose floor is monotone in LSN), `gc_floor_seq()` can never
+    regress while any sharer is live.
     """
 
     def __init__(self, manager: RSSManager) -> None:
         self.manager = manager
-        self._pins: dict[int, RssSnapshot] = {}
+        self._readers: dict[int, int] = {}    # reader id -> pinned horizon lsn
+        # horizon lsn -> [snapshot, sharer refcount]: ONE entry per horizon
+        self._pins: dict[int, list] = {}
         self._next_reader = 1
 
     def acquire(self) -> tuple[int, RssSnapshot]:
-        """Wait-free: returns the most recent constructed snapshot."""
+        """Wait-free: returns the most recent constructed snapshot, sharing
+        the pin-table entry with every other reader at the same horizon."""
         snap = self.manager.snapshot
         rid = self._next_reader
         self._next_reader += 1
-        self._pins[rid] = snap
+        ent = self._pins.get(snap.lsn)
+        if ent is None:
+            self._pins[snap.lsn] = [snap, 1]
+        else:
+            ent[1] += 1
+            snap = ent[0]                     # all sharers see one snapshot
+        self._readers[rid] = snap.lsn
         return rid, snap
 
     def release(self, reader_id: int) -> None:
-        self._pins.pop(reader_id, None)
+        lsn = self._readers.pop(reader_id, None)
+        if lsn is None:
+            return
+        ent = self._pins[lsn]
+        ent[1] -= 1
+        if ent[1] == 0:                       # last sharer drops the pin
+            del self._pins[lsn]
 
     def gc_floor(self) -> int:
         if not self._pins:
             return self.manager.snapshot.lsn
-        return min(s.lsn for s in self._pins.values())
+        return min(self._pins)
 
     def gc_floor_seq(self) -> int:
         """Version-GC floor in commit-seq units: the minimum prefix-safe
@@ -369,11 +394,17 @@ class PRoTManager:
         readers by fewer than K-1 versions per page."""
         if not self._pins:
             return self.manager.snapshot.floor_seq
-        return min(s.floor_seq for s in self._pins.values())
+        return min(s.floor_seq for s, _ in self._pins.values())
 
     @property
     def pinned(self) -> int:
+        """Live pin-table entries (one per distinct pinned horizon)."""
         return len(self._pins)
+
+    @property
+    def readers(self) -> int:
+        """Live sharers across all pinned horizons (>= pinned)."""
+        return len(self._readers)
 
 
 def replicate(wal: Wal, manager: RSSManager, *, batch: int = 0) -> RssSnapshot:

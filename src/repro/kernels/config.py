@@ -1,0 +1,35 @@
+"""One execution-mode switch for every Pallas kernel op.
+
+All kernel ops (`repro.kernels.*.ops`) default their `interpret` argument to
+None, which resolves through `resolve_interpret` against the REPRO_INTERPRET
+environment variable:
+
+    REPRO_INTERPRET=1 (default)  — Pallas interpret mode: the kernels execute
+                                   on CPU, validating the exact kernel code
+                                   path in every test/CI run.
+    REPRO_INTERPRET=0            — compiled mode for real TPU hardware: the
+                                   one-flag flip for the roofline-validating
+                                   benchmark run (ROADMAP "TPU-compiled
+                                   benchmark run").
+
+An explicit `interpret=True/False` at a call site always wins over the
+environment, so tests can pin a mode regardless of how CI is configured.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+_FALSE = ("0", "false", "no", "off")
+
+
+def default_interpret() -> bool:
+    """The environment-configured Pallas execution mode (True = interpret)."""
+    return os.environ.get("REPRO_INTERPRET", "1").strip().lower() not in _FALSE
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Resolve an op's `interpret` argument: None defers to REPRO_INTERPRET;
+    an explicit boolean wins."""
+    return default_interpret() if interpret is None else bool(interpret)

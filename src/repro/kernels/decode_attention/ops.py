@@ -1,10 +1,12 @@
 """Public op wrapper for decode attention."""
 
+from ..config import resolve_interpret
 from .kernel import decode_attention
 from .ref import decode_attention_ref
 
 
-def decode_gqa(q, k, v, valid_len, *, use_kernel=True, interpret=True):
+def decode_gqa(q, k, v, valid_len, *, use_kernel=True, interpret=None):
     if use_kernel:
-        return decode_attention(q, k, v, valid_len, interpret=interpret)
+        return decode_attention(q, k, v, valid_len,
+                                interpret=resolve_interpret(interpret))
     return decode_attention_ref(q, k, v, valid_len)

@@ -4,19 +4,20 @@ from __future__ import annotations
 
 import jax
 
+from ..config import resolve_interpret
 from .kernel import flash_attention
 from .ref import attention_ref
 
 
 def attention_bshd(q, k, v, *, causal=True, window=0, use_kernel=True,
-                   interpret=True):
+                   interpret=None):
     """Model layout [B,S,H,hd] / [B,T,K,hd] wrapper (kernel uses [B,H,S,hd])."""
     qt = q.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
     if use_kernel:
         o = flash_attention(qt, kt, vt, causal=causal, window=window,
-                            interpret=interpret)
+                            interpret=resolve_interpret(interpret))
     else:
         o = attention_ref(qt, kt, vt, causal=causal, window=window)
     return o.transpose(0, 2, 1, 3)

@@ -2,24 +2,28 @@
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 
+from ..config import resolve_interpret
 from .kernel import rss_gather
 from .ref import rss_gather_ref
 
 
 def snapshot_read_members(store: dict, member_ts, floor=0, *,
                           use_kernel: bool = True,
-                          interpret: bool = True) -> jax.Array:
+                          interpret: Optional[bool] = None) -> jax.Array:
     """RSS membership read over a paged store {'data': [P,K,E], 'ts': [P,K]}.
 
     member_ts is the sorted int32 array of member commit timestamps ABOVE
     the snapshot floor (the commit-seq image of an exported `RssSnapshot`:
     `snap.member_seqs` + `snap.floor_seq`); every version at ts <= floor is
-    a floor-covered member's.  interpret=True (default) runs the Pallas
-    kernel in interpret mode so the same code path validates on CPU; on TPU
-    pass interpret=False."""
+    a floor-covered member's.  interpret defaults to the REPRO_INTERPRET
+    switch (`repro.kernels.config`): interpret mode validates the kernel
+    code path on CPU; REPRO_INTERPRET=0 (or interpret=False) compiles for
+    TPU."""
     if not use_kernel:
         return rss_gather_ref(store["data"], store["ts"], member_ts, floor)
     return rss_gather(store["data"], store["ts"], member_ts, floor,
-                      interpret=interpret)
+                      interpret=resolve_interpret(interpret))

@@ -1,0 +1,138 @@
+"""Pallas TPU kernel: fused RSS visibility resolve + aggregate (scan+agg).
+
+This is the device-resident OLAP executor's hot loop: one pass that resolves
+RSS set-membership visibility for a key-range of pages per grid step (the
+multi-page columnar extension of `rss_gather`'s one-slot-per-page resolve)
+AND reduces the member-visible payloads on device — sum / count /
+count-below-threshold / min / max over a tagged scalar field — so scan
+results never leave the device.  The host receives five scalars instead of
+P decoded pages.
+
+Contract (matches ref.py):
+    data      [P, K, E] int32  page payloads; element 0 is the codec tag,
+                               element 1 the aggregable field
+                               (`tensorstore.mirror` codec)
+    ts        [P, K]    int32  commit timestamp per slot (0 = initial)
+    member_ts [M]       int32  sorted member commit timestamps ABOVE floor
+    floor     scalar           compressed-snapshot watermark; with M == 0 it
+                               degrades to prefix (SI-V) visibility, so the
+                               same kernel serves watermark aggregates
+    tag_main / tag_alt         payload tags that participate in the
+                               aggregate (tag_alt = -2 to disable: real
+                               tags are >= 0 and -1 marks sublane-padding
+                               pages, so neither ever matches -2)
+    threshold scalar           count-below predicate bound
+    out       [P/BP, 128] int32  ONE PARTIAL ROW PER GRID BLOCK, lanes
+                               0..4 = sum, count, count_below, min
+                               (INT32_MAX when the block matched nothing),
+                               max (INT32_MIN)
+
+Visibility is the `rss_gather` protocol verbatim (ts <= floor OR ts in the
+member array, newest wins, ties toward the lowest slot).  Each grid step
+reduces its BP-page block to one partial row; `ops.snapshot_agg_members`
+folds the rows ON HOST in arbitrary-precision Python ints.  Deliberate
+overflow discipline: device arithmetic stays int32 (TPU-native), so a
+whole-scan sum can exceed int32 without wrapping — only a single BP-page
+block's partial must fit (|field| avg < 2**31/BP per block, far beyond the
+codec's realistic value domain), keeping the fused result bitwise equal to
+the per-key Python oracle.
+
+Arithmetic intensity stays ~1 FLOP per K bytes read, but the fused path
+writes P/BP partial rows instead of P·E gathered elements and skips the
+host decode loop entirely — the win
+`benchmarks.bench_kernels.scan_agg_report` measures.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_I32_MAX = jnp.iinfo(jnp.int32).max
+_I32_MIN = jnp.iinfo(jnp.int32).min
+
+
+def _kernel(mem_ref, scal_ref, ts_ref, data_ref, out_ref):
+    ts = ts_ref[...]                           # [BP, K] int32
+    mem = mem_ref[...]                         # [1, Mp] int32 (-1 padded)
+    floor = scal_ref[0, 0]
+    tag_main = scal_ref[0, 1]
+    tag_alt = scal_ref[0, 2]
+    thresh = scal_ref[0, 3]
+    # --- visibility resolve (rss_gather protocol) -----------------------
+    is_member = (ts <= floor) | jnp.any(
+        ts[:, :, None] == mem[0][None, None, :], axis=-1)
+    masked = jnp.where(is_member, ts, -1)
+    best = jnp.max(masked, axis=1, keepdims=True)          # [BP, 1]
+    onehot = masked == best
+    idx = jnp.arange(ts.shape[1], dtype=jnp.int32)[None, :]
+    first = jnp.min(jnp.where(onehot, idx, ts.shape[1]), axis=1,
+                    keepdims=True)
+    onehot = idx == first                                  # [BP, K]
+    data = data_ref[...]                                   # [BP, K, E]
+    sel = jnp.sum(onehot.astype(data.dtype)[:, :, None] * data, axis=1)
+    # --- fused aggregate over the visible payloads ----------------------
+    tag = sel[:, 0]                                        # [BP]
+    x = sel[:, 1]
+    valid = (tag == tag_main) | (tag == tag_alt)
+    psum = jnp.sum(jnp.where(valid, x, 0))
+    pcount = jnp.sum(valid.astype(jnp.int32))
+    pbelow = jnp.sum((valid & (x < thresh)).astype(jnp.int32))
+    pmin = jnp.min(jnp.where(valid, x, _I32_MAX))
+    pmax = jnp.max(jnp.where(valid, x, _I32_MIN))
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, 128), 1)
+    tile = jnp.where(lane == 0, psum, 0)
+    tile = jnp.where(lane == 1, pcount, tile)
+    tile = jnp.where(lane == 2, pbelow, tile)
+    tile = jnp.where(lane == 3, pmin, tile)
+    tile = jnp.where(lane == 4, pmax, tile)
+    out_ref[...] = tile                        # this block's partial row
+
+
+@functools.partial(jax.jit, static_argnames=("block_pages", "interpret"))
+def rss_scan_agg(data: jax.Array, ts: jax.Array, member_ts: jax.Array,
+                 floor: jax.Array | int = 0,
+                 tag_main: jax.Array | int = 1,
+                 tag_alt: jax.Array | int = -2,
+                 threshold: jax.Array | int = _I32_MAX,
+                 *, block_pages: int = 8,
+                 interpret: bool = True) -> jax.Array:
+    """Fused RSS membership scan + aggregate; returns [P/BP, 5] int32
+    per-block partials of [sum, count, count_below, min, max] over
+    member-visible payloads whose tag is tag_main or tag_alt (fold the
+    block axis on host — lanes 0-2 add, 3 min, 4 max).  interpret=True
+    executes on CPU (validation); interpret=False targets TPU."""
+    P, K, E = data.shape
+    assert ts.shape == (P, K)
+    bp = min(block_pages, P)
+    assert P % bp == 0, (P, bp)
+    M = member_ts.shape[0]
+    mp = max(128, -(-M // 128) * 128)          # lane-aligned, >= 1 tile
+    mem = jnp.full((1, mp), -1, jnp.int32)
+    if M:
+        mem = mem.at[0, :M].set(member_ts.astype(jnp.int32))
+    # scalar params as one lane-aligned [1, 128] tile (same idiom as the
+    # rss_gather floor tile): [0]=floor, [1]=tag_main, [2]=tag_alt,
+    # [3]=threshold
+    scal = jnp.zeros((1, 128), jnp.int32)
+    scal = scal.at[0, 0].set(jnp.asarray(floor, jnp.int32))
+    scal = scal.at[0, 1].set(jnp.asarray(tag_main, jnp.int32))
+    scal = scal.at[0, 2].set(jnp.asarray(tag_alt, jnp.int32))
+    scal = scal.at[0, 3].set(jnp.asarray(threshold, jnp.int32))
+    out = pl.pallas_call(
+        _kernel,
+        grid=(P // bp,),
+        in_specs=[
+            pl.BlockSpec((1, mp), lambda i: (0, 0)),        # members
+            pl.BlockSpec((1, 128), lambda i: (0, 0)),       # scalar params
+            pl.BlockSpec((bp, K), lambda i: (i, 0)),        # ts
+            pl.BlockSpec((bp, K, E), lambda i: (i, 0, 0)),  # data
+        ],
+        out_specs=pl.BlockSpec((1, 128), lambda i: (i, 0)),  # partial rows
+        out_shape=jax.ShapeDtypeStruct((P // bp, 128), jnp.int32),
+        interpret=interpret,
+    )(mem, scal, ts, data)
+    return out[:, :5]

@@ -1,0 +1,56 @@
+"""Public op: snapshot_agg_members — fused scan+aggregate, kernel or jnp."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..config import resolve_interpret
+from .kernel import rss_scan_agg
+from .ref import rss_scan_agg_ref
+
+_I32_MAX = jnp.iinfo(jnp.int32).max
+_I32_MIN = jnp.iinfo(jnp.int32).min
+
+
+def fold_partials(partials) -> list[int]:
+    """Fold [n_blocks, 5] per-block device partials into the final [sum,
+    count, count_below, min, max] — in arbitrary-precision Python ints, so
+    whole-scan sums are exact even past int32 (only a single block's
+    partial must fit int32 on device)."""
+    rows = np.asarray(partials)
+    return [int(sum(int(v) for v in rows[:, 0])),
+            int(sum(int(v) for v in rows[:, 1])),
+            int(sum(int(v) for v in rows[:, 2])),
+            int(min((int(v) for v in rows[:, 3]), default=_I32_MAX)),
+            int(max((int(v) for v in rows[:, 4]), default=_I32_MIN))]
+
+
+def snapshot_agg_members(store: dict, member_ts, floor=0, *,
+                         tag_main: int, tag_alt: int = -2,
+                         threshold: Optional[int] = None,
+                         use_kernel: bool = True,
+                         interpret: Optional[bool] = None) -> list[int]:
+    """Fused RSS membership scan + aggregate over a paged store
+    {'data': [P,K,E] int32, 'ts': [P,K]}: resolve visibility (ts <= floor
+    or ts in the sorted member_ts array — `rss_gather` semantics; an empty
+    member array with floor = watermark gives SI-V prefix visibility) and
+    reduce payload element 1 over visible pages tagged tag_main/tag_alt,
+    all in ONE device pass.
+
+    Returns the folded [sum, count, count_below, min, max] as Python ints
+    (per-block int32 partials on device, exact fold on host);
+    `tensorstore.version_store.finalize_agg` picks the requested statistic
+    (min/max carry sentinels when count == 0).  interpret defaults to the
+    REPRO_INTERPRET switch (`repro.kernels.config`)."""
+    thresh = _I32_MAX if threshold is None else int(threshold)
+    if not use_kernel:
+        partials = rss_scan_agg_ref(store["data"], store["ts"], member_ts,
+                                    floor, tag_main, tag_alt, thresh)
+    else:
+        partials = rss_scan_agg(store["data"], store["ts"], member_ts,
+                                floor, tag_main, tag_alt, thresh,
+                                interpret=resolve_interpret(interpret))
+    return fold_partials(partials)

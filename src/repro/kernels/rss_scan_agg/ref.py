@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the fused rss_scan_agg kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..rss_gather.ref import rss_visible_slots_ref
+
+_I32_MAX = jnp.iinfo(jnp.int32).max
+_I32_MIN = jnp.iinfo(jnp.int32).min
+
+
+def rss_scan_agg_ref(data: jax.Array, ts: jax.Array, member_ts: jax.Array,
+                     floor: jax.Array | int = 0,
+                     tag_main: jax.Array | int = 1,
+                     tag_alt: jax.Array | int = -2,
+                     threshold: jax.Array | int = _I32_MAX,
+                     *, block_pages: int = 8) -> jax.Array:
+    """data [P,K,E] int32, ts [P,K], sorted member_ts [M], scalars ->
+    [P/BP, 5] int32 per-block partials of [sum, count, count_below, min,
+    max] of payload element 1 over member-visible pages whose tag (element
+    0) is tag_main or tag_alt — the kernel's exact blocking, so kernel and
+    oracle are bitwise comparable; fold the block axis on host (lanes 0-2
+    add, 3 min, 4 max; `ops.fold_partials`) in Python ints so whole-scan
+    sums never wrap int32.  Empty member set with floor 0 resolves initial
+    slots only (rss_gather semantics); min/max carry INT32_MAX/INT32_MIN
+    sentinels for blocks where nothing matched (count disambiguates)."""
+    P = data.shape[0]
+    bp = min(block_pages, P)
+    assert P % bp == 0, (P, bp)
+    slot = rss_visible_slots_ref(ts, member_ts, floor)
+    sel = jnp.take_along_axis(data, slot[:, None, None], axis=1)[:, 0]
+    tag = sel[:, 0].reshape(P // bp, bp)
+    x = sel[:, 1].reshape(P // bp, bp)
+    valid = (tag == tag_main) | (tag == tag_alt)
+    return jnp.stack([
+        jnp.sum(jnp.where(valid, x, 0), axis=1),
+        jnp.sum(valid.astype(jnp.int32), axis=1),
+        jnp.sum((valid & (x < threshold)).astype(jnp.int32), axis=1),
+        jnp.min(jnp.where(valid, x, _I32_MAX), axis=1),
+        jnp.max(jnp.where(valid, x, _I32_MIN), axis=1),
+    ], axis=1).astype(jnp.int32)

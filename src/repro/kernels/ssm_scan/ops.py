@@ -1,10 +1,12 @@
 """Public op wrapper for the selective-scan kernel."""
 
+from ..config import resolve_interpret
 from .kernel import ssm_scan
 from .ref import ssm_scan_ref
 
 
-def selective_scan(u, dt, B, C, A, D, *, use_kernel=True, interpret=True):
+def selective_scan(u, dt, B, C, A, D, *, use_kernel=True, interpret=None):
     if use_kernel:
-        return ssm_scan(u, dt, B, C, A, D, interpret=interpret)
+        return ssm_scan(u, dt, B, C, A, D,
+                        interpret=resolve_interpret(interpret))
     return ssm_scan_ref(u, dt, B, C, A, D)

@@ -2,19 +2,23 @@
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 
+from ..config import resolve_interpret
 from .kernel import version_gather
 from .ref import version_gather_ref
 
 
 def snapshot_read(store: dict, watermark, *, use_kernel: bool = True,
-                  interpret: bool = True) -> jax.Array:
+                  interpret: Optional[bool] = None) -> jax.Array:
     """SI-V read over a paged store {'data': [P,K,E], 'ts': [P,K]}.
 
-    interpret=True (default) runs the Pallas kernel in interpret mode so the
-    same code path validates on CPU; on TPU pass interpret=False."""
+    interpret defaults to the REPRO_INTERPRET switch
+    (`repro.kernels.config`): interpret mode validates the kernel code path
+    on CPU; REPRO_INTERPRET=0 (or interpret=False) compiles for TPU."""
     if not use_kernel:
         return version_gather_ref(store["data"], store["ts"], watermark)
     return version_gather(store["data"], store["ts"], watermark,
-                          interpret=interpret)
+                          interpret=resolve_interpret(interpret))

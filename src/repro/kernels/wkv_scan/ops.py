@@ -2,11 +2,12 @@
 
 import jax.numpy as jnp
 
+from ..config import resolve_interpret
 from .kernel import wkv_scan
 from .ref import wkv_scan_ref
 
 
-def wkv(r, k, v, w_log, u, *, use_kernel=True, interpret=True):
+def wkv(r, k, v, w_log, u, *, use_kernel=True, interpret=None):
     """Model layout [B,T,H,N] + u [H,N] -> (o [B,T,H,N], S [B,H,N,N])."""
     B, T, H, N = r.shape
     def flat(x):
@@ -14,6 +15,7 @@ def wkv(r, k, v, w_log, u, *, use_kernel=True, interpret=True):
     uf = jnp.broadcast_to(u[None], (B, H, N)).reshape(B * H, N)
     fn = wkv_scan if use_kernel else (lambda *a, **kw: wkv_scan_ref(*a))
     o, S = fn(flat(r), flat(k), flat(v), flat(w_log), uf,
-              **({"interpret": interpret} if use_kernel else {}))
+              **({"interpret": resolve_interpret(interpret)}
+                 if use_kernel else {}))
     o = o.reshape(B, H, T, N).transpose(0, 2, 1, 3)
     return o, S.reshape(B, H, N, N)

@@ -31,6 +31,7 @@ class Metrics:
     olap_aborts: int = 0
     olap_wait_rounds: int = 0
     olap_scan_steps: int = 0     # batched ("scan", keys) steps served
+    olap_agg_steps: int = 0      # fused ("agg", keys, op) steps served
     max_engine_txns: int = 0     # peak engine per-txn state (bounded by GC)
     max_rss_tracked: int = 0     # peak RSSManager per-txn state (ditto)
     max_wal_records: int = 0     # peak primary WAL length (truncation bound)
@@ -40,7 +41,9 @@ class Metrics:
     # replica-cluster routing (multi-node at N >= 1)
     olap_served_by: list = field(default_factory=list)  # per-replica serves
     olap_ship_then_serve: int = 0   # sync catch-ups forced by staleness
-    olap_avg_lag_records: float = 0.0  # mean served-snapshot lag (records)
+    olap_scheduled_ships: int = 0   # cadence-due ships run at serve time
+    olap_avg_lag_records: float = 0.0  # mean served-snapshot lag (observed)
+    olap_avg_predicted_lag: float = 0.0  # mean lag predicted at routing
     gc_versions_pruned: int = 0     # chain versions pruned cluster-wide
 
     def oltp_tps(self) -> float:
@@ -157,6 +160,9 @@ class _OlapClientSingle:
             elif step[0] == "scan":
                 self.pending = self.htap.olap_scan(self.txn, step[1])
                 self.m.olap_scan_steps += 1
+            elif step[0] == "agg":
+                self.pending = self.htap.olap_agg(self.txn, step[1], step[2])
+                self.m.olap_agg_steps += 1
             elif step[0] == "out":
                 self.m.olap_outputs.append(step[1])
         except SerializationFailure:
@@ -227,6 +233,9 @@ class _OlapClientMulti:
         elif step[0] == "scan":
             self.pending = self.htap.olap_scan(self.snap, step[1])
             self.m.olap_scan_steps += 1
+        elif step[0] == "agg":
+            self.pending = self.htap.olap_agg(self.snap, step[1], step[2])
+            self.m.olap_agg_steps += 1
         elif step[0] == "out":
             self.m.olap_outputs.append(step[1])
 
@@ -321,5 +330,7 @@ def run_multi_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
     st = htap.cluster.stats
     m.olap_served_by = list(st["served"])
     m.olap_ship_then_serve = st["ship_then_serve"]
+    m.olap_scheduled_ships = st["scheduled_ships"]
     m.olap_avg_lag_records = round(htap.cluster.avg_served_lag(), 2)
+    m.olap_avg_predicted_lag = round(htap.cluster.avg_predicted_lag(), 2)
     return m

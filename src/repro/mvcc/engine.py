@@ -30,7 +30,8 @@ from ..core.history import History, b as op_b, r as op_r, w as op_w, \
     c as op_c, a as op_a
 from ..core.replica import RssSnapshot
 from ..core.wal import Wal, WalRecord
-from ..tensorstore.version_store import ChainVersionStore, VersionStore
+from ..tensorstore.version_store import (AggOp, AggPlan, ChainVersionStore,
+                                         VersionStore, apply_agg)
 from .store import Store, Version
 
 
@@ -191,6 +192,29 @@ class Engine:
         if t.writes:                              # read-your-own-writes
             vals = [t.writes.get(k, v) for k, v in zip(keys, vals)]
         return vals
+
+    def agg(self, t: Txn, keys: Sequence[str], op: AggOp) -> int:
+        """Serve an aggregate plan: ONE `VersionStore.execute` resolves
+        visibility for the whole key sequence AND reduces it (the paged
+        store fuses both in a single device pass), returning one scalar.
+
+        The read set is still recorded key-by-key from the same visibility
+        walk — the serializability oracle sees an aggregate exactly as it
+        sees the equivalent scan.  SSI-tracked transactions fall back to
+        per-key `read` (SIRead registration must observe every key), and a
+        transaction with buffered writes on plan keys falls back to the
+        batched scan + host reduce (read-your-own-writes never hits the
+        store)."""
+        self._check_active(t)
+        if self.mode == "ssi" and not t.skip_siread:
+            return apply_agg([self.read(t, k) for k in keys], op)
+        if t.writes and any(k in t.writes for k in keys):
+            return apply_agg(self.scan(t, keys), op)
+        snapshot = t.rss if t.rss is not None else t.begin_seq
+        result, writers = self.version_store.execute_with_writers(
+            AggPlan(tuple(keys), op), snapshot)
+        self.record_scan(t, keys, writers)
+        return result
 
     def record_scan(self, t: Txn, keys: Sequence[str],
                     writers: Sequence[int]) -> None:

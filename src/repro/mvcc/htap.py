@@ -33,8 +33,9 @@ from ..cluster import ReplicaCluster
 from ..core.replica import PRoTManager, RSSManager, RssSnapshot
 from ..core.wal import effective_commit_seq
 from ..tensorstore.mirror import PagedMirror
-from ..tensorstore.version_store import (ChainVersionStore, PagedVersionStore,
-                                         VersionStore)
+from ..tensorstore.version_store import (AggOp, AggPlan, ChainVersionStore,
+                                         PagedVersionStore, VersionStore,
+                                         apply_agg)
 from .engine import AbortReason, Engine, SerializationFailure, Status, Txn
 from .store import Store
 
@@ -123,6 +124,30 @@ class SingleNodeHTAP:
                 self.engine.history = hist
             assert vals == oracle, (vals, oracle)
         return vals
+
+    def olap_agg(self, t: Txn, keys: Sequence[str], op: AggOp) -> int:
+        """Device-resident OLAP aggregate: ONE fused `rss_scan_agg` pass
+        (visibility resolve + reduction) for protected readers on the paged
+        mirror; chain-store execution (batched walk + host reduce — the
+        oracle shape) otherwise.  Read-set recording is identical to
+        `olap_scan`'s."""
+        if self.paged_store is not None and t.rss is not None:
+            self.engine._check_active(t)
+            result, writers = self.paged_store.execute_with_writers(
+                AggPlan(tuple(keys), op), t.rss)
+            self.engine.record_scan(t, keys, writers)
+        else:
+            result = self.engine.agg(t, keys, op)
+        if self.check_scans:
+            # per-key oracle parity (history suppressed: the read set was
+            # already recorded by the plan execution above)
+            hist, self.engine.history = self.engine.history, None
+            try:
+                oracle = apply_agg([self.engine.read(t, k) for k in keys], op)
+            finally:
+                self.engine.history = hist
+            assert result == oracle, (result, oracle)
+        return result
 
     def olap_commit(self, t: Txn) -> None:
         try:
@@ -269,6 +294,30 @@ class Replica:
             assert vals == oracle, (vals, oracle)
         return vals
 
+    # batched aggregates ----------------------------------------------------
+    def _agg(self, snapshot, keys: Sequence[str], op: AggOp) -> int:
+        """Execute an aggregate plan at a snapshot: fused device kernel on
+        the paged mirror, chain-walk + host reduce otherwise; parity-
+        asserted against the per-key oracle under check_scans."""
+        store = self.paged_store or self.version_store
+        val = store.execute(AggPlan(tuple(keys), op), snapshot)
+        if self.check_scans:
+            oracle = apply_agg(
+                [self.version_store.read_at(k, snapshot)
+                 if not isinstance(snapshot, RssSnapshot)
+                 else self.version_store.read_members(k, snapshot)
+                 for k in keys], op)
+            assert val == oracle, (val, oracle)
+        return val
+
+    def agg_si(self, snapshot_seq: int, keys: Sequence[str],
+               op: AggOp) -> int:
+        return self._agg(snapshot_seq, keys, op)
+
+    def agg_rss(self, snap: RssSnapshot, keys: Sequence[str],
+                op: AggOp) -> int:
+        return self._agg(snap, keys, op)
+
 
 class MultiNodeHTAP:
     """Primary + N-replica decoupled-storage cluster.  Snapshot handles are
@@ -313,6 +362,11 @@ class MultiNodeHTAP:
 
     def olap_scan(self, snap, keys: Sequence[str]) -> list[Any]:
         return self.cluster.scan(snap, keys)
+
+    def olap_agg(self, snap, keys: Sequence[str], op: AggOp) -> int:
+        """Aggregate plans route to the replica that served the snapshot —
+        the same freshness-policy decision as scans."""
+        return self.cluster.agg(snap, keys, op)
 
     def olap_release(self, snap) -> None:
         self.cluster.release(snap)

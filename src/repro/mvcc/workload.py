@@ -20,6 +20,8 @@ import random
 from dataclasses import dataclass
 from typing import Iterator
 
+from ..tensorstore.version_store import AggOp
+
 
 @dataclass(frozen=True)
 class Scale:
@@ -40,8 +42,11 @@ class Scale:
 # Each yielded step is ('r', key) or ('w', key, update_fn) where update_fn
 # maps the read value to the written value;  ('scan', keys) to read a whole
 # key sequence in ONE batched VersionStore.scan (the generator receives the
-# list of values);  or ('out', value) to emit a result.  The driver executes
-# steps against an engine transaction.
+# list of values);  ('agg', keys, op) to reduce the key sequence's visible
+# values in ONE fused device pass (op is a `tensorstore.AggOp`; the
+# generator receives one int — values never materialize on host);  or
+# ('out', value) to emit a result.  The driver executes steps against an
+# engine transaction.
 Step = tuple
 
 
@@ -107,15 +112,17 @@ def oltp_transaction(rng: random.Random, sc: Scale):
 # ----------------------------------------------------------------- OLAP side
 # Every query has two execution shapes over the SAME read set: the per-key
 # generator walk (one engine.read per round — the oracle, and the shape that
-# keeps a query active for hundreds of rounds) and the batched shape
-# (('scan', keys) steps served by one VersionStore.scan each).
+# keeps a query active for hundreds of rounds) and the batched shape —
+# ('agg', keys, op) steps reduced in ONE fused device pass each (plus
+# ('scan', keys) where the query needs the values themselves, e.g. the
+# district pass that derives the order key range).
 def stock_level_scan(rng: random.Random, sc: Scale,
                      batched: bool = False) -> Iterator[Step]:
     """CH Q-like: total stock below threshold across every warehouse."""
     low = 0
     if batched:
-        vals = yield ("scan", sc.all_stock_keys())
-        low = sum(1 for q in vals if isinstance(q, int) and q < 50)
+        low = yield ("agg", sc.all_stock_keys(),
+                     AggOp("count_below", "int", 50))
     else:
         for key in sc.all_stock_keys():
             q = yield ("r", key)
@@ -128,8 +135,7 @@ def customer_balance(rng: random.Random, sc: Scale,
                      batched: bool = False) -> Iterator[Step]:
     total = 0
     if batched:
-        vals = yield ("scan", sc.all_customer_keys())
-        total = sum(v for v in vals if isinstance(v, int))
+        total = yield ("agg", sc.all_customer_keys(), AggOp("sum", "int"))
     else:
         for key in sc.all_customer_keys():
             v = yield ("r", key)
@@ -145,16 +151,14 @@ def order_revenue(rng: random.Random, sc: Scale,
     if batched:
         dkeys = [f"district:{w}:{d}" for w in range(sc.warehouses)
                  for d in range(sc.districts)]
-        dists = yield ("scan", dkeys)
+        dists = yield ("scan", dkeys)       # values needed: derive key range
         okeys = []
         for dk, dist in zip(dkeys, dists):
             _, w, d = dk.split(":")
             hi = (dist or {"next_o_id": 0})["next_o_id"]
             okeys += [f"order:{w}:{d}:{o}" for o in range(max(hi - 5, 0), hi)]
         if okeys:
-            orders = yield ("scan", okeys)
-            rev = sum(o.get("total", 0) for o in orders
-                      if isinstance(o, dict))
+            rev = yield ("agg", okeys, AggOp("sum", "total"))
         yield ("out", rev)
         return
     for w in range(sc.warehouses):

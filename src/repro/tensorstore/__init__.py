@@ -3,15 +3,19 @@
 from .versioned import VersionedParamStore
 from .paged import (init_store, visible_slots, snapshot_read_ref,
                     visible_slots_members, snapshot_read_members,
-                    publish_page)
+                    publish_page, as_page_range, gather_pages)
 from .mirror import PagedMirror, decode_value, encode_value
-from .version_store import (ChainVersionStore, PagedVersionStore,
-                            VersionStore)
+from .version_store import (AggOp, AggPlan, ChainVersionStore,
+                            PagedVersionStore, Plan, ScanPlan, VersionStore,
+                            agg_value, apply_agg, finalize_agg)
 
 __all__ = [
     "VersionedParamStore",
     "init_store", "visible_slots", "snapshot_read_ref",
     "visible_slots_members", "snapshot_read_members", "publish_page",
+    "as_page_range", "gather_pages",
     "PagedMirror", "encode_value", "decode_value",
     "VersionStore", "ChainVersionStore", "PagedVersionStore",
+    "AggOp", "AggPlan", "ScanPlan", "Plan",
+    "agg_value", "apply_agg", "finalize_agg",
 ]

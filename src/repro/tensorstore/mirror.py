@@ -44,6 +44,14 @@ TAG_INIT = 0        # never-written page: decodes to the initial value 0
 TAG_INT = 1         # [1, v]
 TAG_DISTRICT = 2    # [2, next_o_id, ytd]
 TAG_ORDER = 3       # [3, total, n_items, items...]
+TAG_PAD = -1        # sublane-padding page: participates in NO aggregate
+_NO_TAG = -2        # "no alternate tag": matches nothing (incl. TAG_PAD)
+
+# aggregate-field -> (tag_main, tag_alt) payload validity for the fused
+# device aggregation (`rss_scan_agg`): the kernel-side twin of
+# `version_store.agg_value`.  "int" includes TAG_INIT because an initial
+# page decodes to the int 0 (and its field element is 0).
+AGG_FIELD_TAGS = {"int": (TAG_INT, TAG_INIT), "total": (TAG_ORDER, _NO_TAG)}
 
 _INT32 = np.iinfo(np.int32)
 
@@ -188,8 +196,7 @@ class PagedMirror:
 
     def _scan(self, keys: Sequence[str], mask_fn, *,
               with_writers: bool = False):
-        pages = np.asarray([self.page_of.get(k, -1) for k in keys],
-                           np.int64)
+        pages = self.page_index(keys)
         out: list[Any] = [0] * len(keys)
         writers = [0] * len(keys)
         hit = np.nonzero(pages >= 0)[0]
@@ -201,6 +208,18 @@ class PagedMirror:
                 out[int(i)] = decode_value(row)
                 writers[int(i)] = int(wtr)
         return (out, writers) if with_writers else out
+
+    def _writers_for(self, pages: np.ndarray, mask_fn) -> list[int]:
+        """Writer txn per key out of the SAME visibility resolve `_scan`
+        uses — no payload decode; the read-set half of a fused aggregate."""
+        writers = [0] * len(pages)
+        hit = np.nonzero(pages >= 0)[0]
+        if hit.size:
+            rows = pages[hit]
+            slot = self._visible_slots(rows, mask_fn)
+            for i, wtr in zip(hit, self.writer[rows, slot]):
+                writers[int(i)] = int(wtr)
+        return writers
 
     @staticmethod
     def _member_mask(snap: RssSnapshot, members: np.ndarray):
@@ -239,6 +258,84 @@ class PagedMirror:
 
     def read_members(self, key: str, snap: RssSnapshot) -> Any:
         return self.scan_members([key], snap)[0]
+
+    # ------------------------------------------------------ fused aggregates
+    def page_index(self, keys: Sequence[str]) -> np.ndarray:
+        """Dense key -> page resolution for a plan's key sequence (-1 for
+        keys never written: they read as the initial value 0)."""
+        return np.asarray([self.page_of.get(k, -1) for k in keys], np.int64)
+
+    def _snapshot_mask(self, snapshot):
+        """(mask_fn, member_ts, floor) for either snapshot kind: an RSS
+        snapshot masks by floor + above-floor members; an int watermark is
+        the degenerate empty-member case (floor == watermark), so the same
+        fused kernel serves SI-V aggregates."""
+        if isinstance(snapshot, RssSnapshot):
+            members = self.member_seqs_for(snapshot)
+            return (self._member_mask(snapshot, members), members,
+                    snapshot.floor_seq)
+        wm = int(snapshot)
+        return (lambda ts: np.where(ts <= wm, ts, -1),
+                np.zeros((0,), np.int32), wm)
+
+    def jnp_store_for(self, pages: np.ndarray) -> dict:
+        """Columnar multi-page gather: the `{'data','ts'}` sub-store for a
+        resolved page-index array, device-shaped for the fused scan
+        kernels.  Missing keys (-1) become initial pages (ts == 0, decode
+        to 0); sublane-padding pages are tagged TAG_PAD so fused aggregates
+        never count them.  A contiguous ascending page range
+        (`paged.as_page_range`) skips the gather entirely (pure slice —
+        the dense key-range fast path)."""
+        import jax.numpy as jnp
+
+        from .paged import as_page_range
+
+        n = int(pages.shape[0])
+        pad = (-n) % 8 if n else 8
+        rng = as_page_range(pages)
+        if rng is not None:
+            data, ts = self.data[rng[0]:rng[1]], self.ts[rng[0]:rng[1]]
+        else:
+            safe = np.where(pages >= 0, pages, 0)
+            data, ts = self.data[safe], self.ts[safe]
+            miss = pages < 0
+            if miss.any():
+                data[miss] = 0
+                ts[miss] = 0
+        if pad:
+            pd = np.zeros((pad,) + self.data.shape[1:], np.int32)
+            pd[:, :, 0] = TAG_PAD
+            data = np.concatenate([data, pd])
+            ts = np.concatenate(
+                [ts, np.zeros((pad,) + self.ts.shape[1:], np.int32)])
+        return {"data": jnp.asarray(data), "ts": jnp.asarray(ts)}
+
+    def agg_with_writers(self, keys: Sequence[str], snapshot, op, *,
+                         use_kernel: bool = True,
+                         interpret=None) -> tuple[list[int], list[int]]:
+        """Fused scan+aggregate over the paged image: ONE `rss_scan_agg`
+        device pass resolves visibility for the plan's page range and
+        reduces the member-visible payloads — they are never decoded back
+        to Python.  Writers come out of the same host-side slot resolve
+        (no payload decode either), so the engine records the aggregate's
+        read set exactly like a scan's.
+
+        `op` is a `version_store.AggOp`; returns (the folded [sum, count,
+        count_below, min, max] Python ints, writer txn per key)."""
+        pages = self.page_index(keys)
+        mask_fn, member_ts, floor = self._snapshot_mask(snapshot)
+        writers = self._writers_for(pages, mask_fn)
+        if not len(keys):
+            return [0, 0, 0, int(_INT32.max), int(_INT32.min)], writers
+        from ..kernels.rss_scan_agg.ops import snapshot_agg_members
+
+        tag_main, tag_alt = AGG_FIELD_TAGS[op.field]
+        raw = snapshot_agg_members(
+            self.jnp_store_for(pages), np.asarray(member_ts, np.int32),
+            floor, tag_main=tag_main, tag_alt=tag_alt,
+            threshold=op.threshold, use_kernel=use_kernel,
+            interpret=interpret)
+        return raw, writers
 
     # -------------------------------------------------------- device export
     def jnp_store(self) -> dict:

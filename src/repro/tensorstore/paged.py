@@ -35,6 +35,48 @@ def init_store(n_pages: int, n_slots: int, page_elems: int,
     return {"data": data, "ts": ts}
 
 
+def as_page_range(pages) -> Optional[tuple[int, int]]:
+    """Dense key-range -> page-range resolution: when a page-index array is
+    a contiguous ascending run, return its (start, stop) so multi-page
+    scans can slice the store instead of gathering (the columnar fast
+    path); None otherwise (holes, missing keys, or arbitrary order)."""
+    import numpy as np
+
+    arr = np.asarray(pages)
+    if arr.size == 0 or arr[0] < 0:
+        return None
+    start = int(arr[0])
+    if np.array_equal(arr, np.arange(start, start + arr.size)):
+        return start, start + int(arr.size)
+    return None
+
+
+def gather_pages(store: dict, pages) -> dict:
+    """Columnar multi-page gather on device: the `{'data','ts'}` sub-store
+    for a key-range of pages (one `jnp.take` per buffer — no host round
+    trip), sliced instead when the range is dense (`as_page_range`).
+
+    The sub-store is padded to a sublane multiple of 8 pages with initial
+    (ts == 0, zero-payload) pages so the gather kernels' block asserts
+    hold for any page count — padding pages resolve to the initial value,
+    same as `PagedMirror.jnp_store`'s padding."""
+    rng = as_page_range(pages)
+    if rng is not None:
+        start, stop = rng
+        data, ts = store["data"][start:stop], store["ts"][start:stop]
+    else:
+        idx = jnp.asarray(pages, jnp.int32)
+        data = jnp.take(store["data"], idx, axis=0)
+        ts = jnp.take(store["ts"], idx, axis=0)
+    pad = (-data.shape[0]) % 8
+    if pad:
+        data = jnp.concatenate(
+            [data, jnp.zeros((pad,) + data.shape[1:], data.dtype)])
+        ts = jnp.concatenate(
+            [ts, jnp.zeros((pad,) + ts.shape[1:], ts.dtype)])
+    return {"data": data, "ts": ts}
+
+
 def visible_slots(ts: jax.Array, watermark: jax.Array) -> jax.Array:
     """[P,K] ts, scalar watermark -> [P] slot index of newest visible
     version (largest ts <= watermark; ties impossible, ts unique per page)."""

@@ -9,26 +9,116 @@ semantics but different shapes:
   * `tensorstore.mirror.PagedMirror` — the WAL-mirrored K-slot paged store
     (the Pallas-kernel-shaped OLAP surface).
 
-`VersionStore` unifies them behind three operations:
+`VersionStore` unifies them behind four operations:
 
   * point read at a watermark        (SI-V prefix visibility),
   * point read under RSS membership  (the paper's protected read),
   * **batched snapshot scan** over a key sequence — ONE visibility
-    resolution for the whole read set instead of N per-key walks; this is
-    the OLAP hot path the driver routes through.
+    resolution for the whole read set instead of N per-key walks,
+  * **plan execution** — the query-plan IR of the device-resident OLAP
+    executor: `ScanPlan` (materialize the visible values) and `AggPlan`
+    (reduce a tagged field of the visible values: sum / count /
+    count-below / min / max).  `ChainVersionStore` executes plans on the
+    per-key Python path (the oracle); `PagedVersionStore` lowers `AggPlan`
+    to the fused `rss_scan_agg` Pallas kernel, so aggregate results come
+    back as ONE scalar — page payloads never decode back to Python.
 
 Snapshots are either an int commit-seq watermark or an exported
-`RssSnapshot`; `scan()` dispatches on the type.
+`RssSnapshot`; `scan()`/`execute()` dispatch on the type.
 """
 
 from __future__ import annotations
 
-from typing import Any, Protocol, Sequence, Union, runtime_checkable
+from dataclasses import dataclass
+from typing import Any, Optional, Protocol, Sequence, Union, runtime_checkable
 
 from ..core.replica import RssSnapshot
 from .mirror import PagedMirror
 
 Snapshot = Union[int, RssSnapshot]
+
+
+# ------------------------------------------------------------- query-plan IR
+@dataclass(frozen=True)
+class AggOp:
+    """One aggregate over a tagged scalar field of the visible values.
+
+    kind:  "sum" | "count" | "count_below" | "min" | "max"
+    field: "int"   — plain integer values (an unwritten/initial key IS the
+                     int 0, so it participates — matching the per-key
+                     oracle's `isinstance(v, int)` test),
+           "total" — the "total" field of order-shaped dict values.
+    threshold: the count_below predicate bound (x < threshold).
+    """
+    kind: str
+    field: str = "int"
+    threshold: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class ScanPlan:
+    keys: tuple[str, ...]
+
+
+@dataclass(frozen=True)
+class AggPlan:
+    keys: tuple[str, ...]
+    op: AggOp
+
+
+Plan = Union[ScanPlan, AggPlan]
+
+
+def agg_value(value: Any, field: str) -> Optional[int]:
+    """The aggregable scalar of a decoded value under `field`, or None when
+    the value does not participate (the Python-side twin of the kernel's
+    tag test — `tensorstore.mirror.AGG_FIELD_TAGS` maps fields to payload
+    tags)."""
+    if field == "int":
+        if isinstance(value, int) and not isinstance(value, bool):
+            return int(value)
+        return None
+    if field == "total":
+        if isinstance(value, dict) and "total" in value:
+            return int(value["total"])
+        return None
+    raise ValueError(f"unknown aggregate field {field!r}")
+
+
+def apply_agg(values: Sequence[Any], op: AggOp) -> int:
+    """Reduce decoded values under `op` — the per-key oracle the fused
+    kernel path must equal bitwise."""
+    xs = [x for v in values if (x := agg_value(v, op.field)) is not None]
+    if op.kind == "sum":
+        return sum(xs)
+    if op.kind == "count":
+        return len(xs)
+    if op.kind == "count_below":
+        assert op.threshold is not None, "count_below needs a threshold"
+        return sum(1 for x in xs if x < op.threshold)
+    if op.kind == "min":
+        return min(xs, default=0)
+    if op.kind == "max":
+        return max(xs, default=0)
+    raise ValueError(f"unknown aggregate kind {op.kind!r}")
+
+
+def finalize_agg(raw: Sequence[int], op: AggOp) -> int:
+    """Pick `op`'s statistic out of the kernel's [sum, count, count_below,
+    min, max] vector (min/max fold their empty-set sentinels to 0, matching
+    `apply_agg`)."""
+    s, n, below, mn, mx = (int(v) for v in raw)
+    if op.kind == "sum":
+        return s
+    if op.kind == "count":
+        return n
+    if op.kind == "count_below":
+        return below
+    if op.kind == "min":
+        return mn if n else 0
+    if op.kind == "max":
+        return mx if n else 0
+    raise ValueError(f"unknown aggregate kind {op.kind!r}")
 
 
 @runtime_checkable
@@ -47,12 +137,36 @@ class VersionStore(Protocol):
     def scan_with_writers(self, keys: Sequence[str], snapshot: Snapshot) \
         -> tuple[list[Any], list[int]]: ...
 
+    def execute(self, plan: Plan, snapshot: Snapshot) -> Any: ...
+
+    def execute_with_writers(self, plan: Plan, snapshot: Snapshot) \
+        -> tuple[Any, list[int]]: ...
+
 
 class _ScanDispatch:
     def scan(self, keys: Sequence[str], snapshot: Snapshot) -> list[Any]:
         if isinstance(snapshot, RssSnapshot):
             return self.scan_members(keys, snapshot)
         return self.scan_at(keys, int(snapshot))
+
+    # ------------------------------------------------------ plan execution
+    def execute(self, plan: Plan, snapshot: Snapshot) -> Any:
+        """Execute a query plan at a snapshot: a list of values for
+        `ScanPlan`, one int for `AggPlan`."""
+        return self.execute_with_writers(plan, snapshot)[0]
+
+    def execute_with_writers(self, plan: Plan, snapshot: Snapshot) \
+            -> tuple[Any, list[int]]:
+        """Default lowering: one batched visibility walk, then (for
+        `AggPlan`) a host-side reduce — the per-key oracle path.  Stores
+        with a device-resident image override this to fuse resolve +
+        reduce in one kernel pass.  The writers always cover every plan
+        key, so the engine records aggregate read sets exactly like scan
+        read sets."""
+        vals, writers = self.scan_with_writers(plan.keys, snapshot)
+        if isinstance(plan, AggPlan):
+            return apply_agg(vals, plan.op), writers
+        return vals, writers
 
 
 class ChainVersionStore(_ScanDispatch):
@@ -107,10 +221,20 @@ class ChainVersionStore(_ScanDispatch):
 class PagedVersionStore(_ScanDispatch):
     """VersionStore over the WAL-mirrored paged store: scans are single
     vectorized visibility passes (`version_gather`/`rss_gather` algorithm);
-    `mirror.jnp_store()` exposes the same state to the Pallas kernels."""
+    `mirror.jnp_store()` exposes the same state to the Pallas kernels, and
+    `AggPlan`s lower to the fused `rss_scan_agg` kernel — visibility
+    resolve + reduction in one device pass over the plan's page range."""
 
     def __init__(self, mirror: PagedMirror) -> None:
         self.mirror = mirror
+
+    def execute_with_writers(self, plan: Plan, snapshot: Snapshot) \
+            -> tuple[Any, list[int]]:
+        if isinstance(plan, AggPlan):
+            raw, writers = self.mirror.agg_with_writers(plan.keys, snapshot,
+                                                        plan.op)
+            return finalize_agg(raw, plan.op), writers
+        return self.scan_with_writers(plan.keys, snapshot)
 
     def read_at(self, key: str, watermark: int) -> Any:
         return self.mirror.read_at(key, watermark)

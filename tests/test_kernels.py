@@ -197,3 +197,48 @@ class TestSsmScan:
                             block_di=64)
         np.testing.assert_allclose(y_k, y_model, rtol=2e-4, atol=2e-4)
         np.testing.assert_allclose(h_k, h_model, rtol=2e-4, atol=2e-4)
+
+
+class TestInterpretSwitch:
+    """REPRO_INTERPRET is the ONE switch between interpret-mode validation
+    and TPU-compiled execution for every kernel op (`repro.kernels.config`)."""
+
+    def test_default_is_interpret(self, monkeypatch):
+        from repro.kernels.config import default_interpret, resolve_interpret
+        monkeypatch.delenv("REPRO_INTERPRET", raising=False)
+        assert default_interpret() is True
+        assert resolve_interpret(None) is True
+
+    @pytest.mark.parametrize("val,want", [
+        ("1", True), ("true", True), ("yes", True), ("", True),
+        ("0", False), ("false", False), ("No", False), ("OFF", False),
+    ])
+    def test_env_values(self, monkeypatch, val, want):
+        from repro.kernels.config import default_interpret
+        monkeypatch.setenv("REPRO_INTERPRET", val)
+        assert default_interpret() is want
+
+    def test_explicit_argument_wins_over_env(self, monkeypatch):
+        from repro.kernels.config import resolve_interpret
+        monkeypatch.setenv("REPRO_INTERPRET", "0")
+        assert resolve_interpret(True) is True
+        assert resolve_interpret(None) is False
+
+    def test_ops_run_through_the_switch(self, monkeypatch):
+        """An op called with interpret=None resolves through the env switch
+        and still matches its oracle (interpret mode on this CPU)."""
+        from repro.kernels.rss_scan_agg.ops import (fold_partials,
+                                                    snapshot_agg_members)
+        from repro.kernels.rss_scan_agg.ref import rss_scan_agg_ref
+        monkeypatch.setenv("REPRO_INTERPRET", "1")
+        rng = np.random.default_rng(0)
+        data = np.zeros((8, 2, 8), np.int32)
+        data[:, :, 0] = 1
+        data[:, :, 1] = rng.integers(0, 50, (8, 2))
+        ts = rng.integers(0, 9, (8, 2)).astype(np.int32)
+        store = {"data": jnp.asarray(data), "ts": jnp.asarray(ts)}
+        mem = jnp.asarray([], jnp.int32)
+        out = snapshot_agg_members(store, mem, 5, tag_main=1, tag_alt=0)
+        ref = fold_partials(
+            rss_scan_agg_ref(store["data"], store["ts"], mem, 5, 1, 0))
+        assert out == ref

@@ -1,0 +1,110 @@
+"""Refcounted snapshot-pin sharing: PRoT readers at the same horizon share
+ONE pin-table entry (one pinned RssSnapshot), `gc_floor_seq()` semantics
+unchanged, and the floor never regresses while any sharer is live."""
+
+import random
+
+import pytest
+
+from repro.core import PRoTManager, RSSManager, Wal
+
+
+def _commit(wal, tid):
+    wal.log_begin(tid)
+    wal.log_commit(tid, seq=wal.head_lsn + 1)
+
+
+def test_same_horizon_readers_share_one_pin_entry():
+    wal = Wal()
+    for t in range(1, 6):
+        _commit(wal, t)
+    man = RSSManager()
+    man.catch_up(wal)
+    man.construct()
+    prot = PRoTManager(man)
+    handles = [prot.acquire() for _ in range(100)]
+    snaps = {id(s) for _, s in handles}
+    assert len(snaps) == 1               # every sharer sees ONE snapshot
+    assert prot.pinned == 1              # one pin-table entry, not 100
+    assert prot.readers == 100
+    for rid, _ in handles[:99]:
+        prot.release(rid)
+    assert prot.pinned == 1              # last sharer still holds the pin
+    prot.release(handles[99][0])
+    assert prot.pinned == 0 and prot.readers == 0
+
+
+def test_distinct_horizons_pin_distinct_entries():
+    wal = Wal()
+    man = RSSManager()
+    prot = PRoTManager(man)
+    rids = []
+    for t in range(1, 4):
+        _commit(wal, t)
+        man.catch_up(wal)
+        man.construct()
+        rids.append(prot.acquire()[0])
+        rids.append(prot.acquire()[0])   # same horizon: shares
+    assert prot.pinned == 3 and prot.readers == 6
+    assert prot.gc_floor() == min(lsn for lsn in prot._pins)
+    for rid in rids:
+        prot.release(rid)
+    assert prot.pinned == 0
+
+
+def test_release_is_idempotent_and_unknown_safe():
+    man = RSSManager()
+    prot = PRoTManager(man)
+    rid, _ = prot.acquire()
+    prot.release(rid)
+    prot.release(rid)                    # double release: no-op
+    prot.release(12345)                  # unknown reader: no-op
+    assert prot.pinned == 0
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_floor_never_regresses_while_sharers_live(seed):
+    """Property: over random interleavings of commits / refreshes /
+    shared acquires / releases, `gc_floor_seq()` (and `gc_floor()`) are
+    monotone non-decreasing — releasing one sharer of a multi-reader
+    horizon never drops the floor, and pins only ever advance it."""
+    rng = random.Random(seed)
+    wal = Wal()
+    man = RSSManager()
+    prot = PRoTManager(man)
+    tid = 0
+    live = []
+    floor_seq = prot.gc_floor_seq()
+    floor_lsn = prot.gc_floor()
+    for _ in range(400):
+        act = rng.random()
+        if act < 0.4:
+            tid += 1
+            _commit(wal, tid)
+        elif act < 0.6:
+            man.catch_up(wal)
+            man.construct()
+        elif act < 0.8 or not live:
+            live.append(prot.acquire()[0])
+        else:
+            prot.release(live.pop(rng.randrange(len(live))))
+        if live:                         # floor monotone while pinned
+            assert prot.gc_floor_seq() >= floor_seq
+            assert prot.gc_floor() >= floor_lsn
+        floor_seq = prot.gc_floor_seq()
+        floor_lsn = prot.gc_floor()
+        assert prot.pinned <= prot.readers
+        assert prot.pinned <= len({prot._readers[r] for r in live}) \
+            if live else prot.pinned == 0
+
+
+# ------------------------------------------------------------- hypothesis
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_floor_never_regresses_hypothesis(seed):
+        test_floor_never_regresses_while_sharers_live(seed)
+except ImportError:                      # pragma: no cover
+    pass

@@ -1,0 +1,91 @@
+"""Predicted-lag routing: the cluster learns each replica's ship cadence
+and `predicted_staleness` routes on the lag a replica WILL serve with once
+its due scheduled ship runs — cutting ship-then-serve sync fallbacks
+versus observed-lag bounded staleness, with both predicted and observed
+lag recorded in the routing metrics."""
+
+from repro.cluster import PredictedStaleness, make_policy
+from repro.mvcc import Engine, MultiNodeHTAP, run_multi_node
+from repro.mvcc.workload import Scale, load_initial
+
+
+def _cluster(n=2, policy="predicted_staleness", max_staleness=10):
+    htap = MultiNodeHTAP("ssi+rss", n_replicas=n, route_policy=policy,
+                         max_staleness=max_staleness)
+    load_initial(htap.primary, Scale(warehouses=1, districts=1, customers=2,
+                                     items=4))
+    htap.ship_log()
+    return htap
+
+
+def _commit_n(eng: Engine, n: int, start: int = 0) -> None:
+    for i in range(n):
+        t = eng.begin()
+        eng.write(t, f"x{(start + i) % 7}", start + i)
+        eng.commit(t)
+
+
+def test_make_policy_resolves_predicted():
+    p = make_policy("predicted_staleness", max_lag=17)
+    assert isinstance(p, PredictedStaleness)
+    assert p.max_lag == 17 and p.predictive
+
+
+def test_ship_cadence_learned_from_ship_history():
+    htap = _cluster()
+    cl = htap.cluster
+    assert cl.ship_cadence(0) is None       # one ship: no cadence yet
+    for r in range(3):
+        _commit_n(htap.primary, 5, start=10 * r)
+        htap.ship_log(replica=0)
+    cadence = cl.ship_cadence(0)
+    assert cadence is not None and 10 <= cadence <= 20  # ~15 records/ship
+    # replica 1 never shipped again: still cadence-less, predicted falls
+    # back to observed lag
+    assert cl.ship_cadence(1) is None
+    assert cl.predicted_lag(1) == cl.lag_records(1)
+
+
+def test_predicted_lag_zero_when_ship_due():
+    htap = _cluster()
+    cl = htap.cluster
+    for r in range(3):
+        _commit_n(htap.primary, 4, start=10 * r)
+        htap.ship_log(replica=0)
+    _commit_n(htap.primary, 40, start=100)  # way past one cadence interval
+    assert cl.ship_due(0)
+    assert cl.predicted_lag(0) == 0
+    assert cl.lag_records(0) > 0            # observed disagrees
+
+
+def test_acquire_runs_due_scheduled_ship_and_records_both_lags():
+    htap = _cluster(n=1, max_staleness=5)
+    cl = htap.cluster
+    for r in range(3):
+        _commit_n(htap.primary, 4, start=10 * r)
+        htap.ship_log(replica=0)
+    _commit_n(htap.primary, 30, start=100)
+    before = cl.stats["ship_then_serve"]
+    handle = cl.acquire()
+    cl.release(handle)
+    assert cl.stats["scheduled_ships"] == 1     # due ship ran at serve
+    assert cl.stats["ship_then_serve"] == before  # NOT an emergency round
+    assert cl.lag_records(0) == 0               # served fresh
+    assert cl.stats["predicted_lag_sum"] == 0
+    assert cl.avg_predicted_lag() <= cl.avg_served_lag() + 1e-9
+
+
+def test_predicted_cuts_sync_fallbacks_vs_bounded_on_skewed_fleet():
+    common = dict(olap_mode="ssi+rss", oltp_clients=4, olap_clients=2,
+                  rounds=800, seed=9, olap_scan=True, ship_every=100,
+                  n_replicas=4, max_staleness=40, ship_skew=1,
+                  freshness_hints=True, check_scans=True)
+    mb = run_multi_node(route_policy="bounded_staleness", **common)
+    mp = run_multi_node(route_policy="predicted_staleness", **common)
+    assert mb.olap_ship_then_serve > 0          # the skew forces fallbacks
+    assert mp.olap_ship_then_serve < mb.olap_ship_then_serve
+    assert mp.olap_scheduled_ships > 0
+    # identical logical results regardless of routing (serializability is
+    # not a function of the serving replica)
+    assert mp.olap_avg_predicted_lag <= mp.olap_avg_lag_records + 1e-9
+    assert mp.olap_commits > 0 and mp.olap_agg_steps > 0

@@ -1,0 +1,270 @@
+"""Fused rss_scan_agg == the per-key chain oracle, at every seam.
+
+The tentpole contract of the device-resident OLAP executor: the fused
+Pallas pass (visibility resolve + on-device reduction, `rss_scan_agg`)
+must produce exactly the per-key chain-walk aggregate for every plan —
+under randomized replication lag (batched shipping), RSS state GC, PRoT
+pins, legacy (unstamped) WAL records, missing keys, and both snapshot
+kinds (compressed RSS snapshots and SI-V watermarks).
+
+Seeded-random stream tests always run; hypothesis widens the search when
+available (same harness style as tests/test_rss_incremental.py).
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import PRoTManager, RSSManager, Wal
+from repro.core.wal import effective_commit_seq
+from repro.mvcc import Engine
+from repro.mvcc.store import Store
+from repro.tensorstore import (AggOp, AggPlan, ChainVersionStore, PagedMirror,
+                               PagedVersionStore, ScanPlan, apply_agg,
+                               finalize_agg)
+
+KEYS = [f"stock:{i}" for i in range(8)] + ["warehouse:0", "district:0:0",
+                                           "order:0:0:0", "order:0:0:1"]
+OPS = [AggOp("sum", "int"), AggOp("count", "int"),
+       AggOp("count_below", "int", 50), AggOp("count_below", "int", 0),
+       AggOp("min", "int"), AggOp("max", "int"),
+       AggOp("sum", "total"), AggOp("count", "total"),
+       AggOp("min", "total"), AggOp("max", "total")]
+
+
+def _rand_value(rng, key):
+    if key.startswith("district"):
+        return {"next_o_id": rng.randrange(40), "ytd": rng.randrange(99)}
+    if key.startswith("order"):
+        return {"items": [rng.randrange(9) for _ in range(rng.randrange(4))],
+                "total": rng.randrange(500)}
+    return rng.randrange(-100, 200)
+
+
+def random_writes_wal(rng, steps=250, *, legacy_prob=0.0):
+    """Engine-shaped WAL with committed writesets attached (workload-shaped
+    values), deps after reader commits, optional legacy (seq=0) commits."""
+    wal = Wal()
+    active = []
+    tid = 0
+    for _ in range(steps):
+        act = rng.random()
+        if act < 0.35 or not active:
+            tid += 1
+            wal.log_begin(tid)
+            active.append(tid)
+        elif act < 0.8:
+            t = active.pop(rng.randrange(len(active)))
+            seq = 0 if rng.random() < legacy_prob else wal.head_lsn + 1
+            writes = [(k, _rand_value(rng, k))
+                      for k in rng.sample(KEYS, rng.randint(1, 3))]
+            wal.log_commit(t, writes, seq=seq)
+            if active and rng.random() < 0.5:
+                wal.log_deps(t, sorted(rng.sample(
+                    active, rng.randint(1, min(2, len(active))))))
+        else:
+            t = active.pop(rng.randrange(len(active)))
+            wal.log_abort(t)
+    return wal
+
+
+def check_agg_stream(seed, *, gc_prob=0.0, legacy_prob=0.0, pin_prob=0.0):
+    """Replay a random stream into RSSManager + paged mirror + chain store
+    in randomized batches; at every round, every live snapshot must
+    aggregate identically through the fused kernel and the chain oracle."""
+    rng = random.Random(seed)
+    wal = random_writes_wal(rng, legacy_prob=legacy_prob)
+    man = RSSManager()
+    prot = PRoTManager(man)
+    mirror = PagedMirror(slots=64)            # retain everything: parity
+    store = Store()                           # under K-slot pressure is the
+    chain = ChainVersionStore(store)          # driver tests' job
+    paged = PagedVersionStore(mirror)
+    applied_seq = 0
+    pruned_floor = 0          # chain reads below this are invalid post-prune
+    pins = []
+    while man.applied_lsn < wal.head_lsn:
+        batch = rng.randint(1, 15)            # lagged, split shipping
+        for rec in wal.tail(man.applied_lsn):
+            man.apply(rec)
+            mirror.apply(rec, gc_floor=prot.gc_floor_seq())
+            if rec.type == "commit":
+                seq = effective_commit_seq(applied_seq, rec.seq)
+                for k, v in rec.writes:
+                    store.chain(k).install(seq, rec.txn, v)
+                applied_seq = seq
+            batch -= 1
+            if batch <= 0:
+                break
+        snap = man.construct()
+        qkeys = tuple(rng.sample(KEYS, rng.randint(1, len(KEYS)))
+                      + ["missing:key"])
+        for s in [snap, applied_seq,
+                  max(applied_seq - 3, pruned_floor)] \
+                + [p[1] for p in pins]:
+            for op in rng.sample(OPS, 4):
+                plan = AggPlan(qkeys, op)
+                want, ww = chain.execute_with_writers(plan, s)
+                got, gw = paged.execute_with_writers(plan, s)
+                assert want == got, (seed, op, s, want, got)
+                assert ww == gw, (seed, op, s)
+                # ... and both equal the host reduce of the scanned values
+                assert want == apply_agg(chain.execute(ScanPlan(qkeys), s),
+                                         op), (seed, op)
+        if pin_prob and rng.random() < pin_prob:
+            pins.append(prot.acquire())
+        if pins and rng.random() < 0.3:
+            prot.release(pins.pop(rng.randrange(len(pins)))[0])
+        if gc_prob and rng.random() < gc_prob:
+            man.gc(keep_lsn=prot.gc_floor(), keep_seq=prot.gc_floor_seq())
+            store.prune(prot.gc_floor_seq())
+            pruned_floor = max(pruned_floor, prot.gc_floor_seq())
+
+
+# ------------------------------------------------------------ always-run
+@pytest.mark.parametrize("seed", range(8))
+def test_fused_agg_equals_chain_oracle(seed):
+    check_agg_stream(seed)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_fused_agg_equals_oracle_with_gc_and_pins(seed):
+    check_agg_stream(seed, gc_prob=0.5, pin_prob=0.3)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_fused_agg_equals_oracle_with_legacy_records(seed):
+    check_agg_stream(seed, legacy_prob=0.3, gc_prob=0.3, pin_prob=0.2)
+
+
+# ------------------------------------------------------ kernel-level parity
+@pytest.mark.parametrize("seed", range(4))
+def test_kernel_matches_ref(seed):
+    """Pallas kernel == jnp oracle over random stores, tags, floors,
+    members, thresholds — including TAG_PAD pages and empty member sets."""
+    import jax.numpy as jnp
+    from repro.kernels.rss_scan_agg.kernel import rss_scan_agg
+    from repro.kernels.rss_scan_agg.ref import rss_scan_agg_ref
+
+    rng = np.random.default_rng(seed)
+    for P, K, E in [(8, 3, 8), (16, 4, 32), (64, 4, 16)]:
+        data = np.zeros((P, K, E), np.int32)
+        data[:, :, 0] = rng.integers(-1, 4, (P, K))     # tags incl. TAG_PAD
+        data[:, :, 1] = rng.integers(-100, 100, (P, K))
+        ts = rng.integers(0, 60, (P, K)).astype(np.int32)
+        for M in (0, 7, 140):
+            mem = np.sort(rng.choice(np.arange(1, 60), size=min(M, 59),
+                                     replace=False)).astype(np.int32)
+            for floor in (0, 23):
+                for tag_main, tag_alt, thr in [(1, 0, 50), (3, -2, 10),
+                                               (1, -2, 0)]:
+                    args = (jnp.asarray(data), jnp.asarray(ts),
+                            jnp.asarray(mem), floor, tag_main, tag_alt, thr)
+                    np.testing.assert_array_equal(
+                        np.asarray(rss_scan_agg(*args)),
+                        np.asarray(rss_scan_agg_ref(*args)),
+                        err_msg=f"{seed},{P},{M},{floor}")
+
+
+def test_sum_exact_past_int32_whole_scan():
+    """Device partials are int32 per block, but the host fold is exact
+    Python-int arithmetic: a whole-scan sum past 2**31 must NOT wrap and
+    must equal the per-key chain oracle bitwise."""
+    eng = Engine("ssi")
+    big = 200_000_000                      # 16 pages * 2e8 = 3.2e9 > 2**31
+    t = eng.begin()
+    for i in range(16):
+        eng.write(t, f"big:{i:02d}", big)
+    eng.commit(t)
+    mirror = PagedMirror()
+    mirror.catch_up(eng.wal)
+    keys = tuple(f"big:{i:02d}" for i in range(16))
+    plan = AggPlan(keys, AggOp("sum", "int"))
+    chain = ChainVersionStore(eng.store).execute(plan, eng.seq)
+    fused = PagedVersionStore(mirror).execute(plan, eng.seq)
+    assert chain == fused == 16 * big      # 3_200_000_000, no int32 wrap
+
+
+def test_finalize_agg_empty_set_sentinels():
+    raw = [0, 0, 0, 2 ** 31 - 1, -(2 ** 31)]    # kernel out, nothing valid
+    assert finalize_agg(raw, AggOp("min", "int")) == 0
+    assert finalize_agg(raw, AggOp("max", "int")) == 0
+    assert finalize_agg(raw, AggOp("sum", "int")) == 0
+
+
+def test_mirror_dense_page_range_fast_path():
+    """A contiguous key run hits the slice path of jnp_store_for; a
+    shuffled/holey run takes the gather — same aggregate either way."""
+    from repro.tensorstore.paged import as_page_range
+
+    eng = Engine("ssi")
+    rng = random.Random(3)
+    keys = [f"s:{i:02d}" for i in range(16)]   # lex order == page order
+    t = eng.begin()
+    for k in keys:
+        eng.write(t, k, rng.randrange(100))
+    eng.commit(t)
+    mirror = PagedMirror()
+    mirror.catch_up(eng.wal)
+    dense = mirror.page_index(keys)
+    assert as_page_range(dense) == (0, 16)
+    shuffled = list(keys)
+    rng.shuffle(shuffled)
+    assert as_page_range(mirror.page_index(shuffled + ["nope"])) is None
+    paged = PagedVersionStore(mirror)
+    chain = ChainVersionStore(eng.store)
+    for qkeys in (keys, shuffled + ["nope"]):
+        plan = AggPlan(tuple(qkeys), AggOp("sum", "int"))
+        assert paged.execute(plan, eng.seq) == chain.execute(plan, eng.seq)
+
+
+# ------------------------------------------------------------ engine seams
+class TestEngineAgg:
+    def test_agg_records_read_set_like_scan(self):
+        eng = Engine("ssi", record=True)
+        t0 = eng.begin()
+        eng.write(t0, "a", 7)
+        eng.write(t0, "b", {"items": [], "total": 3})
+        eng.commit(t0)
+        t = eng.begin(read_only=True, skip_siread=True)
+        got = eng.agg(t, ["a", "b", "c"], AggOp("sum", "int"))
+        assert got == 7                      # 7 + initial c=0; b is a dict
+        assert t.reads == {"a": t0.tid, "b": t0.tid, "c": 0}
+        reads = [op for op in eng.history.ops
+                 if op.kind == "r" and op.txn == t.tid]
+        assert len(reads) == 3
+
+    def test_ssi_tracked_agg_falls_back_to_per_key_reads(self):
+        eng = Engine("ssi")
+        t = eng.begin(read_only=True)
+        eng.agg(t, ["a", "b"], AggOp("count", "int"))
+        assert t.tid in eng.siread.get("a", set())
+        assert t.tid in eng.siread.get("b", set())
+
+    def test_agg_sees_own_writes(self):
+        eng = Engine("si")
+        t = eng.begin()
+        eng.write(t, "k1", 42)
+        assert eng.agg(t, ["k0", "k1"], AggOp("sum", "int")) == 42
+        assert eng.agg(t, ["k0", "k1"], AggOp("count_below", "int", 10)) == 1
+
+    def test_rss_agg_has_no_siread_side_effects(self):
+        from repro.core.replica import RssSnapshot
+        eng = Engine("ssi")
+        t = eng.begin(read_only=True, rss=RssSnapshot(0, frozenset()))
+        eng.agg(t, ["a", "b"], AggOp("sum", "int"))
+        assert "a" not in eng.siread and "b" not in eng.siread
+
+
+# ------------------------------------------------------------- hypothesis
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 10_000), gc=st.booleans(), legacy=st.booleans())
+    def test_fused_agg_equals_oracle_hypothesis(seed, gc, legacy):
+        check_agg_stream(seed, gc_prob=0.5 if gc else 0.0,
+                         legacy_prob=0.3 if legacy else 0.0, pin_prob=0.2)
+except ImportError:                      # pragma: no cover
+    pass

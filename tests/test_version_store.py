@@ -156,12 +156,14 @@ class TestDriverScanPath:
         m = run_single_node(olap_mode=mode, olap_scan=True, check_scans=True,
                             **SMALL)
         assert m.olap_scan_steps > 0
+        assert m.olap_agg_steps > 0     # fused aggregates, parity-checked
 
     @pytest.mark.parametrize("mode", ["ssi+si", "ssi+rss"])
     def test_multi_node_scan_matches_per_key_oracle(self, mode):
         m = run_multi_node(olap_mode=mode, olap_scan=True, check_scans=True,
                            **SMALL)
         assert m.olap_scan_steps > 0
+        assert m.olap_agg_steps > 0
 
     def test_single_node_paged_scan_matches_oracle_and_chain_run(self):
         m_paged = run_single_node(olap_mode="ssi+rss", olap_scan=True,
@@ -193,11 +195,19 @@ class TestDriverScanPath:
 
 
 class TestBatchedQueryShape:
-    def test_batched_generators_yield_scan_steps(self):
+    def test_batched_generators_yield_scan_or_agg_steps(self):
+        from repro.tensorstore import AggOp
         rng = random.Random(0)
         sc = Scale()
+        seen = set()
         for _ in range(20):
             gen, name = olap_query(rng, sc, batched=True)
             step = gen.send(None)
-            assert step[0] == "scan", name
+            assert step[0] in ("scan", "agg"), name
             assert isinstance(step[1], list) and step[1]
+            if step[0] == "agg":
+                assert isinstance(step[2], AggOp), name
+            seen.add(step[0])
+        # pure aggregates AND value scans (order_revenue's district pass)
+        # both appear in the batched mix
+        assert seen == {"scan", "agg"}
