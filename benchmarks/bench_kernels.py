@@ -171,6 +171,72 @@ def scan_agg_report(page_counts=(1024, 4096, 16384), iters=5) -> dict:
     }
 
 
+def _group_paths(P, G):
+    """(scan+host-decode+groupby closure, fused grouped-agg closure) for a
+    GROUP BY aggregate over P pages in G groups — the two executor shapes
+    `group_agg_report` sweeps.  Groups are contiguous page families (the
+    page-range-locality layout `PagedMirror.reserve` produces)."""
+    import numpy as np
+    from repro.kernels.rss_gather.ref import rss_gather_ref
+    from repro.kernels.rss_scan_agg.ops import fold_group_partials
+    from repro.kernels.rss_scan_agg.ref import rss_scan_agg_grouped_ref
+    from repro.tensorstore.mirror import decode_value
+    from repro.tensorstore.version_store import AggOp, apply_agg, finalize_agg
+
+    data, ts, members, floor = _workload_paged_store(P)
+    gid_flat = (np.arange(P, dtype=np.int64) * G // P).astype(np.int32)
+    gid = jnp.asarray(gid_flat.reshape(P, 1))
+    op = AggOp("sum", "int")
+    gather = jax.jit(lambda d, t, m: rss_gather_ref(d, t, m, floor))
+    fused = jax.jit(lambda d, t, g, m: rss_scan_agg_grouped_ref(
+        d, t, g, m, floor, tag_main=1, tag_alt=0, n_groups=G))
+
+    def scan_then_host_groupby():
+        rows = np.asarray(gather(data, ts, members))    # leaves the device
+        vals = [decode_value(r) for r in rows]
+        return [apply_agg([v for v, g in zip(vals, gid_flat) if g == grp],
+                          op) for grp in range(G)]
+
+    def fused_group_agg():
+        # [P/8, G, 5] partial tiles back, folded per group in Python ints
+        partials = fold_group_partials(fused(data, ts, gid, members))
+        return [finalize_agg(row, op) for row in partials]
+
+    assert scan_then_host_groupby() == fused_group_agg()   # parity, in-bench
+    return scan_then_host_groupby, fused_group_agg
+
+
+def group_agg_report(page_counts=(1024, 4096), groups=(4, 16, 64),
+                     iters=5) -> dict:
+    """Grouped-aggregate sweep (groups × pages): one GROUP BY sum executed
+    as (a) the scan path — device visibility gather, host decode, host
+    group-by — and (b) the fused `rss_scan_agg_grouped` pass returning a
+    [groups, 5] partial tile.  The fused win is the eliminated host decode
+    + group-by loop (linear in pages); the tile cost grows only with
+    groups.  Persisted to BENCH_kernels.json under `group_agg`."""
+    sweep = {}
+    for P in page_counts:
+        for G in groups:
+            scan_fn, fused_fn = _group_paths(P, G)
+            scan_us = _time_host(scan_fn, iters)
+            fused_us = _time_host(fused_fn, iters)
+            sweep[f"P={P},G={G}"] = {
+                "scan_host_groupby_us": round(scan_us, 1),
+                "fused_group_agg_us": round(fused_us, 1),
+                "speedup": round(scan_us / max(fused_us, 1e-9), 2),
+                "fused_out_bytes": G * 5 * 4,
+            }
+    top = f"P={max(page_counts)},G={min(groups)}"
+    return {
+        "op": "GROUP BY sum(int) over member-visible pages (K=4, E=32)",
+        "sweep": sweep,
+        "headline_speedup": sweep[top]["speedup"],
+        "headline_shape": top,
+        "tpu_roofline_note": "fused writes G*20B instead of P*E*4B and "
+                             "eliminates host decode + group-by entirely",
+    }
+
+
 def bench_flash_attention():
     from repro.models.layers import flash_attention_xla
     B, S, H, K, hd = 1, 2048, 8, 2, 64

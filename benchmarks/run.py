@@ -82,7 +82,7 @@ def main(smoke: bool = False) -> None:
 
     # ---------------------------------------------------------- kernels
     from .bench_kernels import (all_benches, gather_kernels_report,
-                                scan_agg_report)
+                                group_agg_report, scan_agg_report)
     for name, us, derived in all_benches():
         print(f"{name},{us:.1f},{derived}")
 
@@ -97,6 +97,18 @@ def main(smoke: bool = False) -> None:
     print(f"scan_agg:headline,0,fused=x{agg_report['headline_speedup']}"
           f"_vs_host_decode_at_P={agg_report['headline_pages']}")
 
+    # --------------------------- grouped executor (groups × pages sweep)
+    group_report = group_agg_report(
+        page_counts=(256, 1024) if smoke else (1024, 4096),
+        groups=(4, 16) if smoke else (4, 16, 64),
+        iters=2 if smoke else 5)
+    for shape, r in group_report["sweep"].items():
+        print(f"group_agg:{shape},{r['fused_group_agg_us']},"
+              f"host_groupby={r['scan_host_groupby_us']}us;"
+              f"speedup=x{r['speedup']}")
+    print(f"group_agg:headline,0,fused=x{group_report['headline_speedup']}"
+          f"_vs_host_groupby_at_{group_report['headline_shape']}")
+
     if smoke:
         print("bench_kernels_json,0,skipped_(smoke_mode)")
     else:
@@ -107,7 +119,8 @@ def main(smoke: bool = False) -> None:
                                           olap_scan_path=scan_report,
                                           rss_construct=construct_report,
                                           replica_lag=lag_report,
-                                          scan_agg=agg_report)
+                                          scan_agg=agg_report,
+                                          group_agg=group_report)
         print(f"bench_kernels_json,0,{out_path}")
 
     # --------------------------------------------------------- roofline

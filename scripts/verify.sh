@@ -12,15 +12,16 @@ echo "== tier-1: pytest =="
 python -m pytest -x -q
 
 echo
-echo "== interpret-mode kernel parity (version_gather / rss_gather / rss_scan_agg) =="
+echo "== interpret-mode kernel parity (version_gather / rss_gather / rss_scan_agg[+grouped]) =="
 python - <<'EOF'
 import numpy as np, jax, jax.numpy as jnp
 from repro.kernels.version_gather.kernel import version_gather
 from repro.kernels.version_gather.ref import version_gather_ref
 from repro.kernels.rss_gather.kernel import rss_gather
 from repro.kernels.rss_gather.ref import rss_gather_ref
-from repro.kernels.rss_scan_agg.kernel import rss_scan_agg
-from repro.kernels.rss_scan_agg.ref import rss_scan_agg_ref
+from repro.kernels.rss_scan_agg.kernel import rss_scan_agg, rss_scan_agg_grouped
+from repro.kernels.rss_scan_agg.ref import (rss_scan_agg_grouped_ref,
+                                            rss_scan_agg_ref)
 
 rng = np.random.default_rng(0)
 for P, K, E in [(16, 4, 256), (32, 3, 128)]:
@@ -43,6 +44,7 @@ for P, K, E in [(16, 4, 32), (32, 3, 16)]:
     idata[:, :, 1] = rng.integers(-99, 99, (P, K))
     its = jnp.asarray(rng.integers(0, 50, (P, K)), np.int32)
     idata = jnp.asarray(idata)
+    gid = jnp.asarray(rng.integers(-1, 5, (P, 1)), jnp.int32)
     for M in (0, 7):
         mem = jnp.asarray(np.sort(rng.choice(np.arange(1, 50), size=M,
                                              replace=False)), jnp.int32)
@@ -52,8 +54,15 @@ for P, K, E in [(16, 4, 32), (32, 3, 16)]:
                     np.asarray(rss_scan_agg(idata, its, mem, floor, *tags)),
                     np.asarray(rss_scan_agg_ref(idata, its, mem, floor,
                                                 *tags)))
-print("kernel parity OK (version_gather, rss_gather+floor, rss_scan_agg; "
-      "interpret mode)")
+                # grouped variant: per-group accumulator lanes, incl. an
+                # empty group (gid never reaches n_groups-1=5) and gid -1
+                np.testing.assert_array_equal(
+                    np.asarray(rss_scan_agg_grouped(
+                        idata, its, gid, mem, floor, *tags, n_groups=6)),
+                    np.asarray(rss_scan_agg_grouped_ref(
+                        idata, its, gid, mem, floor, *tags, n_groups=6)))
+print("kernel parity OK (version_gather, rss_gather+floor, rss_scan_agg "
+      "+ grouped; interpret mode)")
 EOF
 
 echo

@@ -31,6 +31,7 @@ from __future__ import annotations
 from collections import deque
 from typing import Any, Iterable, Optional, Sequence, Union
 
+from ..tensorstore.version_store import AggPlan, Plan, ScanPlan
 from .routing import Freshest, RoutingPolicy, make_policy
 
 # handle: (kind, replica_idx, reader_id, snapshot)
@@ -206,18 +207,23 @@ class ReplicaCluster:
         rep = self.replicas[idx]
         return rep.read_si(s, key) if kind == "si" else rep.read_rss(s, key)
 
-    def scan(self, handle: SnapshotHandle, keys: Sequence[str]) -> list[Any]:
+    def execute(self, handle: SnapshotHandle, plan: Plan) -> Any:
+        """The cluster's ONE plan-execution seam: serve any plan on the
+        replica that served the handle's snapshot (same routing/freshness
+        decision as the acquisition), under the handle's snapshot kind."""
         kind, idx, _, s = handle
         rep = self.replicas[idx]
-        return rep.scan_si(s, keys) if kind == "si" else rep.scan_rss(s, keys)
+        return rep.execute_si(s, plan) if kind == "si" \
+            else rep.execute_rss(s, plan)
+
+    # deprecated per-op aliases (one PR): route through the plan seam
+    def scan(self, handle: SnapshotHandle, keys: Sequence[str]) -> list[Any]:
+        """Deprecated alias: `execute(handle, ScanPlan(keys))`."""
+        return self.execute(handle, ScanPlan(tuple(keys)))
 
     def agg(self, handle: SnapshotHandle, keys: Sequence[str], op) -> int:
-        """Serve an aggregate plan on the replica that served the handle's
-        snapshot (same routing/freshness decision as the acquisition)."""
-        kind, idx, _, s = handle
-        rep = self.replicas[idx]
-        return rep.agg_si(s, keys, op) if kind == "si" \
-            else rep.agg_rss(s, keys, op)
+        """Deprecated alias: `execute(handle, AggPlan(keys, op))`."""
+        return self.execute(handle, AggPlan(tuple(keys), op))
 
     def release(self, handle: SnapshotHandle) -> None:
         _, idx, rid, _ = handle

@@ -41,6 +41,15 @@ Arithmetic intensity stays ~1 FLOP per K bytes read, but the fused path
 writes P/BP partial rows instead of P·E gathered elements and skips the
 host decode loop entirely — the win
 `benchmarks.bench_kernels.scan_agg_report` measures.
+
+`rss_scan_agg_grouped` is the GROUP BY variant: every page additionally
+carries a group id (`gid [P, 1]`, -1 = no group, e.g. sublane padding),
+and each grid step reduces its BP-page block into PER-GROUP accumulator
+lanes — a [Gp, 128] tile whose row g holds group g's [sum, count,
+count_below, min, max] partial.  One fused visibility pass emits a small
+[groups, 5] tile instead of one scalar; the host fold
+(`ops.fold_group_partials`) is per-group, same overflow discipline as the
+scalar fold.
 """
 
 from __future__ import annotations
@@ -55,7 +64,10 @@ _I32_MAX = jnp.iinfo(jnp.int32).max
 _I32_MIN = jnp.iinfo(jnp.int32).min
 
 
-def _kernel(mem_ref, scal_ref, ts_ref, data_ref, out_ref):
+def _resolve_block(mem_ref, scal_ref, ts_ref, data_ref):
+    """Shared block body: RSS visibility resolve + tag test over one
+    BP-page block.  Returns (x, valid, thresh): the aggregable field, the
+    participates-in-the-aggregate mask, and the count-below bound."""
     ts = ts_ref[...]                           # [BP, K] int32
     mem = mem_ref[...]                         # [1, Mp] int32 (-1 padded)
     floor = scal_ref[0, 0]
@@ -74,10 +86,15 @@ def _kernel(mem_ref, scal_ref, ts_ref, data_ref, out_ref):
     onehot = idx == first                                  # [BP, K]
     data = data_ref[...]                                   # [BP, K, E]
     sel = jnp.sum(onehot.astype(data.dtype)[:, :, None] * data, axis=1)
-    # --- fused aggregate over the visible payloads ----------------------
     tag = sel[:, 0]                                        # [BP]
     x = sel[:, 1]
     valid = (tag == tag_main) | (tag == tag_alt)
+    return x, valid, thresh
+
+
+def _kernel(mem_ref, scal_ref, ts_ref, data_ref, out_ref):
+    # --- fused aggregate over the visible payloads ----------------------
+    x, valid, thresh = _resolve_block(mem_ref, scal_ref, ts_ref, data_ref)
     psum = jnp.sum(jnp.where(valid, x, 0))
     pcount = jnp.sum(valid.astype(jnp.int32))
     pbelow = jnp.sum((valid & (x < thresh)).astype(jnp.int32))
@@ -136,3 +153,76 @@ def rss_scan_agg(data: jax.Array, ts: jax.Array, member_ts: jax.Array,
         interpret=interpret,
     )(mem, scal, ts, data)
     return out[:, :5]
+
+
+def _grouped_kernel(mem_ref, scal_ref, gid_ref, ts_ref, data_ref, out_ref):
+    x, valid, thresh = _resolve_block(mem_ref, scal_ref, ts_ref, data_ref)
+    gid = gid_ref[...][:, 0]                               # [BP]
+    gp = out_ref.shape[0]                                  # padded groups
+    # page -> group one-hot; gid -1 (no group / padding) matches nothing
+    giota = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], gp), 1)
+    grp = (gid[:, None] == giota) & valid[:, None]         # [BP, Gp]
+    xg = x[:, None]
+    psum = jnp.sum(jnp.where(grp, xg, 0), axis=0)          # [Gp]
+    pcount = jnp.sum(grp.astype(jnp.int32), axis=0)
+    pbelow = jnp.sum((grp & (xg < thresh)).astype(jnp.int32), axis=0)
+    pmin = jnp.min(jnp.where(grp, xg, _I32_MAX), axis=0)
+    pmax = jnp.max(jnp.where(grp, xg, _I32_MIN), axis=0)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (gp, 128), 1)
+    tile = jnp.where(lane == 0, psum[:, None], 0)
+    tile = jnp.where(lane == 1, pcount[:, None], tile)
+    tile = jnp.where(lane == 2, pbelow[:, None], tile)
+    tile = jnp.where(lane == 3, pmin[:, None], tile)
+    tile = jnp.where(lane == 4, pmax[:, None], tile)
+    out_ref[...] = tile                        # this block's [Gp, 128] tile
+
+
+@functools.partial(jax.jit, static_argnames=("n_groups", "block_pages",
+                                             "interpret"))
+def rss_scan_agg_grouped(data: jax.Array, ts: jax.Array, gid: jax.Array,
+                         member_ts: jax.Array,
+                         floor: jax.Array | int = 0,
+                         tag_main: jax.Array | int = 1,
+                         tag_alt: jax.Array | int = -2,
+                         threshold: jax.Array | int = _I32_MAX,
+                         *, n_groups: int = 1, block_pages: int = 8,
+                         interpret: bool = True) -> jax.Array:
+    """Fused RSS membership scan + GROUPED aggregate: `gid` is a [P, 1]
+    int32 group id per page (0..n_groups-1; -1 = no group, matching no
+    accumulator lane — sublane padding).  Returns [P/BP, n_groups, 5]
+    int32 per-block per-group partials of [sum, count, count_below, min,
+    max] over member-visible payloads whose tag is tag_main/tag_alt (fold
+    the block axis per group on host — lanes 0-2 add, 3 min, 4 max)."""
+    P, K, E = data.shape
+    assert ts.shape == (P, K) and gid.shape == (P, 1)
+    assert n_groups >= 1
+    bp = min(block_pages, P)
+    assert P % bp == 0, (P, bp)
+    gp = -(-n_groups // 8) * 8                 # sublane-aligned group rows
+    M = member_ts.shape[0]
+    mp = max(128, -(-M // 128) * 128)
+    mem = jnp.full((1, mp), -1, jnp.int32)
+    if M:
+        mem = mem.at[0, :M].set(member_ts.astype(jnp.int32))
+    scal = jnp.zeros((1, 128), jnp.int32)
+    scal = scal.at[0, 0].set(jnp.asarray(floor, jnp.int32))
+    scal = scal.at[0, 1].set(jnp.asarray(tag_main, jnp.int32))
+    scal = scal.at[0, 2].set(jnp.asarray(tag_alt, jnp.int32))
+    scal = scal.at[0, 3].set(jnp.asarray(threshold, jnp.int32))
+    out = pl.pallas_call(
+        _grouped_kernel,
+        grid=(P // bp,),
+        in_specs=[
+            pl.BlockSpec((1, mp), lambda i: (0, 0)),        # members
+            pl.BlockSpec((1, 128), lambda i: (0, 0)),       # scalar params
+            pl.BlockSpec((bp, 1), lambda i: (i, 0)),        # group ids
+            pl.BlockSpec((bp, K), lambda i: (i, 0)),        # ts
+            pl.BlockSpec((bp, K, E), lambda i: (i, 0, 0)),  # data
+        ],
+        # one [Gp, 128] per-group partial tile per grid block, stacked
+        # along rows: block i owns rows [i*Gp, (i+1)*Gp)
+        out_specs=pl.BlockSpec((gp, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((P // bp * gp, 128), jnp.int32),
+        interpret=interpret,
+    )(mem, scal, gid.astype(jnp.int32), ts, data)
+    return out.reshape(P // bp, gp, 128)[:, :n_groups, :5]

@@ -1,4 +1,5 @@
-"""Public op: snapshot_agg_members — fused scan+aggregate, kernel or jnp."""
+"""Public ops: snapshot_agg_members / snapshot_group_agg_members — fused
+scan+aggregate (scalar and GROUP BY variants), kernel or jnp."""
 
 from __future__ import annotations
 
@@ -8,8 +9,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..config import resolve_interpret
-from .kernel import rss_scan_agg
-from .ref import rss_scan_agg_ref
+from .kernel import rss_scan_agg, rss_scan_agg_grouped
+from .ref import rss_scan_agg_grouped_ref, rss_scan_agg_ref
 
 _I32_MAX = jnp.iinfo(jnp.int32).max
 _I32_MIN = jnp.iinfo(jnp.int32).min
@@ -54,3 +55,41 @@ def snapshot_agg_members(store: dict, member_ts, floor=0, *,
                                 floor, tag_main, tag_alt, thresh,
                                 interpret=resolve_interpret(interpret))
     return fold_partials(partials)
+
+
+def fold_group_partials(partials) -> list[list[int]]:
+    """Fold [n_blocks, G, 5] per-block per-group device partials into G
+    final [sum, count, count_below, min, max] rows — exact Python-int
+    arithmetic, same overflow discipline as `fold_partials`."""
+    rows = np.asarray(partials)
+    return [fold_partials(rows[:, g]) for g in range(rows.shape[1])]
+
+
+def snapshot_group_agg_members(store: dict, gid, n_groups: int,
+                               member_ts, floor=0, *,
+                               tag_main: int, tag_alt: int = -2,
+                               threshold: Optional[int] = None,
+                               use_kernel: bool = True,
+                               interpret: Optional[bool] = None) \
+        -> list[list[int]]:
+    """GROUP BY variant of `snapshot_agg_members`: `gid` maps each page of
+    the store to an accumulator lane (0..n_groups-1; -1 = no group), and
+    ONE fused device pass resolves visibility AND reduces every group —
+    a small [n_groups, 5] tile back instead of one scalar per group.
+
+    Returns n_groups folded [sum, count, count_below, min, max] rows as
+    Python ints; a group no visible page maps to is [0, 0, 0, INT32_MAX,
+    INT32_MIN] (count disambiguates — `finalize_agg` folds the sentinels
+    to 0)."""
+    thresh = _I32_MAX if threshold is None else int(threshold)
+    gid = jnp.asarray(np.asarray(gid, np.int32).reshape(-1, 1))
+    if not use_kernel:
+        partials = rss_scan_agg_grouped_ref(
+            store["data"], store["ts"], gid, member_ts, floor,
+            tag_main, tag_alt, thresh, n_groups=n_groups)
+    else:
+        partials = rss_scan_agg_grouped(
+            store["data"], store["ts"], gid, member_ts, floor,
+            tag_main, tag_alt, thresh, n_groups=n_groups,
+            interpret=resolve_interpret(interpret))
+    return fold_group_partials(partials)

@@ -41,3 +41,39 @@ def rss_scan_agg_ref(data: jax.Array, ts: jax.Array, member_ts: jax.Array,
         jnp.min(jnp.where(valid, x, _I32_MAX), axis=1),
         jnp.max(jnp.where(valid, x, _I32_MIN), axis=1),
     ], axis=1).astype(jnp.int32)
+
+
+def rss_scan_agg_grouped_ref(data: jax.Array, ts: jax.Array, gid: jax.Array,
+                             member_ts: jax.Array,
+                             floor: jax.Array | int = 0,
+                             tag_main: jax.Array | int = 1,
+                             tag_alt: jax.Array | int = -2,
+                             threshold: jax.Array | int = _I32_MAX,
+                             *, n_groups: int = 1,
+                             block_pages: int = 8) -> jax.Array:
+    """GROUP BY twin of `rss_scan_agg_ref`: `gid` [P, 1] int32 group id
+    per page (-1 = no group), `n_groups` accumulator rows -> [P/BP,
+    n_groups, 5] per-block per-group partials with the kernel's exact
+    blocking (bitwise comparable; fold the block axis per group on host —
+    `ops.fold_group_partials`).  A group no page maps to folds to count 0
+    with min/max sentinels (empty-group semantics)."""
+    P = data.shape[0]
+    bp = min(block_pages, P)
+    assert P % bp == 0, (P, bp)
+    assert gid.shape == (P, 1)
+    slot = rss_visible_slots_ref(ts, member_ts, floor)
+    sel = jnp.take_along_axis(data, slot[:, None, None], axis=1)[:, 0]
+    tag = sel[:, 0]
+    x = sel[:, 1]                                          # [P]
+    valid = (tag == tag_main) | (tag == tag_alt)
+    grp = (gid[:, 0][:, None] ==
+           jnp.arange(n_groups, dtype=jnp.int32)[None, :]) & valid[:, None]
+    grp = grp.reshape(P // bp, bp, n_groups)               # [NB, BP, G]
+    xb = x.reshape(P // bp, bp)[:, :, None]
+    return jnp.stack([
+        jnp.sum(jnp.where(grp, xb, 0), axis=1),
+        jnp.sum(grp.astype(jnp.int32), axis=1),
+        jnp.sum((grp & (xb < threshold)).astype(jnp.int32), axis=1),
+        jnp.min(jnp.where(grp, xb, _I32_MAX), axis=1),
+        jnp.max(jnp.where(grp, xb, _I32_MIN), axis=1),
+    ], axis=2).astype(jnp.int32)

@@ -16,6 +16,8 @@ import random
 from dataclasses import dataclass, field
 from typing import Optional
 
+from ..tensorstore.version_store import (AggPlan, GroupByPlan, MultiAggPlan,
+                                         ScanPlan)
 from .engine import SerializationFailure, Status
 from .htap import MultiNodeHTAP, SingleNodeHTAP
 from .workload import (Scale, load_initial, olap_freshness, olap_query,
@@ -30,8 +32,14 @@ class Metrics:
     olap_commits: int = 0
     olap_aborts: int = 0
     olap_wait_rounds: int = 0
-    olap_scan_steps: int = 0     # batched ("scan", keys) steps served
-    olap_agg_steps: int = 0      # fused ("agg", keys, op) steps served
+    olap_scan_steps: int = 0     # ScanPlan steps served
+    olap_agg_steps: int = 0      # fused AggPlan steps served
+    olap_multi_agg_steps: int = 0   # compound MultiAggPlan steps served
+    olap_group_steps: int = 0    # grouped GroupByPlan steps served
+    # dense page-range fast path (paged mirrors): fused plan executions
+    # that sliced the store vs gathered (page-range locality metric)
+    olap_dense_range_hits: int = 0
+    olap_dense_range_misses: int = 0
     max_engine_txns: int = 0     # peak engine per-txn state (bounded by GC)
     max_rss_tracked: int = 0     # peak RSSManager per-txn state (ditto)
     max_wal_records: int = 0     # peak primary WAL length (truncation bound)
@@ -59,6 +67,21 @@ class Metrics:
     def olap_abort_rate(self) -> float:
         d = self.olap_commits + self.olap_aborts
         return self.olap_aborts / d if d else 0.0
+
+    def count_plan_step(self, plan) -> None:
+        """Bump the per-plan-kind served-step counter."""
+        if isinstance(plan, ScanPlan):
+            self.olap_scan_steps += 1
+        elif isinstance(plan, AggPlan):
+            self.olap_agg_steps += 1
+        elif isinstance(plan, MultiAggPlan):
+            self.olap_multi_agg_steps += 1
+        elif isinstance(plan, GroupByPlan):
+            self.olap_group_steps += 1
+
+    def dense_range_hit_rate(self) -> float:
+        d = self.olap_dense_range_hits + self.olap_dense_range_misses
+        return self.olap_dense_range_hits / d if d else 0.0
 
 
 class _OltpClient:
@@ -157,11 +180,17 @@ class _OlapClientSingle:
         try:
             if step[0] == "r":
                 self.pending = eng.read(self.txn, step[1])
-            elif step[0] == "scan":
-                self.pending = self.htap.olap_scan(self.txn, step[1])
+            elif step[0] == "olap":
+                # ONE plan-execution seam serves every OLAP step kind
+                self.pending = self.htap.olap_execute(self.txn, step[1])
+                self.m.count_plan_step(step[1])
+            elif step[0] == "scan":            # legacy step kind
+                self.pending = self.htap.olap_execute(
+                    self.txn, ScanPlan(tuple(step[1])))
                 self.m.olap_scan_steps += 1
-            elif step[0] == "agg":
-                self.pending = self.htap.olap_agg(self.txn, step[1], step[2])
+            elif step[0] == "agg":             # legacy step kind
+                self.pending = self.htap.olap_execute(
+                    self.txn, AggPlan(tuple(step[1]), step[2]))
                 self.m.olap_agg_steps += 1
             elif step[0] == "out":
                 self.m.olap_outputs.append(step[1])
@@ -230,11 +259,17 @@ class _OlapClientMulti:
             return
         if step[0] == "r":
             self.pending = self.htap.olap_read(self.snap, step[1])
-        elif step[0] == "scan":
-            self.pending = self.htap.olap_scan(self.snap, step[1])
+        elif step[0] == "olap":
+            # ONE plan-execution seam serves every OLAP step kind
+            self.pending = self.htap.olap_execute(self.snap, step[1])
+            self.m.count_plan_step(step[1])
+        elif step[0] == "scan":                # legacy step kind
+            self.pending = self.htap.olap_execute(self.snap,
+                                                  ScanPlan(tuple(step[1])))
             self.m.olap_scan_steps += 1
-        elif step[0] == "agg":
-            self.pending = self.htap.olap_agg(self.snap, step[1], step[2])
+        elif step[0] == "agg":                 # legacy step kind
+            self.pending = self.htap.olap_execute(
+                self.snap, AggPlan(tuple(step[1]), step[2]))
             self.m.olap_agg_steps += 1
         elif step[0] == "out":
             self.m.olap_outputs.append(step[1])
@@ -247,13 +282,15 @@ def run_single_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
                     olap_scan: bool = False,
                     paged_olap: bool = False,
                     check_scans: bool = False) -> Metrics:
-    """olap_scan=True routes OLAP queries through batched ("scan", keys)
-    steps served by one VersionStore.scan each; paged_olap=True additionally
-    serves protected readers from the WAL-mirrored paged store; and
-    check_scans=True asserts every batched scan equals the per-key engine
-    read path (the oracle)."""
+    """olap_scan=True routes OLAP queries through batched ("olap", plan)
+    steps served by one plan-execution seam call each; paged_olap=True
+    additionally serves protected readers from the WAL-mirrored paged store
+    (workload key families reserved contiguously for the dense page-range
+    fast path); and check_scans=True asserts every plan result equals the
+    per-key engine read path (the oracle)."""
     htap = SingleNodeHTAP(olap_mode, paged=paged_olap,
-                          check_scans=check_scans)
+                          check_scans=check_scans,
+                          reserve_keys=scale.key_families())
     load_initial(htap.engine, scale)
     m = Metrics()
     rng = random.Random(seed)
@@ -275,6 +312,9 @@ def run_single_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
                                 htap.rss_manager.tracked_txns())
         m.max_wal_records = max(m.max_wal_records,
                                 len(htap.engine.wal.records))
+    if htap.mirror is not None:
+        m.olap_dense_range_hits = htap.mirror.range_stats["dense"]
+        m.olap_dense_range_misses = htap.mirror.range_stats["gather"]
     return m
 
 
@@ -298,7 +338,8 @@ def run_multi_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
     htap = MultiNodeHTAP(olap_mode, paged_olap=paged_olap,
                          check_scans=check_scans, n_replicas=n_replicas,
                          route_policy=route_policy,
-                         max_staleness=max_staleness)
+                         max_staleness=max_staleness,
+                         reserve_keys=scale.key_families())
     load_initial(htap.primary, scale)
     htap.ship_log()
     m = Metrics()
@@ -327,6 +368,10 @@ def run_multi_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
                                         rep.rss_manager.tracked_txns())
         m.max_wal_records = max(m.max_wal_records,
                                 len(htap.primary.wal.records))
+    for rep in htap.cluster.replicas:
+        if rep.mirror is not None:
+            m.olap_dense_range_hits += rep.mirror.range_stats["dense"]
+            m.olap_dense_range_misses += rep.mirror.range_stats["gather"]
     st = htap.cluster.stats
     m.olap_served_by = list(st["served"])
     m.olap_ship_then_serve = st["ship_then_serve"]

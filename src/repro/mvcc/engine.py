@@ -31,7 +31,8 @@ from ..core.history import History, b as op_b, r as op_r, w as op_w, \
 from ..core.replica import RssSnapshot
 from ..core.wal import Wal, WalRecord
 from ..tensorstore.version_store import (AggOp, AggPlan, ChainVersionStore,
-                                         VersionStore, apply_agg)
+                                         Plan, ScanPlan, VersionStore,
+                                         apply_plan, plan_keys)
 from .store import Store, Version
 
 
@@ -168,53 +169,51 @@ class Engine:
                     self._add_rw_edge(t, u)
         return v.value
 
-    # ------------------------------------------------------------------ scans
-    def scan(self, t: Txn, keys: Sequence[str]) -> list[Any]:
-        """Batched snapshot scan: resolve the whole key sequence in ONE
-        `VersionStore.scan` call instead of N per-key chain walks.
+    # ------------------------------------------------------------- OLAP plans
+    def execute(self, t: Txn, plan: Plan) -> Any:
+        """The engine's ONE OLAP plan-execution seam: resolve visibility
+        for the plan's whole key sequence in ONE `VersionStore` call and
+        apply the plan (`ScanPlan` materializes values; aggregate plans
+        reduce — the paged store fuses resolve + reduction in a single
+        device pass per kernel config).
 
         Only transactions outside SSI conflict tracking (RSS protected
         readers, safe-snapshot readers, plain-SI transactions) take the
         batched path — their reads are pure visibility resolution with no
         SIRead side effects.  SSI-tracked transactions fall back to per-key
-        `read` so rw-antidependency detection observes every key.
-
-        The batched path still records the read set (`t.reads` and the Adya
-        history when recording): the resolved writers come out of the same
-        visibility walk, so oracle checks (`ssi_accepts`/`is_rss`) validate
-        against histories that include every scan read."""
-        self._check_active(t)
-        if self.mode == "ssi" and not t.skip_siread:
-            return [self.read(t, k) for k in keys]
-        snapshot = t.rss if t.rss is not None else t.begin_seq
-        vals, writers = self.version_store.scan_with_writers(keys, snapshot)
-        self.record_scan(t, keys, writers)
-        if t.writes:                              # read-your-own-writes
-            vals = [t.writes.get(k, v) for k, v in zip(keys, vals)]
-        return vals
-
-    def agg(self, t: Txn, keys: Sequence[str], op: AggOp) -> int:
-        """Serve an aggregate plan: ONE `VersionStore.execute` resolves
-        visibility for the whole key sequence AND reduces it (the paged
-        store fuses both in a single device pass), returning one scalar.
-
-        The read set is still recorded key-by-key from the same visibility
-        walk — the serializability oracle sees an aggregate exactly as it
-        sees the equivalent scan.  SSI-tracked transactions fall back to
-        per-key `read` (SIRead registration must observe every key), and a
+        `read` so rw-antidependency detection observes every key, and a
         transaction with buffered writes on plan keys falls back to the
-        batched scan + host reduce (read-your-own-writes never hits the
-        store)."""
+        batched scan + host `apply_plan` (read-your-own-writes never hits
+        the store).
+
+        Every path records the read set (`t.reads` and the Adya history
+        when recording): resolved writers come out of the same visibility
+        walk, so the serializability oracle sees an aggregate exactly as
+        it sees the equivalent scan."""
         self._check_active(t)
+        keys = plan_keys(plan)
         if self.mode == "ssi" and not t.skip_siread:
-            return apply_agg([self.read(t, k) for k in keys], op)
-        if t.writes and any(k in t.writes for k in keys):
-            return apply_agg(self.scan(t, keys), op)
+            return apply_plan([self.read(t, k) for k in keys], plan)
         snapshot = t.rss if t.rss is not None else t.begin_seq
-        result, writers = self.version_store.execute_with_writers(
-            AggPlan(tuple(keys), op), snapshot)
+        if t.writes and any(k in t.writes for k in keys):
+            vals, writers = self.version_store.scan_with_writers(keys,
+                                                                 snapshot)
+            self.record_scan(t, keys, writers)
+            vals = [t.writes.get(k, v) for k, v in zip(keys, vals)]
+            return apply_plan(vals, plan)
+        result, writers = self.version_store.execute_with_writers(plan,
+                                                                  snapshot)
         self.record_scan(t, keys, writers)
         return result
+
+    # deprecated per-op aliases (one PR): thin shims over the plan seam
+    def scan(self, t: Txn, keys: Sequence[str]) -> list[Any]:
+        """Deprecated alias: `execute(t, ScanPlan(keys))`."""
+        return self.execute(t, ScanPlan(tuple(keys)))
+
+    def agg(self, t: Txn, keys: Sequence[str], op: AggOp) -> int:
+        """Deprecated alias: `execute(t, AggPlan(keys, op))`."""
+        return self.execute(t, AggPlan(tuple(keys), op))
 
     def record_scan(self, t: Txn, keys: Sequence[str],
                     writers: Sequence[int]) -> None:

@@ -15,13 +15,17 @@ log-shipping replica applies committed writesets and serves OLAP:
   * "ssi+rss"  — replica-side RSSManager replays begin/commit/abort + deps
                  records and serves RSS snapshots (serializable, wait-free)
 
-Both facades serve OLAP *scans* through the unified `VersionStore` interface:
-one batched visibility resolution per key sequence instead of N per-key chain
+Both facades serve every OLAP read through ONE plan-execution seam
+(`olap_execute(plan)` here, `VersionStore.execute` below): a `Plan`
+(`ScanPlan`/`AggPlan`/`MultiAggPlan`/`GroupByPlan`) in, one batched
+visibility resolution for its whole key sequence instead of N per-key chain
 walks.  With `paged=True` they additionally mirror committed writesets into
-the device-resident K-slot paged store (`tensorstore.mirror.PagedMirror`) and
-serve RSS scans from it — the Pallas-kernel-shaped OLAP surface.  With
-`check_scans=True` every batched scan is asserted equal to the per-key engine
-read path (the oracle).
+the device-resident K-slot paged store (`tensorstore.mirror.PagedMirror`)
+and lower aggregate plans to the fused `rss_scan_agg` kernels.  With
+`check_scans=True` every plan result is asserted equal to the per-key
+engine read path (the `apply_plan` oracle).  The per-op methods
+(`olap_scan`/`olap_agg`/`scan_si`/`agg_rss`/...) survive as deprecated
+aliases that route through the same seam.
 """
 
 from __future__ import annotations
@@ -34,8 +38,8 @@ from ..core.replica import PRoTManager, RSSManager, RssSnapshot
 from ..core.wal import effective_commit_seq
 from ..tensorstore.mirror import PagedMirror
 from ..tensorstore.version_store import (AggOp, AggPlan, ChainVersionStore,
-                                         PagedVersionStore, VersionStore,
-                                         apply_agg)
+                                         PagedVersionStore, Plan, ScanPlan,
+                                         VersionStore, apply_plan, plan_keys)
 from .engine import AbortReason, Engine, SerializationFailure, Status, Txn
 from .store import Store
 
@@ -43,7 +47,8 @@ from .store import Store
 # --------------------------------------------------------------- single node
 class SingleNodeHTAP:
     def __init__(self, olap_mode: str = "ssi+rss", *, paged: bool = False,
-                 check_scans: bool = False) -> None:
+                 check_scans: bool = False,
+                 reserve_keys: Optional[Sequence[str]] = None) -> None:
         assert olap_mode in ("ssi", "ssi+safesnapshots", "ssi+rss")
         self.olap_mode = olap_mode
         self.engine = Engine("ssi")
@@ -51,10 +56,14 @@ class SingleNodeHTAP:
         self.prot = PRoTManager(self.rss_manager)
         self.check_scans = check_scans
         # device-backed OLAP surface: WAL-mirrored paged store + kernel-shaped
-        # scans for protected readers
+        # scans for protected readers; `reserve_keys` pre-allocates workload
+        # key families contiguously so dense plans hit the page-range slice
+        # fast path instead of gathering
         self.mirror: Optional[PagedMirror] = PagedMirror() if paged else None
         self.paged_store: Optional[PagedVersionStore] = \
             PagedVersionStore(self.mirror) if paged else None
+        if self.mirror is not None and reserve_keys:
+            self.mirror.reserve(reserve_keys)
         self._pins: dict[int, int] = {}       # txn tid -> PRoT reader id
         # in-process WAL consumers as registered slots: truncation goes
         # through the same min-acked accounting the replica cluster uses
@@ -103,51 +112,44 @@ class SingleNodeHTAP:
     def olap_read(self, t: Txn, key: str) -> Any:
         return self.engine.read(t, key)
 
-    def olap_scan(self, t: Txn, keys: Sequence[str]) -> list[Any]:
-        """Batched OLAP scan: ONE VersionStore.scan for the key sequence.
-        Protected readers are served from the paged mirror when present
-        (read-set recording included: the mirror resolves writers in the
-        same vectorized pass)."""
+    def olap_execute(self, t: Txn, plan: Plan) -> Any:
+        """The facade's ONE OLAP plan-execution seam: protected readers on
+        the paged mirror run the plan's fused device lowering (visibility
+        resolve + reduction in one `rss_scan_agg` pass per kernel config,
+        batched scan for `ScanPlan`); everything else executes through the
+        engine's chain-store seam (the oracle shape).  Read sets record
+        identically either way — the mirror resolves writers in the same
+        vectorized pass.  With `check_scans`, every result is asserted
+        equal to the per-key engine read path (`apply_plan` oracle)."""
         if self.paged_store is not None and t.rss is not None:
             self.engine._check_active(t)
-            vals, writers = self.paged_store.scan_with_writers(keys, t.rss)
-            self.engine.record_scan(t, keys, writers)
+            result, writers = self.paged_store.execute_with_writers(plan,
+                                                                    t.rss)
+            self.engine.record_scan(t, plan_keys(plan), writers)
         else:
-            vals = self.engine.scan(t, keys)
-        if self.check_scans:
-            # oracle reads bypass history recording: the scan above already
-            # recorded the read set, and the check must not double it
-            hist, self.engine.history = self.engine.history, None
-            try:
-                oracle = [self.engine.read(t, k) for k in keys]
-            finally:
-                self.engine.history = hist
-            assert vals == oracle, (vals, oracle)
-        return vals
-
-    def olap_agg(self, t: Txn, keys: Sequence[str], op: AggOp) -> int:
-        """Device-resident OLAP aggregate: ONE fused `rss_scan_agg` pass
-        (visibility resolve + reduction) for protected readers on the paged
-        mirror; chain-store execution (batched walk + host reduce — the
-        oracle shape) otherwise.  Read-set recording is identical to
-        `olap_scan`'s."""
-        if self.paged_store is not None and t.rss is not None:
-            self.engine._check_active(t)
-            result, writers = self.paged_store.execute_with_writers(
-                AggPlan(tuple(keys), op), t.rss)
-            self.engine.record_scan(t, keys, writers)
-        else:
-            result = self.engine.agg(t, keys, op)
+            result = self.engine.execute(t, plan)
         if self.check_scans:
             # per-key oracle parity (history suppressed: the read set was
-            # already recorded by the plan execution above)
+            # already recorded by the plan execution above, and the check
+            # must not double it)
             hist, self.engine.history = self.engine.history, None
             try:
-                oracle = apply_agg([self.engine.read(t, k) for k in keys], op)
+                oracle = apply_plan(
+                    [self.engine.read(t, k) for k in plan_keys(plan)], plan)
             finally:
                 self.engine.history = hist
             assert result == oracle, (result, oracle)
         return result
+
+    # deprecated per-op aliases (one PR): route through the plan seam so
+    # facade behavior can never drift from the plan path
+    def olap_scan(self, t: Txn, keys: Sequence[str]) -> list[Any]:
+        """Deprecated alias: `olap_execute(t, ScanPlan(keys))`."""
+        return self.olap_execute(t, ScanPlan(tuple(keys)))
+
+    def olap_agg(self, t: Txn, keys: Sequence[str], op: AggOp) -> int:
+        """Deprecated alias: `olap_execute(t, AggPlan(keys, op))`."""
+        return self.olap_execute(t, AggPlan(tuple(keys), op))
 
     def olap_commit(self, t: Txn) -> None:
         try:
@@ -182,7 +184,8 @@ class Replica:
     paged mirror serving batched kernel-shaped scans."""
 
     def __init__(self, *, with_rss: bool, paged: bool = False,
-                 check_scans: bool = False) -> None:
+                 check_scans: bool = False,
+                 reserve_keys: Optional[Sequence[str]] = None) -> None:
         self.store = Store()
         self.version_store: VersionStore = ChainVersionStore(self.store)
         self.applied_lsn = 0
@@ -194,6 +197,8 @@ class Replica:
         self.mirror: Optional[PagedMirror] = PagedMirror() if paged else None
         self.paged_store: Optional[PagedVersionStore] = \
             PagedVersionStore(self.mirror) if paged else None
+        if self.mirror is not None and reserve_keys:
+            self.mirror.reserve(reserve_keys)   # page-range locality
         self._si_pins: dict[int, int] = {}    # reader id -> pinned seq
         self._next_si_reader = 1
 
@@ -277,46 +282,50 @@ class Replica:
     def read_rss(self, snap: RssSnapshot, key: str) -> Any:
         return self.version_store.read_members(key, snap)
 
-    # batched scans ----------------------------------------------------------
-    def scan_si(self, snapshot_seq: int, keys: Sequence[str]) -> list[Any]:
+    # plan execution --------------------------------------------------------
+    def _execute(self, snapshot, plan: Plan) -> Any:
+        """The replica's ONE plan-execution seam: fused device lowering on
+        the paged mirror, chain-walk + host `apply_plan` otherwise;
+        parity-asserted against the per-key oracle under check_scans."""
         store = self.paged_store or self.version_store
-        vals = store.scan_at(keys, snapshot_seq)
+        val = store.execute(plan, snapshot)
         if self.check_scans:
-            oracle = [self.read_si(snapshot_seq, k) for k in keys]
-            assert vals == oracle, (vals, oracle)
-        return vals
-
-    def scan_rss(self, snap: RssSnapshot, keys: Sequence[str]) -> list[Any]:
-        store = self.paged_store or self.version_store
-        vals = store.scan_members(keys, snap)
-        if self.check_scans:
-            oracle = [self.read_rss(snap, k) for k in keys]
-            assert vals == oracle, (vals, oracle)
-        return vals
-
-    # batched aggregates ----------------------------------------------------
-    def _agg(self, snapshot, keys: Sequence[str], op: AggOp) -> int:
-        """Execute an aggregate plan at a snapshot: fused device kernel on
-        the paged mirror, chain-walk + host reduce otherwise; parity-
-        asserted against the per-key oracle under check_scans."""
-        store = self.paged_store or self.version_store
-        val = store.execute(AggPlan(tuple(keys), op), snapshot)
-        if self.check_scans:
-            oracle = apply_agg(
-                [self.version_store.read_at(k, snapshot)
-                 if not isinstance(snapshot, RssSnapshot)
-                 else self.version_store.read_members(k, snapshot)
-                 for k in keys], op)
+            if isinstance(snapshot, RssSnapshot):
+                vals = [self.version_store.read_members(k, snapshot)
+                        for k in plan_keys(plan)]
+            else:
+                vals = [self.version_store.read_at(k, snapshot)
+                        for k in plan_keys(plan)]
+            oracle = apply_plan(vals, plan)
             assert val == oracle, (val, oracle)
         return val
 
+    def execute_si(self, snapshot_seq: int, plan: Plan) -> Any:
+        """Execute a plan at an SI watermark (the replication horizon)."""
+        return self._execute(int(snapshot_seq), plan)
+
+    def execute_rss(self, snap: RssSnapshot, plan: Plan) -> Any:
+        """Execute a plan under RSS membership visibility."""
+        return self._execute(snap, plan)
+
+    # deprecated per-op aliases (one PR): route through the plan seam
+    def scan_si(self, snapshot_seq: int, keys: Sequence[str]) -> list[Any]:
+        """Deprecated alias: `execute_si(seq, ScanPlan(keys))`."""
+        return self.execute_si(snapshot_seq, ScanPlan(tuple(keys)))
+
+    def scan_rss(self, snap: RssSnapshot, keys: Sequence[str]) -> list[Any]:
+        """Deprecated alias: `execute_rss(snap, ScanPlan(keys))`."""
+        return self.execute_rss(snap, ScanPlan(tuple(keys)))
+
     def agg_si(self, snapshot_seq: int, keys: Sequence[str],
                op: AggOp) -> int:
-        return self._agg(snapshot_seq, keys, op)
+        """Deprecated alias: `execute_si(seq, AggPlan(keys, op))`."""
+        return self.execute_si(snapshot_seq, AggPlan(tuple(keys), op))
 
     def agg_rss(self, snap: RssSnapshot, keys: Sequence[str],
                 op: AggOp) -> int:
-        return self._agg(snap, keys, op)
+        """Deprecated alias: `execute_rss(snap, AggPlan(keys, op))`."""
+        return self.execute_rss(snap, AggPlan(tuple(keys), op))
 
 
 class MultiNodeHTAP:
@@ -327,13 +336,15 @@ class MultiNodeHTAP:
 
     def __init__(self, olap_mode: str = "ssi+rss", *, paged_olap: bool = False,
                  check_scans: bool = False, n_replicas: int = 1,
-                 route_policy="freshest", max_staleness: int = 100) -> None:
+                 route_policy="freshest", max_staleness: int = 100,
+                 reserve_keys: Optional[Sequence[str]] = None) -> None:
         assert olap_mode in ("ssi+si", "ssi+rss")
         assert n_replicas >= 1
         self.olap_mode = olap_mode
         self.primary = Engine("ssi")
         replicas = [Replica(with_rss=(olap_mode == "ssi+rss"),
-                            paged=paged_olap, check_scans=check_scans)
+                            paged=paged_olap, check_scans=check_scans,
+                            reserve_keys=reserve_keys)
                     for _ in range(n_replicas)]
         self.cluster = ReplicaCluster(self.primary, replicas,
                                       policy=route_policy,
@@ -360,13 +371,20 @@ class MultiNodeHTAP:
     def olap_read(self, snap, key: str) -> Any:
         return self.cluster.read(snap, key)
 
+    def olap_execute(self, snap, plan: Plan) -> Any:
+        """The facade's ONE OLAP plan-execution seam: plans route to the
+        replica that served the handle's snapshot — the same
+        freshness-policy decision as the acquisition."""
+        return self.cluster.execute(snap, plan)
+
+    # deprecated per-op aliases (one PR): route through the plan seam
     def olap_scan(self, snap, keys: Sequence[str]) -> list[Any]:
-        return self.cluster.scan(snap, keys)
+        """Deprecated alias: `olap_execute(snap, ScanPlan(keys))`."""
+        return self.olap_execute(snap, ScanPlan(tuple(keys)))
 
     def olap_agg(self, snap, keys: Sequence[str], op: AggOp) -> int:
-        """Aggregate plans route to the replica that served the snapshot —
-        the same freshness-policy decision as scans."""
-        return self.cluster.agg(snap, keys, op)
+        """Deprecated alias: `olap_execute(snap, AggPlan(keys, op))`."""
+        return self.olap_execute(snap, AggPlan(tuple(keys), op))
 
     def olap_release(self, snap) -> None:
         self.cluster.release(snap)

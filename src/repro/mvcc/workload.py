@@ -10,8 +10,10 @@ Schema (flat keyspace):
 OLTP transactions (the paper's writers): new_order, payment, order_status
 (read-only OLTP — runs under SSI, not RSS, per Sec 5.2).
 OLAP queries (scan-heavy, long-running): stock_level_scan, customer_balance,
-order_revenue — read sets of hundreds of keys, the shape that makes SSI
-writer-abort OLTP transactions (Fig. 5/7) and SafeSnapshots reader-wait.
+order_revenue, district_revenue_group (GROUP BY district, AVG via compound
+sum+count), stock_overview (multi-statistic compound) — read sets of
+hundreds of keys, the shape that makes SSI writer-abort OLTP transactions
+(Fig. 5/7) and SafeSnapshots reader-wait.
 """
 
 from __future__ import annotations
@@ -20,7 +22,8 @@ import random
 from dataclasses import dataclass
 from typing import Iterator
 
-from ..tensorstore.version_store import AggOp
+from ..tensorstore.version_store import (AggOp, AggPlan, GroupByPlan,
+                                         MultiAggPlan, ScanPlan)
 
 
 @dataclass(frozen=True)
@@ -38,15 +41,31 @@ class Scale:
         return [f"customer:{w}:{d}:{c}" for w in range(self.warehouses)
                 for d in range(self.districts) for c in range(self.customers)]
 
+    def all_district_keys(self) -> list[str]:
+        return [f"district:{w}:{d}" for w in range(self.warehouses)
+                for d in range(self.districts)]
+
+    def key_families(self) -> list[str]:
+        """Every statically-known workload key, family-major and in the
+        exact order the OLAP plans enumerate them — reserve these
+        contiguously in a `PagedMirror` so dense plans resolve to page
+        RANGES (the `paged.as_page_range` slice fast path) instead of
+        gathers.  Order keys are allocated on demand (o_id is dynamic)."""
+        return ([f"warehouse:{w}" for w in range(self.warehouses)]
+                + self.all_district_keys()
+                + self.all_customer_keys()
+                + self.all_stock_keys())
+
 
 # Each yielded step is ('r', key) or ('w', key, update_fn) where update_fn
-# maps the read value to the written value;  ('scan', keys) to read a whole
-# key sequence in ONE batched VersionStore.scan (the generator receives the
-# list of values);  ('agg', keys, op) to reduce the key sequence's visible
-# values in ONE fused device pass (op is a `tensorstore.AggOp`; the
-# generator receives one int — values never materialize on host);  or
+# maps the read value to the written value;  ('olap', plan) to execute a
+# query plan (`tensorstore.Plan`: ScanPlan / AggPlan / MultiAggPlan /
+# GroupByPlan) in ONE plan-execution seam call — the generator receives
+# the plan's result (a value list for ScanPlan; scalars/tuples for the
+# aggregate plans, which never materialize values on host);  or
 # ('out', value) to emit a result.  The driver executes steps against an
-# engine transaction.
+# engine transaction.  (Legacy ('scan', keys) / ('agg', keys, op) step
+# kinds are still served, as ScanPlan/AggPlan shims.)
 Step = tuple
 
 
@@ -113,16 +132,17 @@ def oltp_transaction(rng: random.Random, sc: Scale):
 # Every query has two execution shapes over the SAME read set: the per-key
 # generator walk (one engine.read per round — the oracle, and the shape that
 # keeps a query active for hundreds of rounds) and the batched shape —
-# ('agg', keys, op) steps reduced in ONE fused device pass each (plus
-# ('scan', keys) where the query needs the values themselves, e.g. the
-# district pass that derives the order key range).
+# ('olap', plan) steps, each answered by ONE plan-execution seam call
+# (aggregate plans reduce in fused device passes; ScanPlan where the query
+# needs the values themselves, e.g. the district pass that derives the
+# order key range).
 def stock_level_scan(rng: random.Random, sc: Scale,
                      batched: bool = False) -> Iterator[Step]:
     """CH Q-like: total stock below threshold across every warehouse."""
     low = 0
     if batched:
-        low = yield ("agg", sc.all_stock_keys(),
-                     AggOp("count_below", "int", 50))
+        low = yield ("olap", AggPlan(tuple(sc.all_stock_keys()),
+                                     AggOp("count_below", "int", 50)))
     else:
         for key in sc.all_stock_keys():
             q = yield ("r", key)
@@ -135,7 +155,8 @@ def customer_balance(rng: random.Random, sc: Scale,
                      batched: bool = False) -> Iterator[Step]:
     total = 0
     if batched:
-        total = yield ("agg", sc.all_customer_keys(), AggOp("sum", "int"))
+        total = yield ("olap", AggPlan(tuple(sc.all_customer_keys()),
+                                       AggOp("sum", "int")))
     else:
         for key in sc.all_customer_keys():
             v = yield ("r", key)
@@ -144,21 +165,28 @@ def customer_balance(rng: random.Random, sc: Scale,
     yield ("out", total)
 
 
+def _recent_order_groups(dkeys, dists, last_n: int = 5):
+    """Per-district key groups of the last `last_n` orders, derived from a
+    scanned district pass (the GROUP BY key ranges)."""
+    groups = []
+    for dk, dist in zip(dkeys, dists):
+        _, w, d = dk.split(":")
+        hi = (dist or {"next_o_id": 0})["next_o_id"]
+        groups.append(tuple(f"order:{w}:{d}:{o}"
+                            for o in range(max(hi - last_n, 0), hi)))
+    return tuple(groups)
+
+
 def order_revenue(rng: random.Random, sc: Scale,
                   batched: bool = False) -> Iterator[Step]:
     """Scan districts then recent orders; aggregates revenue."""
     rev = 0
     if batched:
-        dkeys = [f"district:{w}:{d}" for w in range(sc.warehouses)
-                 for d in range(sc.districts)]
-        dists = yield ("scan", dkeys)       # values needed: derive key range
-        okeys = []
-        for dk, dist in zip(dkeys, dists):
-            _, w, d = dk.split(":")
-            hi = (dist or {"next_o_id": 0})["next_o_id"]
-            okeys += [f"order:{w}:{d}:{o}" for o in range(max(hi - 5, 0), hi)]
+        dkeys = sc.all_district_keys()
+        dists = yield ("olap", ScanPlan(tuple(dkeys)))  # derive key range
+        okeys = [k for g in _recent_order_groups(dkeys, dists) for k in g]
         if okeys:
-            rev = yield ("agg", okeys, AggOp("sum", "total"))
+            rev = yield ("olap", AggPlan(tuple(okeys), AggOp("sum", "total")))
         yield ("out", rev)
         return
     for w in range(sc.warehouses):
@@ -172,7 +200,63 @@ def order_revenue(rng: random.Random, sc: Scale,
     yield ("out", rev)
 
 
-OLAP_QUERIES = (stock_level_scan, customer_balance, order_revenue)
+def district_revenue_group(rng: random.Random, sc: Scale,
+                           batched: bool = False) -> Iterator[Step]:
+    """GROUP BY district: revenue and AVG order value per district over
+    the recent orders — the batched shape is ONE `GroupByPlan` whose
+    compound (sum, count) ops come back as a [districts × 2] tile from a
+    single fused device pass (AVG derived on host from the two lanes;
+    groups with no orders are empty groups)."""
+    dkeys = sc.all_district_keys()
+    if batched:
+        dists = yield ("olap", ScanPlan(tuple(dkeys)))
+        groups = _recent_order_groups(dkeys, dists)
+        rows = yield ("olap", GroupByPlan(
+            groups, (AggOp("sum", "total"), AggOp("count", "total"))))
+        out = [(dk, s, s // n if n else 0) for dk, (s, n) in zip(dkeys, rows)]
+        yield ("out", out)
+        return
+    out = []
+    for dk in dkeys:
+        dist = yield ("r", dk)
+        _, w, d = dk.split(":")
+        hi = (dist or {"next_o_id": 0})["next_o_id"]
+        s = n = 0
+        for o in range(max(hi - 5, 0), hi):
+            order = yield ("r", f"order:{w}:{d}:{o}")
+            if isinstance(order, dict) and "total" in order:
+                s += order["total"]
+                n += 1
+        out.append((dk, s, s // n if n else 0))
+    yield ("out", out)
+
+
+def stock_overview(rng: random.Random, sc: Scale,
+                   batched: bool = False) -> Iterator[Step]:
+    """Compound multi-statistic dashboard: total, AVG, and floor of stock
+    quantities — the batched shape is ONE `MultiAggPlan` answered from a
+    single visibility pass (the kernel computes all five statistic lanes
+    anyway), never three scans."""
+    keys = sc.all_stock_keys()
+    if batched:
+        s, n, mn = yield ("olap", MultiAggPlan(
+            tuple(keys), (AggOp("sum", "int"), AggOp("count", "int"),
+                          AggOp("min", "int"))))
+    else:
+        s = n = 0
+        mn = None
+        for key in keys:
+            q = yield ("r", key)
+            if isinstance(q, int):
+                s += q
+                n += 1
+                mn = q if mn is None or q < mn else mn
+        mn = mn if mn is not None else 0
+    yield ("out", (s, s // n if n else 0, mn))
+
+
+OLAP_QUERIES = (stock_level_scan, customer_balance, order_revenue,
+                district_revenue_group, stock_overview)
 
 # Per-query freshness requirements (bounded staleness, in WAL records) for
 # replica-cluster snapshot routing: None tolerates any replication lag; a
@@ -183,6 +267,8 @@ OLAP_FRESHNESS = {
     "stock_level_scan": None,     # historical trend: any replica will do
     "customer_balance": 400,      # moderately fresh balance sheet
     "order_revenue": 120,         # near-real-time revenue dashboard
+    "district_revenue_group": 200,  # per-district drill-down, fairly fresh
+    "stock_overview": None,       # inventory dashboard: staleness tolerant
 }
 
 

@@ -5,9 +5,10 @@ from .paged import (init_store, visible_slots, snapshot_read_ref,
                     visible_slots_members, snapshot_read_members,
                     publish_page, as_page_range, gather_pages)
 from .mirror import PagedMirror, decode_value, encode_value
-from .version_store import (AggOp, AggPlan, ChainVersionStore,
-                            PagedVersionStore, Plan, ScanPlan, VersionStore,
-                            agg_value, apply_agg, finalize_agg)
+from .version_store import (AggOp, AggPlan, ChainVersionStore, GroupByPlan,
+                            MultiAggPlan, PagedVersionStore, Plan, ScanPlan,
+                            VersionStore, agg_value, apply_agg, apply_plan,
+                            finalize_agg, group_by, plan_keys)
 
 __all__ = [
     "VersionedParamStore",
@@ -16,6 +17,7 @@ __all__ = [
     "as_page_range", "gather_pages",
     "PagedMirror", "encode_value", "decode_value",
     "VersionStore", "ChainVersionStore", "PagedVersionStore",
-    "AggOp", "AggPlan", "ScanPlan", "Plan",
-    "agg_value", "apply_agg", "finalize_agg",
+    "AggOp", "AggPlan", "MultiAggPlan", "GroupByPlan", "ScanPlan", "Plan",
+    "agg_value", "apply_agg", "apply_plan", "finalize_agg", "group_by",
+    "plan_keys",
 ]

@@ -56,6 +56,13 @@ AGG_FIELD_TAGS = {"int": (TAG_INT, TAG_INIT), "total": (TAG_ORDER, _NO_TAG)}
 _INT32 = np.iinfo(np.int32)
 
 
+def _op_config(op) -> tuple:
+    """The fused-kernel pass an `AggOp` needs: (field, threshold) —
+    threshold only matters to count_below, so every other kind shares its
+    field's default pass (the kernel emits all five lanes regardless)."""
+    return (op.field, op.threshold if op.kind == "count_below" else None)
+
+
 def encode_value(value: Any, elems: int) -> np.ndarray:
     """Encode a workload value into a fixed [elems] int32 payload."""
     out = np.zeros(elems, np.int32)
@@ -112,6 +119,10 @@ class PagedMirror:
         self.applied_lsn = 0
         self.commit_seq: dict[int, int] = {}   # txn -> commit seq
         self.watermark = 0                     # newest applied commit seq
+        # dense-range fast-path accounting for fused plan executions: a
+        # contiguous ascending page run slices the store (no gather) —
+        # `reserve` key families contiguously to raise the hit rate
+        self.range_stats = {"dense": 0, "gather": 0}
 
     # ----------------------------------------------------------- page alloc
     @property
@@ -131,6 +142,19 @@ class PagedMirror:
         self.page_of[key] = page
         self.keys.append(key)
         return page
+
+    def reserve(self, keys: Iterable[str]) -> int:
+        """Pre-allocate pages for a key sequence IN ORDER (page-range
+        locality): a workload key family reserved contiguously resolves to
+        a dense ascending page run, so fused plan executions over it hit
+        the `paged.as_page_range` slice fast path instead of gathering.
+        Reserved-but-unwritten pages hold only the initial (ts == 0) slot
+        and decode to 0 — exactly what a missing key reads as.  Returns
+        the number of pages newly allocated."""
+        before = len(self.keys)
+        for key in keys:
+            self._ensure_page(key)
+        return len(self.keys) - before
 
     # -------------------------------------------------------------- publish
     def _publish(self, page: int, payload: np.ndarray, seq: int, writer: int,
@@ -293,6 +317,7 @@ class PagedMirror:
         n = int(pages.shape[0])
         pad = (-n) % 8 if n else 8
         rng = as_page_range(pages)
+        self.range_stats["dense" if rng is not None else "gather"] += 1
         if rng is not None:
             data, ts = self.data[rng[0]:rng[1]], self.ts[rng[0]:rng[1]]
         else:
@@ -310,32 +335,100 @@ class PagedMirror:
                 [ts, np.zeros((pad,) + self.ts.shape[1:], np.int32)])
         return {"data": jnp.asarray(data), "ts": jnp.asarray(ts)}
 
-    def agg_with_writers(self, keys: Sequence[str], snapshot, op, *,
-                         use_kernel: bool = True,
-                         interpret=None) -> tuple[list[int], list[int]]:
-        """Fused scan+aggregate over the paged image: ONE `rss_scan_agg`
-        device pass resolves visibility for the plan's page range and
-        reduces the member-visible payloads — they are never decoded back
-        to Python.  Writers come out of the same host-side slot resolve
-        (no payload decode either), so the engine records the aggregate's
-        read set exactly like a scan's.
+    def _scalar_raws(self, pages: np.ndarray, member_ts, floor, ops, *,
+                     use_kernel: bool = True, interpret=None) -> dict:
+        """One fused `rss_scan_agg` pass per distinct kernel config the op
+        list needs (ops sharing a field — and a threshold for count_below —
+        fold into one pass, since the kernel emits all five statistic
+        lanes).  The gathered sub-store is built ONCE and shared across
+        configs.  Returns {config: [sum, count, count_below, min, max]}."""
+        configs = list(dict.fromkeys(_op_config(op) for op in ops))
+        empty = [0, 0, 0, int(_INT32.max), int(_INT32.min)]
+        if not len(pages):
+            return {cfg: list(empty) for cfg in configs}
+        from ..kernels.rss_scan_agg.ops import snapshot_agg_members
 
-        `op` is a `version_store.AggOp`; returns (the folded [sum, count,
-        count_below, min, max] Python ints, writer txn per key)."""
+        store = self.jnp_store_for(pages)
+        mem = np.asarray(member_ts, np.int32)
+        raws = {}
+        for field, thr in configs:
+            tag_main, tag_alt = AGG_FIELD_TAGS[field]
+            raws[(field, thr)] = snapshot_agg_members(
+                store, mem, floor, tag_main=tag_main, tag_alt=tag_alt,
+                threshold=thr, use_kernel=use_kernel, interpret=interpret)
+        return raws
+
+    def _grouped_raws(self, key_groups, pages: np.ndarray, member_ts, floor,
+                      ops, *, use_kernel: bool = True, interpret=None) \
+            -> dict:
+        """Grouped twin of `_scalar_raws`: one fused `rss_scan_agg_grouped`
+        pass per distinct kernel config, every group reduced into its own
+        accumulator lanes.  Group ids follow the flat group-major page
+        order (a key in two groups occupies two gathered rows, each with
+        its own gid); padding pages carry gid -1 and match no lane.
+        Returns {config: [group][sum, count, count_below, min, max]}."""
+        n_groups = len(key_groups)
+        configs = list(dict.fromkeys(_op_config(op) for op in ops))
+        empty = [0, 0, 0, int(_INT32.max), int(_INT32.min)]
+        if not len(pages) or not n_groups:
+            return {cfg: [list(empty) for _ in range(n_groups)]
+                    for cfg in configs}
+        from ..kernels.rss_scan_agg.ops import snapshot_group_agg_members
+
+        store = self.jnp_store_for(pages)
+        gid = np.full(int(store["ts"].shape[0]), -1, np.int32)
+        gid[:len(pages)] = np.concatenate(
+            [np.full(len(grp), g, np.int32)
+             for g, grp in enumerate(key_groups)])
+        mem = np.asarray(member_ts, np.int32)
+        raws = {}
+        for field, thr in configs:
+            tag_main, tag_alt = AGG_FIELD_TAGS[field]
+            raws[(field, thr)] = snapshot_group_agg_members(
+                store, gid, n_groups, mem, floor, tag_main=tag_main,
+                tag_alt=tag_alt, threshold=thr, use_kernel=use_kernel,
+                interpret=interpret)
+        return raws
+
+    def execute_with_writers(self, plan, snapshot, *,
+                             use_kernel: bool = True,
+                             interpret=None) -> tuple:
+        """The paged store's ONE plan-execution seam (what
+        `PagedVersionStore.execute_with_writers` delegates to): `ScanPlan`
+        takes the batched scan path; aggregate plans lower to the fused
+        kernels — `AggPlan`/`MultiAggPlan` to `rss_scan_agg` (one pass per
+        distinct field/threshold config, all of a compound's statistics
+        from the same pass), `GroupByPlan` to `rss_scan_agg_grouped` (a
+        [groups, 5] partial tile per pass).  Writers always cover the
+        plan's flat key sequence from the same host-side slot resolve, so
+        read-set recording is identical for every plan kind."""
+        from .version_store import (AggPlan, GroupByPlan, MultiAggPlan,
+                                    ScanPlan, finalize_agg, plan_keys)
+
+        if isinstance(plan, ScanPlan):
+            return self.scan_with_writers(plan.keys, snapshot)
+        keys = plan_keys(plan)
         pages = self.page_index(keys)
         mask_fn, member_ts, floor = self._snapshot_mask(snapshot)
         writers = self._writers_for(pages, mask_fn)
-        if not len(keys):
-            return [0, 0, 0, int(_INT32.max), int(_INT32.min)], writers
-        from ..kernels.rss_scan_agg.ops import snapshot_agg_members
-
-        tag_main, tag_alt = AGG_FIELD_TAGS[op.field]
-        raw = snapshot_agg_members(
-            self.jnp_store_for(pages), np.asarray(member_ts, np.int32),
-            floor, tag_main=tag_main, tag_alt=tag_alt,
-            threshold=op.threshold, use_kernel=use_kernel,
-            interpret=interpret)
-        return raw, writers
+        if isinstance(plan, GroupByPlan):
+            raws = self._grouped_raws(plan.key_groups, pages, member_ts,
+                                      floor, plan.ops,
+                                      use_kernel=use_kernel,
+                                      interpret=interpret)
+            result = tuple(
+                tuple(finalize_agg(raws[_op_config(op)][g], op)
+                      for op in plan.ops)
+                for g in range(len(plan.key_groups)))
+            return result, writers
+        ops = (plan.op,) if isinstance(plan, AggPlan) else plan.ops
+        raws = self._scalar_raws(pages, member_ts, floor, ops,
+                                 use_kernel=use_kernel, interpret=interpret)
+        vals = tuple(finalize_agg(raws[_op_config(op)], op) for op in ops)
+        if isinstance(plan, AggPlan):
+            return vals[0], writers
+        assert isinstance(plan, MultiAggPlan), plan
+        return vals, writers
 
     # -------------------------------------------------------- device export
     def jnp_store(self) -> dict:

@@ -16,12 +16,22 @@ semantics but different shapes:
   * **batched snapshot scan** over a key sequence — ONE visibility
     resolution for the whole read set instead of N per-key walks,
   * **plan execution** — the query-plan IR of the device-resident OLAP
-    executor: `ScanPlan` (materialize the visible values) and `AggPlan`
+    executor: `ScanPlan` (materialize the visible values), `AggPlan`
     (reduce a tagged field of the visible values: sum / count /
-    count-below / min / max).  `ChainVersionStore` executes plans on the
-    per-key Python path (the oracle); `PagedVersionStore` lowers `AggPlan`
-    to the fused `rss_scan_agg` Pallas kernel, so aggregate results come
-    back as ONE scalar — page payloads never decode back to Python.
+    count-below / min / max), `MultiAggPlan` (a compound of several
+    statistics over ONE read set, e.g. sum+count for AVG, served by a
+    single visibility pass — the kernel computes all five lanes anyway),
+    and `GroupByPlan` (GROUP BY: per-group key sequences reduced to a
+    small [groups × ops] tile in one fused pass).  `ChainVersionStore`
+    executes plans on the per-key Python path (the oracle);
+    `PagedVersionStore` lowers aggregate plans to the fused
+    `rss_scan_agg` Pallas kernels, so results come back as a handful of
+    scalars — page payloads never decode back to Python.
+
+`execute(plan, snapshot)` is the ONE OLAP seam every layer above exposes
+(engine, HTAP facades, replica, cluster, driver): new plan kinds are a
+one-layer change here plus a kernel lowering, never a new method pair at
+six layers.
 
 Snapshots are either an int commit-seq watermark or an exported
 `RssSnapshot`; `scan()`/`execute()` dispatch on the type.
@@ -66,7 +76,55 @@ class AggPlan:
     op: AggOp
 
 
-Plan = Union[ScanPlan, AggPlan]
+@dataclass(frozen=True)
+class MultiAggPlan:
+    """Compound multi-statistic plan: several `AggOp`s over ONE key
+    sequence, answered from a single visibility resolve (the fused kernel
+    emits all five statistic lanes per pass, so e.g. AVG = sum+count costs
+    one device pass, not two).  Result: a tuple of ints aligned with
+    `ops`."""
+    keys: tuple[str, ...]
+    ops: tuple[AggOp, ...]
+
+
+@dataclass(frozen=True)
+class GroupByPlan:
+    """Grouped aggregate (GROUP BY district / warehouse / ...): group i is
+    the key sequence `key_groups[i]`, and every group is reduced under
+    every op in ONE fused pass emitting a small [groups × ops] tile.
+    Result: a tuple over groups of tuples of ints aligned with `ops`.
+    Groups may be empty (count 0, min/max fold to 0) and a key may appear
+    in more than one group.  Build from a key-classifier function with
+    `group_by`."""
+    key_groups: tuple[tuple[str, ...], ...]
+    ops: tuple[AggOp, ...]
+
+    @property
+    def keys(self) -> tuple[str, ...]:
+        """The flat read set, group-major — what read-set recording and
+        the per-key oracle walk."""
+        return tuple(k for grp in self.key_groups for k in grp)
+
+
+Plan = Union[ScanPlan, AggPlan, MultiAggPlan, GroupByPlan]
+
+
+def plan_keys(plan: Plan) -> tuple[str, ...]:
+    """Every plan's flat key sequence (group-major for `GroupByPlan`) —
+    the read set a plan execution records, in oracle-walk order."""
+    return plan.keys
+
+
+def group_by(keys: Sequence[str], group_key_fn,
+             ops: Sequence[AggOp]) -> tuple[tuple, GroupByPlan]:
+    """Build a `GroupByPlan` from a key-classifier: groups appear in
+    first-appearance order of `group_key_fn(key)`.  Returns (group labels,
+    plan) so callers can zip labels with the per-group result rows."""
+    groups: dict[Any, list[str]] = {}
+    for k in keys:
+        groups.setdefault(group_key_fn(k), []).append(k)
+    return tuple(groups), GroupByPlan(
+        tuple(tuple(g) for g in groups.values()), tuple(ops))
 
 
 def agg_value(value: Any, field: str) -> Optional[int]:
@@ -101,6 +159,28 @@ def apply_agg(values: Sequence[Any], op: AggOp) -> int:
     if op.kind == "max":
         return max(xs, default=0)
     raise ValueError(f"unknown aggregate kind {op.kind!r}")
+
+
+def apply_plan(values: Sequence[Any], plan: Plan) -> Any:
+    """Host-side plan application over the flat scanned values (in
+    `plan_keys` order) — the per-key oracle every fused lowering must
+    equal bitwise.  `ScanPlan` -> list of values; `AggPlan` -> int;
+    `MultiAggPlan` -> tuple[int] per op; `GroupByPlan` -> tuple over
+    groups of tuple[int] per op."""
+    if isinstance(plan, ScanPlan):
+        return list(values)
+    if isinstance(plan, AggPlan):
+        return apply_agg(values, plan.op)
+    if isinstance(plan, MultiAggPlan):
+        return tuple(apply_agg(values, op) for op in plan.ops)
+    if isinstance(plan, GroupByPlan):
+        out, i = [], 0
+        for grp in plan.key_groups:
+            gvals = values[i:i + len(grp)]
+            i += len(grp)
+            out.append(tuple(apply_agg(gvals, op) for op in plan.ops))
+        return tuple(out)
+    raise TypeError(f"unknown plan kind {type(plan).__name__}")
 
 
 def finalize_agg(raw: Sequence[int], op: AggOp) -> int:
@@ -157,16 +237,15 @@ class _ScanDispatch:
 
     def execute_with_writers(self, plan: Plan, snapshot: Snapshot) \
             -> tuple[Any, list[int]]:
-        """Default lowering: one batched visibility walk, then (for
-        `AggPlan`) a host-side reduce — the per-key oracle path.  Stores
-        with a device-resident image override this to fuse resolve +
-        reduce in one kernel pass.  The writers always cover every plan
-        key, so the engine records aggregate read sets exactly like scan
-        read sets."""
-        vals, writers = self.scan_with_writers(plan.keys, snapshot)
-        if isinstance(plan, AggPlan):
-            return apply_agg(vals, plan.op), writers
-        return vals, writers
+        """Default lowering: one batched visibility walk over the plan's
+        flat key sequence, then a host-side `apply_plan` — the per-key
+        oracle path for every plan kind.  Stores with a device-resident
+        image override this to fuse resolve + reduce in one kernel pass.
+        The writers always cover every plan key (group-major for
+        `GroupByPlan`), so the engine records aggregate read sets exactly
+        like scan read sets."""
+        vals, writers = self.scan_with_writers(plan_keys(plan), snapshot)
+        return apply_plan(vals, plan), writers
 
 
 class ChainVersionStore(_ScanDispatch):
@@ -222,19 +301,17 @@ class PagedVersionStore(_ScanDispatch):
     """VersionStore over the WAL-mirrored paged store: scans are single
     vectorized visibility passes (`version_gather`/`rss_gather` algorithm);
     `mirror.jnp_store()` exposes the same state to the Pallas kernels, and
-    `AggPlan`s lower to the fused `rss_scan_agg` kernel — visibility
-    resolve + reduction in one device pass over the plan's page range."""
+    aggregate plans (`AggPlan`/`MultiAggPlan`/`GroupByPlan`) lower to the
+    fused `rss_scan_agg` kernel family via
+    `PagedMirror.execute_with_writers` — visibility resolve + reduction in
+    one device pass per kernel config over the plan's page range."""
 
     def __init__(self, mirror: PagedMirror) -> None:
         self.mirror = mirror
 
     def execute_with_writers(self, plan: Plan, snapshot: Snapshot) \
             -> tuple[Any, list[int]]:
-        if isinstance(plan, AggPlan):
-            raw, writers = self.mirror.agg_with_writers(plan.keys, snapshot,
-                                                        plan.op)
-            return finalize_agg(raw, plan.op), writers
-        return self.scan_with_writers(plan.keys, snapshot)
+        return self.mirror.execute_with_writers(plan, snapshot)
 
     def read_at(self, key: str, watermark: int) -> Any:
         return self.mirror.read_at(key, watermark)

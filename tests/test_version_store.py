@@ -195,19 +195,22 @@ class TestDriverScanPath:
 
 
 class TestBatchedQueryShape:
-    def test_batched_generators_yield_scan_or_agg_steps(self):
-        from repro.tensorstore import AggOp
+    def test_batched_generators_yield_olap_plan_steps(self):
+        from repro.tensorstore import (AggPlan, MultiAggPlan, Plan, ScanPlan,
+                                       plan_keys)
         rng = random.Random(0)
         sc = Scale()
         seen = set()
-        for _ in range(20):
+        for _ in range(30):
             gen, name = olap_query(rng, sc, batched=True)
             step = gen.send(None)
-            assert step[0] in ("scan", "agg"), name
-            assert isinstance(step[1], list) and step[1]
-            if step[0] == "agg":
-                assert isinstance(step[2], AggOp), name
-            seen.add(step[0])
-        # pure aggregates AND value scans (order_revenue's district pass)
-        # both appear in the batched mix
-        assert seen == {"scan", "agg"}
+            assert step[0] == "olap", name
+            plan = step[1]
+            assert isinstance(plan, Plan.__args__), name
+            assert plan_keys(plan), name    # first step always reads keys
+            seen.add(type(plan))
+        # pure aggregates, compound aggregates, AND value scans (the
+        # district passes that derive order key ranges) all appear in the
+        # batched mix (GroupByPlan comes second in its query — after the
+        # district scan — so it is not in the first-step set)
+        assert {ScanPlan, AggPlan, MultiAggPlan} <= seen
