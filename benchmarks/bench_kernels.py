@@ -117,12 +117,18 @@ def _agg_paths(P):
         "in": in_bytes, "scan_out": P * E * 4, "fused_out": 5 * 4}
 
 
-def _time_host(fn, iters=5):
+def _time_host(fn, iters=5, repeats=1):
+    """Mean us over `iters` calls; with repeats > 1, the MIN of `repeats`
+    such means (timeit.repeat discipline — the minimum is the least
+    noise-contaminated estimate of the closure's cost)."""
     fn()
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        fn()
-    return (time.perf_counter() - t0) / iters * 1e6     # us
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            fn()
+        best = min(best, (time.perf_counter() - t0) / iters * 1e6)
+    return best                                          # us
 
 
 def bench_rss_scan_agg():
@@ -172,14 +178,17 @@ def scan_agg_report(page_counts=(1024, 4096, 16384), iters=5) -> dict:
 
 
 def _group_paths(P, G):
-    """(scan+host-decode+groupby closure, fused grouped-agg closure) for a
-    GROUP BY aggregate over P pages in G groups — the two executor shapes
-    `group_agg_report` sweeps.  Groups are contiguous page families (the
-    page-range-locality layout `PagedMirror.reserve` produces)."""
+    """(scan+host-decode+groupby, flat-lane fused, chunked two-stage
+    fused) closures for a GROUP BY aggregate over P pages in G groups —
+    the three executor strategies `group_agg_report` sweeps.  Groups are
+    contiguous page families (the page-range-locality layout
+    `PagedMirror.reserve` produces)."""
     import numpy as np
     from repro.kernels.rss_gather.ref import rss_gather_ref
+    from repro.kernels.rss_scan_agg.kernel import tree_fold_partials
     from repro.kernels.rss_scan_agg.ops import fold_group_partials
-    from repro.kernels.rss_scan_agg.ref import rss_scan_agg_grouped_ref
+    from repro.kernels.rss_scan_agg.ref import (rss_scan_agg_chunked_ref,
+                                                rss_scan_agg_grouped_ref)
     from repro.tensorstore.mirror import decode_value
     from repro.tensorstore.version_store import AggOp, apply_agg, finalize_agg
 
@@ -188,52 +197,160 @@ def _group_paths(P, G):
     gid = jnp.asarray(gid_flat.reshape(P, 1))
     op = AggOp("sum", "int")
     gather = jax.jit(lambda d, t, m: rss_gather_ref(d, t, m, floor))
-    fused = jax.jit(lambda d, t, g, m: rss_scan_agg_grouped_ref(
+    flat = jax.jit(lambda d, t, g, m: rss_scan_agg_grouped_ref(
+        d, t, g, m, floor, tag_main=1, tag_alt=0, n_groups=G))
+    chunked = jax.jit(lambda d, t, g, m: rss_scan_agg_chunked_ref(
         d, t, g, m, floor, tag_main=1, tag_alt=0, n_groups=G))
 
     def scan_then_host_groupby():
         rows = np.asarray(gather(data, ts, members))    # leaves the device
-        vals = [decode_value(r) for r in rows]
-        return [apply_agg([v for v, g in zip(vals, gid_flat) if g == grp],
-                          op) for grp in range(G)]
+        acc = [[] for _ in range(G)]
+        for r, g in zip(rows, gid_flat):
+            acc[g].append(decode_value(r))
+        return [apply_agg(a, op) for a in acc]
 
-    def fused_group_agg():
+    def flat_group_agg():
         # [P/8, G, 5] partial tiles back, folded per group in Python ints
-        partials = fold_group_partials(fused(data, ts, gid, members))
+        partials = fold_group_partials(flat(data, ts, gid, members))
         return [finalize_agg(row, op) for row in partials]
 
-    assert scan_then_host_groupby() == fused_group_agg()   # parity, in-bench
-    return scan_then_host_groupby, fused_group_agg
+    def chunked_group_agg():
+        # [chunks, G, 5] partials tree-folded ON DEVICE; only [G, 5] lands
+        folded = np.asarray(tree_fold_partials(
+            chunked(data, ts, gid, members))).tolist()
+        return [finalize_agg(folded[g], op) for g in range(G)]
+
+    # three-way parity, in-bench
+    assert scan_then_host_groupby() == flat_group_agg() == chunked_group_agg()
+    return scan_then_host_groupby, flat_group_agg, chunked_group_agg
 
 
-def group_agg_report(page_counts=(1024, 4096), groups=(4, 16, 64),
+def group_agg_report(page_counts=(1024, 4096), groups=(4, 16, 64, 256),
                      iters=5) -> dict:
-    """Grouped-aggregate sweep (groups × pages): one GROUP BY sum executed
-    as (a) the scan path — device visibility gather, host decode, host
-    group-by — and (b) the fused `rss_scan_agg_grouped` pass returning a
-    [groups, 5] partial tile.  The fused win is the eliminated host decode
-    + group-by loop (linear in pages); the tile cost grows only with
-    groups.  Persisted to BENCH_kernels.json under `group_agg`."""
+    """Grouped-aggregate strategy sweep (groups × pages): one GROUP BY sum
+    executed as (a) the scan path — device visibility gather, host
+    decode, host group-by — (b) the flat-lane fused pass ([P/8, G, 5]
+    partial tiles, VMEM and output linear in G), and (c) the chunked
+    two-stage pass (select + tiled-group reduce + device tree fold, [G,5]
+    out, VMEM bounded by the group tile).  The flat win decays as G
+    grows; chunked stays flat-in-G — the crossover is what
+    `ops.select_grouped_mode` encodes (recorded per shape as `mode`).
+    Persisted to BENCH_kernels.json under `group_agg`."""
+    from repro.kernels.rss_scan_agg.ops import select_grouped_mode
+
     sweep = {}
     for P in page_counts:
         for G in groups:
-            scan_fn, fused_fn = _group_paths(P, G)
-            scan_us = _time_host(scan_fn, iters)
-            fused_us = _time_host(fused_fn, iters)
+            scan_fn, flat_fn, chunked_fn = _group_paths(P, G)
+            # interleave repeat rounds across the three strategies so
+            # machine-load drift cancels in the speedup ratios
+            t = {f: [] for f in (scan_fn, flat_fn, chunked_fn)}
+            for _ in range(3):
+                for f in t:
+                    t[f].append(_time_host(f, iters))
+            scan_us, flat_us, chunked_us = (min(t[f]) for f in t)
             sweep[f"P={P},G={G}"] = {
                 "scan_host_groupby_us": round(scan_us, 1),
-                "fused_group_agg_us": round(fused_us, 1),
-                "speedup": round(scan_us / max(fused_us, 1e-9), 2),
-                "fused_out_bytes": G * 5 * 4,
+                "flat_us": round(flat_us, 1),
+                "chunked_us": round(chunked_us, 1),
+                "speedup_flat": round(scan_us / max(flat_us, 1e-9), 2),
+                "speedup_chunked": round(scan_us / max(chunked_us, 1e-9), 2),
+                "mode": select_grouped_mode(P, G),
+                "launches": {"flat": 1, "chunked": 2},
+                "flat_partial_bytes": (P // 8) * G * 5 * 4,
+                "chunked_out_bytes": G * 5 * 4,
             }
-    top = f"P={max(page_counts)},G={min(groups)}"
+    Pt = max(page_counts)
+    tops = [sweep[f"P={Pt},G={G}"]["speedup_chunked"] for G in groups]
+    decay_pct = round(100 * (1 - min(tops) / max(tops[0], 1e-9)), 1)
+    head = f"P={Pt},G={64 if 64 in groups else max(groups)}"
     return {
         "op": "GROUP BY sum(int) over member-visible pages (K=4, E=32)",
         "sweep": sweep,
+        "headline_speedup": sweep[head]["speedup_chunked"],
+        "headline_shape": head,
+        "chunked_decay_pct_across_groups": decay_pct,
+        "tpu_roofline_note": "chunked writes G*20B after the device fold "
+                             "(flat writes (P/8)*G*20B partials) and both "
+                             "eliminate host decode + group-by entirely",
+    }
+
+
+def plan_batch_report(batch_sizes=(1, 2, 4, 8), P=4096, iters=3) -> dict:
+    """Whole-batch plan fusion sweep: N same-horizon `MultiAggPlan`s over
+    contiguous key slices of a WAL-mirrored paged store, executed (a)
+    unbatched — one executor dispatch per plan — and (b) as ONE
+    `BatchPlan` — a single fused grouped dispatch whose lane tile serves
+    every plan.  Asserts in-bench that the batched results equal the
+    unbatched ones AND the host `apply_plan` oracle, and that the batch
+    really cost one dispatch.  Persisted to BENCH_kernels.json under
+    `plan_batch`."""
+    import numpy as np
+    from repro.core import Wal
+    from repro.tensorstore import (AggOp, BatchPlan, MultiAggPlan,
+                                   PagedMirror, ScanPlan, apply_plan)
+
+    rng = np.random.default_rng(4)
+    keys = [f"k:{i}" for i in range(P)]
+    wal = Wal()
+    for c in range(0, P, 256):
+        tid = c // 256 + 1
+        wal.log_begin(tid)
+        wal.log_commit(tid, [(k, int(rng.integers(0, 200)))
+                             for k in keys[c:c + 256]],
+                       seq=wal.head_lsn + 1)
+    mirror = PagedMirror(slots=4)
+    mirror.catch_up(wal)
+    wm = P          # every commit visible at the head watermark
+    ops = (AggOp("sum", "int"), AggOp("count", "int"),
+           AggOp("count_below", "int", 100))
+    slice_len = P // max(batch_sizes)
+    sweep = {}
+    for N in batch_sizes:
+        plans = tuple(
+            MultiAggPlan(tuple(keys[j * slice_len:(j + 1) * slice_len]), ops)
+            for j in range(N))
+        batch = BatchPlan(plans)
+
+        def unbatched():
+            return [mirror.execute_with_writers(p, wm, use_kernel=False)[0]
+                    for p in plans]
+
+        def batched():
+            return list(mirror.execute_with_writers(
+                batch, wm, use_kernel=False)[0])
+
+        before = mirror.exec_stats["agg_dispatches"]
+        got = batched()
+        assert mirror.exec_stats["agg_dispatches"] - before == 1  # ONE launch
+        assert got == unbatched()                                 # exact
+        oracle = [apply_plan(
+            mirror.execute_with_writers(ScanPlan(p.keys), wm)[0], p)
+            for p in plans]
+        assert got == oracle
+        t = {f: [] for f in (unbatched, batched)}
+        for _ in range(3):
+            for f in t:
+                t[f].append(_time_host(f, iters))
+        un_us, ba_us = (min(t[f]) for f in t)
+        sweep[str(N)] = {
+            "unbatched_us": round(un_us, 1),
+            "batched_us": round(ba_us, 1),
+            "speedup": round(un_us / max(ba_us, 1e-9), 2),
+            "unbatched_dispatches": N,
+            "batched_dispatches": 1,
+            "batched_out_bytes": N * len(ops) * 5 * 4,
+        }
+    top = str(max(batch_sizes))
+    return {
+        "op": f"N x MultiAggPlan(sum,count,count_below) over {slice_len} "
+              f"keys each (P={P})",
+        "sweep": sweep,
         "headline_speedup": sweep[top]["speedup"],
-        "headline_shape": top,
-        "tpu_roofline_note": "fused writes G*20B instead of P*E*4B and "
-                             "eliminates host decode + group-by entirely",
+        "headline_batch": int(top),
+        "note": "batched = ONE fused grouped dispatch (one visibility "
+                "resolve, one lane per plan x config); unbatched = one "
+                "dispatch per plan",
     }
 
 

@@ -82,7 +82,8 @@ def main(smoke: bool = False) -> None:
 
     # ---------------------------------------------------------- kernels
     from .bench_kernels import (all_benches, gather_kernels_report,
-                                group_agg_report, scan_agg_report)
+                                group_agg_report, plan_batch_report,
+                                scan_agg_report)
     for name, us, derived in all_benches():
         print(f"{name},{us:.1f},{derived}")
 
@@ -97,17 +98,37 @@ def main(smoke: bool = False) -> None:
     print(f"scan_agg:headline,0,fused=x{agg_report['headline_speedup']}"
           f"_vs_host_decode_at_P={agg_report['headline_pages']}")
 
-    # --------------------------- grouped executor (groups × pages sweep)
+    # --------------- grouped executor (strategy × groups × pages sweep)
+    # smoke shapes dispatch to all three modes: (32,G) -> host,
+    # (256,4) -> flat, (256,64) -> chunked
     group_report = group_agg_report(
-        page_counts=(256, 1024) if smoke else (1024, 4096),
-        groups=(4, 16) if smoke else (4, 16, 64),
+        page_counts=(32, 256) if smoke else (1024, 4096),
+        groups=(4, 64) if smoke else (4, 16, 64, 256),
         iters=2 if smoke else 5)
     for shape, r in group_report["sweep"].items():
-        print(f"group_agg:{shape},{r['fused_group_agg_us']},"
+        print(f"group_agg:{shape},{r['chunked_us']},"
               f"host_groupby={r['scan_host_groupby_us']}us;"
-              f"speedup=x{r['speedup']}")
-    print(f"group_agg:headline,0,fused=x{group_report['headline_speedup']}"
-          f"_vs_host_groupby_at_{group_report['headline_shape']}")
+              f"flat={r['flat_us']}us;mode={r['mode']};"
+              f"speedup_flat=x{r['speedup_flat']};"
+              f"speedup_chunked=x{r['speedup_chunked']}")
+    print(f"group_agg:headline,0,"
+          f"chunked=x{group_report['headline_speedup']}"
+          f"_vs_host_groupby_at_{group_report['headline_shape']};"
+          f"decay={group_report['chunked_decay_pct_across_groups']}%")
+
+    # ----------------------- whole-batch plan fusion (batch-size sweep)
+    batch_report = plan_batch_report(
+        batch_sizes=(1, 2, 4) if smoke else (1, 2, 4, 8),
+        P=256 if smoke else 4096,
+        iters=2 if smoke else 3)
+    for n, r in batch_report["sweep"].items():
+        print(f"plan_batch:N={n},{r['batched_us']},"
+              f"unbatched={r['unbatched_us']}us;"
+              f"dispatches={r['batched_dispatches']}_vs_"
+              f"{r['unbatched_dispatches']};speedup=x{r['speedup']}")
+    print(f"plan_batch:headline,0,"
+          f"batched=x{batch_report['headline_speedup']}"
+          f"_vs_unbatched_at_N={batch_report['headline_batch']}")
 
     if smoke:
         print("bench_kernels_json,0,skipped_(smoke_mode)")
@@ -120,7 +141,8 @@ def main(smoke: bool = False) -> None:
                                           rss_construct=construct_report,
                                           replica_lag=lag_report,
                                           scan_agg=agg_report,
-                                          group_agg=group_report)
+                                          group_agg=group_report,
+                                          plan_batch=batch_report)
         print(f"bench_kernels_json,0,{out_path}")
 
     # --------------------------------------------------------- roofline

@@ -21,6 +21,7 @@ import random
 
 from repro.cluster import make_policy
 from repro.mvcc import MultiNodeHTAP
+from repro.tensorstore import ScanPlan
 
 
 def oltp_burst(eng, rng, n_txns):
@@ -97,7 +98,8 @@ def main():
     rows = []
     for i in range(len(cl)):
         rid, snap = cl.replicas[i].rss_snapshot()
-        rows.append(cl.replicas[i].scan_rss(snap, keys))
+        rows.append(cl.replicas[i].execute_rss(snap,
+                                               ScanPlan(tuple(keys))))
         cl.replicas[i].release(rid)
     assert rows[0] == rows[1] == rows[2]
     print(f"  scan {keys} -> {rows[0]}  (identical on all 3 replicas; "

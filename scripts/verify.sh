@@ -66,6 +66,73 @@ print("kernel parity OK (version_gather, rss_gather+floor, rss_scan_agg "
 EOF
 
 echo
+echo "== chunked two-stage parity + whole-batch launch accounting =="
+python - <<'EOF'
+import numpy as np, jax.numpy as jnp, random
+from repro.kernels.rss_scan_agg import ops as kops
+from repro.kernels.rss_scan_agg.kernel import (rss_scan_agg_chunked,
+                                               rss_scan_agg_grouped,
+                                               tree_fold_partials)
+from repro.kernels.rss_scan_agg.ops import fold_group_partials
+from repro.kernels.rss_scan_agg.ref import rss_scan_agg_chunked_ref
+
+# chunked kernel == segment-sum oracle per chunk; device tree fold ==
+# flat-lane host fold (non-divisible G, TAG_PAD, gid -1, empty groups)
+rng = np.random.default_rng(1)
+for P, K, E in [(24, 3, 16), (72, 4, 8)]:
+    data = np.zeros((P, K, E), np.int32)
+    data[:, :, 0] = rng.integers(-1, 4, (P, K))
+    data[:, :, 1] = rng.integers(-99, 99, (P, K))
+    ts = jnp.asarray(rng.integers(0, 50, (P, K)), np.int32)
+    data = jnp.asarray(data)
+    for G in (3, 13):
+        gid = jnp.asarray(rng.integers(-1, G, (P, 1)), jnp.int32)
+        mem = jnp.asarray(np.sort(rng.choice(np.arange(1, 50), size=7,
+                                             replace=False)), jnp.int32)
+        args = (data, ts, gid, mem, 21, 1, 0, 50)
+        chunks = rss_scan_agg_chunked(*args, n_groups=G, rows_per_step=2,
+                                      fold_chunks=2)
+        np.testing.assert_array_equal(
+            np.asarray(chunks),
+            np.asarray(rss_scan_agg_chunked_ref(
+                *args, n_groups=G, rows_per_step=2, fold_chunks=2)))
+        flat = rss_scan_agg_grouped(*args, n_groups=G)
+        assert fold_group_partials(chunks) == fold_group_partials(flat)
+        np.testing.assert_array_equal(np.asarray(tree_fold_partials(chunks)),
+                                      np.asarray(fold_group_partials(chunks)))
+print("chunked parity OK (kernel == ref == flat fold; device tree fold)")
+
+# whole-batch plan fusion: N>=4 same-horizon plans -> ONE fused aggregate
+# dispatch (and one pallas launch in flat mode, two in chunked)
+from repro.mvcc import Engine
+from repro.tensorstore import (AggOp, AggPlan, BatchPlan, ChainVersionStore,
+                               PagedMirror, PagedVersionStore)
+eng = Engine("ssi")
+t = eng.begin()
+for i in range(32):
+    eng.write(t, f"k:{i}", random.Random(i).randrange(-50, 90))
+eng.commit(t)
+plans = tuple(AggPlan(tuple(f"k:{i + 8 * j}" for i in range(8)),
+                      AggOp("sum", "int")) for j in range(4))
+oracle = [ChainVersionStore(eng.store).execute(p, eng.seq) for p in plans]
+for mode, calls in (("flat", 1), ("chunked", 2)):
+    mirror = PagedMirror()
+    mirror.catch_up(eng.wal)
+    mirror.grouped_mode = mode
+    before = dict(mirror.exec_stats)
+    kops.reset_launch_stats()
+    got = list(PagedVersionStore(mirror).execute(BatchPlan(plans), eng.seq))
+    assert got == oracle, (mode, got, oracle)
+    assert mirror.exec_stats["agg_dispatches"] - before["agg_dispatches"] \
+        == 1, mode
+    assert kops.LAUNCH_STATS["dispatches"] == 1, mode
+    assert kops.LAUNCH_STATS["pallas_calls"] == calls, \
+        (mode, kops.LAUNCH_STATS)
+print("plan fusion OK (4-plan batch == oracle; 1 dispatch; "
+      "1 launch flat / 2 chunked)")
+EOF
+
+echo
 echo "== examples (smoke mode: demos must not rot) =="
 for ex in quickstart anomaly_demo paged_snapshot_reads cluster_fanout; do
     python "examples/$ex.py" > /dev/null

@@ -31,7 +31,7 @@ from __future__ import annotations
 from collections import deque
 from typing import Any, Iterable, Optional, Sequence, Union
 
-from ..tensorstore.version_store import AggPlan, Plan, ScanPlan
+from ..tensorstore.version_store import Plan
 from .routing import Freshest, RoutingPolicy, make_policy
 
 # handle: (kind, replica_idx, reader_id, snapshot)
@@ -215,15 +215,6 @@ class ReplicaCluster:
         rep = self.replicas[idx]
         return rep.execute_si(s, plan) if kind == "si" \
             else rep.execute_rss(s, plan)
-
-    # deprecated per-op aliases (one PR): route through the plan seam
-    def scan(self, handle: SnapshotHandle, keys: Sequence[str]) -> list[Any]:
-        """Deprecated alias: `execute(handle, ScanPlan(keys))`."""
-        return self.execute(handle, ScanPlan(tuple(keys)))
-
-    def agg(self, handle: SnapshotHandle, keys: Sequence[str], op) -> int:
-        """Deprecated alias: `execute(handle, AggPlan(keys, op))`."""
-        return self.execute(handle, AggPlan(tuple(keys), op))
 
     def release(self, handle: SnapshotHandle) -> None:
         _, idx, rid, _ = handle

@@ -33,23 +33,39 @@ reduces its BP-page block to one partial row; `ops.snapshot_agg_members`
 folds the rows ON HOST in arbitrary-precision Python ints.  Deliberate
 overflow discipline: device arithmetic stays int32 (TPU-native), so a
 whole-scan sum can exceed int32 without wrapping — only a single BP-page
-block's partial must fit (|field| avg < 2**31/BP per block, far beyond the
-codec's realistic value domain), keeping the fused result bitwise equal to
-the per-key Python oracle.
+block's partial must fit (|field| max < 2**31/BP per block; `ops` enforces
+the bound host-side and shrinks BP when violated), keeping the fused
+result bitwise equal to the per-key Python oracle.
 
 Arithmetic intensity stays ~1 FLOP per K bytes read, but the fused path
 writes P/BP partial rows instead of P·E gathered elements and skips the
 host decode loop entirely — the win
 `benchmarks.bench_kernels.scan_agg_report` measures.
 
-`rss_scan_agg_grouped` is the GROUP BY variant: every page additionally
-carries a group id (`gid [P, 1]`, -1 = no group, e.g. sublane padding),
-and each grid step reduces its BP-page block into PER-GROUP accumulator
-lanes — a [Gp, 128] tile whose row g holds group g's [sum, count,
-count_below, min, max] partial.  One fused visibility pass emits a small
-[groups, 5] tile instead of one scalar; the host fold
-(`ops.fold_group_partials`) is per-group, same overflow discipline as the
-scalar fold.
+Three grouped strategies (shape-dispatched by `ops.select_grouped_mode`):
+
+`rss_scan_agg_grouped` — FLAT-LANE: every page carries a group id (`gid
+[P, 1]`, -1 = no group), each grid step reduces its BP-page block into
+PER-GROUP accumulator lanes — a [Gp, 128] tile whose row g holds group
+g's [sum, count, count_below, min, max] partial.  All G lanes stay live
+every grid step, so VMEM pressure grows with G; fine for small group
+counts, decays past G ~ 8-16.  Per-group kernel params (`group_params
+[G, 3] = tag_main, tag_alt, threshold` rows) let ONE launch serve lanes
+drawn from different plans/configs — the whole-batch fusion substrate.
+
+`rss_select` + `rss_scan_agg_chunked` — CHUNKED TWO-STAGE: stage one
+resolves visibility ONCE and packs (tag, field, gid) for 64 pages per
+row into a [rows, 256] intermediate (lanes 0-63 tag, 64-127 field,
+128-191 gid, 192-255 zero); stage two re-reduces that packed stream over
+a TILED group axis — grid (G/G_tile, chunks, steps) where each step
+accumulates `rows_per_step` rows into its chunk's [G_tile, 128] partial
+tile via `@pl.when` revisits.  VMEM per step is bounded by G_tile, not
+G, so G=64..256 no longer falls off the cliff, and the expensive member
+compare runs once instead of once per group tile.  The [chunks, G, 5]
+partials fold to [G, 5] with `tree_fold_partials` ON DEVICE (pairwise,
+int32) — exactness now needs the whole-scan bound |field| max <
+2**31/P, which `ops` checks host-side, falling back to flat-lane (exact
+host fold) when violated.
 """
 
 from __future__ import annotations
@@ -63,17 +79,17 @@ from jax.experimental import pallas as pl
 _I32_MAX = jnp.iinfo(jnp.int32).max
 _I32_MIN = jnp.iinfo(jnp.int32).min
 
+# pages packed per select row: 64 tag + 64 field + 64 gid + 64 zero lanes
+SELECT_BLOCK = 64
 
-def _resolve_block(mem_ref, scal_ref, ts_ref, data_ref):
-    """Shared block body: RSS visibility resolve + tag test over one
-    BP-page block.  Returns (x, valid, thresh): the aggregable field, the
-    participates-in-the-aggregate mask, and the count-below bound."""
+
+def _resolve_tag_x(mem_ref, scal_ref, ts_ref, data_ref):
+    """Shared block body: RSS visibility resolve over one BP-page block.
+    Returns (tag, x): the codec tag and aggregable field of each page's
+    member-visible slot."""
     ts = ts_ref[...]                           # [BP, K] int32
     mem = mem_ref[...]                         # [1, Mp] int32 (-1 padded)
     floor = scal_ref[0, 0]
-    tag_main = scal_ref[0, 1]
-    tag_alt = scal_ref[0, 2]
-    thresh = scal_ref[0, 3]
     # --- visibility resolve (rss_gather protocol) -----------------------
     is_member = (ts <= floor) | jnp.any(
         ts[:, :, None] == mem[0][None, None, :], axis=-1)
@@ -86,8 +102,16 @@ def _resolve_block(mem_ref, scal_ref, ts_ref, data_ref):
     onehot = idx == first                                  # [BP, K]
     data = data_ref[...]                                   # [BP, K, E]
     sel = jnp.sum(onehot.astype(data.dtype)[:, :, None] * data, axis=1)
-    tag = sel[:, 0]                                        # [BP]
-    x = sel[:, 1]
+    return sel[:, 0], sel[:, 1]                            # tag, x: [BP]
+
+
+def _resolve_block(mem_ref, scal_ref, ts_ref, data_ref):
+    """Resolve + scalar tag test: (x, valid, thresh) for the scalar
+    kernel, tags/threshold from the scal tile."""
+    tag, x = _resolve_tag_x(mem_ref, scal_ref, ts_ref, data_ref)
+    tag_main = scal_ref[0, 1]
+    tag_alt = scal_ref[0, 2]
+    thresh = scal_ref[0, 3]
     valid = (tag == tag_main) | (tag == tag_alt)
     return x, valid, thresh
 
@@ -109,6 +133,49 @@ def _kernel(mem_ref, scal_ref, ts_ref, data_ref, out_ref):
     out_ref[...] = tile                        # this block's partial row
 
 
+def _scal_tile(floor, tag_main, tag_alt, threshold):
+    # scalar params as one lane-aligned [1, 128] tile (same idiom as the
+    # rss_gather floor tile): [0]=floor, [1]=tag_main, [2]=tag_alt,
+    # [3]=threshold
+    scal = jnp.zeros((1, 128), jnp.int32)
+    scal = scal.at[0, 0].set(jnp.asarray(floor, jnp.int32))
+    scal = scal.at[0, 1].set(jnp.asarray(tag_main, jnp.int32))
+    scal = scal.at[0, 2].set(jnp.asarray(tag_alt, jnp.int32))
+    scal = scal.at[0, 3].set(jnp.asarray(threshold, jnp.int32))
+    return scal
+
+
+def _mem_tile(member_ts):
+    M = member_ts.shape[0]
+    mp = max(128, -(-M // 128) * 128)          # lane-aligned, >= 1 tile
+    mem = jnp.full((1, mp), -1, jnp.int32)
+    if M:
+        mem = mem.at[0, :M].set(member_ts.astype(jnp.int32))
+    return mem, mp
+
+
+def _group_param_tile(n_groups, gp, tag_main, tag_alt, threshold,
+                      group_params):
+    """[Gp, 128] per-group kernel params: lane 0 tag_main, 1 tag_alt,
+    2 threshold.  group_params=None broadcasts the scalar args to every
+    group (classic single-config launch); a [n_groups, 3] array gives
+    each accumulator lane its own config — the batch-fusion substrate.
+    Padded group rows keep zeros: no page's gid ever maps to them."""
+    if group_params is None:
+        prm = jnp.stack([
+            jnp.full((n_groups,), jnp.asarray(tag_main, jnp.int32)),
+            jnp.full((n_groups,), jnp.asarray(tag_alt, jnp.int32)),
+            jnp.full((n_groups,), jnp.asarray(threshold, jnp.int32)),
+        ], axis=1)
+    else:
+        prm = jnp.asarray(group_params, jnp.int32)
+    gtile = jnp.zeros((gp, 128), jnp.int32)
+    gtile = gtile.at[:n_groups, 0].set(prm[:, 0])
+    gtile = gtile.at[:n_groups, 1].set(prm[:, 1])
+    gtile = gtile.at[:n_groups, 2].set(prm[:, 2])
+    return gtile
+
+
 @functools.partial(jax.jit, static_argnames=("block_pages", "interpret"))
 def rss_scan_agg(data: jax.Array, ts: jax.Array, member_ts: jax.Array,
                  floor: jax.Array | int = 0,
@@ -126,19 +193,8 @@ def rss_scan_agg(data: jax.Array, ts: jax.Array, member_ts: jax.Array,
     assert ts.shape == (P, K)
     bp = min(block_pages, P)
     assert P % bp == 0, (P, bp)
-    M = member_ts.shape[0]
-    mp = max(128, -(-M // 128) * 128)          # lane-aligned, >= 1 tile
-    mem = jnp.full((1, mp), -1, jnp.int32)
-    if M:
-        mem = mem.at[0, :M].set(member_ts.astype(jnp.int32))
-    # scalar params as one lane-aligned [1, 128] tile (same idiom as the
-    # rss_gather floor tile): [0]=floor, [1]=tag_main, [2]=tag_alt,
-    # [3]=threshold
-    scal = jnp.zeros((1, 128), jnp.int32)
-    scal = scal.at[0, 0].set(jnp.asarray(floor, jnp.int32))
-    scal = scal.at[0, 1].set(jnp.asarray(tag_main, jnp.int32))
-    scal = scal.at[0, 2].set(jnp.asarray(tag_alt, jnp.int32))
-    scal = scal.at[0, 3].set(jnp.asarray(threshold, jnp.int32))
+    mem, mp = _mem_tile(member_ts)
+    scal = _scal_tile(floor, tag_main, tag_alt, threshold)
     out = pl.pallas_call(
         _kernel,
         grid=(P // bp,),
@@ -155,13 +211,20 @@ def rss_scan_agg(data: jax.Array, ts: jax.Array, member_ts: jax.Array,
     return out[:, :5]
 
 
-def _grouped_kernel(mem_ref, scal_ref, gid_ref, ts_ref, data_ref, out_ref):
-    x, valid, thresh = _resolve_block(mem_ref, scal_ref, ts_ref, data_ref)
+def _grouped_kernel(mem_ref, scal_ref, gprm_ref, gid_ref, ts_ref, data_ref,
+                    out_ref):
+    tag, x = _resolve_tag_x(mem_ref, scal_ref, ts_ref, data_ref)
     gid = gid_ref[...][:, 0]                               # [BP]
+    prm = gprm_ref[...]                                    # [Gp, 128]
     gp = out_ref.shape[0]                                  # padded groups
-    # page -> group one-hot; gid -1 (no group / padding) matches nothing
+    # page -> group one-hot; gid -1 (no group / padding) matches nothing,
+    # and the tag test is PER GROUP LANE (lanes may carry distinct plan
+    # configs in a fused batch launch)
     giota = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], gp), 1)
-    grp = (gid[:, None] == giota) & valid[:, None]         # [BP, Gp]
+    tagm = ((tag[:, None] == prm[:, 0][None, :]) |
+            (tag[:, None] == prm[:, 1][None, :]))
+    grp = (gid[:, None] == giota) & tagm                   # [BP, Gp]
+    thresh = prm[:, 2][None, :]                            # [1, Gp]
     xg = x[:, None]
     psum = jnp.sum(jnp.where(grp, xg, 0), axis=0)          # [Gp]
     pcount = jnp.sum(grp.astype(jnp.int32), axis=0)
@@ -186,35 +249,34 @@ def rss_scan_agg_grouped(data: jax.Array, ts: jax.Array, gid: jax.Array,
                          tag_alt: jax.Array | int = -2,
                          threshold: jax.Array | int = _I32_MAX,
                          *, n_groups: int = 1, block_pages: int = 8,
+                         group_params: jax.Array | None = None,
                          interpret: bool = True) -> jax.Array:
-    """Fused RSS membership scan + GROUPED aggregate: `gid` is a [P, 1]
-    int32 group id per page (0..n_groups-1; -1 = no group, matching no
-    accumulator lane — sublane padding).  Returns [P/BP, n_groups, 5]
-    int32 per-block per-group partials of [sum, count, count_below, min,
-    max] over member-visible payloads whose tag is tag_main/tag_alt (fold
-    the block axis per group on host — lanes 0-2 add, 3 min, 4 max)."""
+    """Fused RSS membership scan + GROUPED aggregate (flat-lane): `gid` is
+    a [P, 1] int32 group id per page (0..n_groups-1; -1 = no group,
+    matching no accumulator lane — sublane padding).  Returns [P/BP,
+    n_groups, 5] int32 per-block per-group partials of [sum, count,
+    count_below, min, max] over member-visible payloads whose tag matches
+    the group's config (fold the block axis per group on host — lanes 0-2
+    add, 3 min, 4 max).  group_params [n_groups, 3] int32 (tag_main,
+    tag_alt, threshold per lane) overrides the scalar tag/threshold args
+    per group, so one launch can serve lanes from different plans."""
     P, K, E = data.shape
     assert ts.shape == (P, K) and gid.shape == (P, 1)
     assert n_groups >= 1
     bp = min(block_pages, P)
     assert P % bp == 0, (P, bp)
     gp = -(-n_groups // 8) * 8                 # sublane-aligned group rows
-    M = member_ts.shape[0]
-    mp = max(128, -(-M // 128) * 128)
-    mem = jnp.full((1, mp), -1, jnp.int32)
-    if M:
-        mem = mem.at[0, :M].set(member_ts.astype(jnp.int32))
-    scal = jnp.zeros((1, 128), jnp.int32)
-    scal = scal.at[0, 0].set(jnp.asarray(floor, jnp.int32))
-    scal = scal.at[0, 1].set(jnp.asarray(tag_main, jnp.int32))
-    scal = scal.at[0, 2].set(jnp.asarray(tag_alt, jnp.int32))
-    scal = scal.at[0, 3].set(jnp.asarray(threshold, jnp.int32))
+    mem, mp = _mem_tile(member_ts)
+    scal = _scal_tile(floor, tag_main, tag_alt, threshold)
+    gtile = _group_param_tile(n_groups, gp, tag_main, tag_alt, threshold,
+                              group_params)
     out = pl.pallas_call(
         _grouped_kernel,
         grid=(P // bp,),
         in_specs=[
             pl.BlockSpec((1, mp), lambda i: (0, 0)),        # members
             pl.BlockSpec((1, 128), lambda i: (0, 0)),       # scalar params
+            pl.BlockSpec((gp, 128), lambda i: (0, 0)),      # group params
             pl.BlockSpec((bp, 1), lambda i: (i, 0)),        # group ids
             pl.BlockSpec((bp, K), lambda i: (i, 0)),        # ts
             pl.BlockSpec((bp, K, E), lambda i: (i, 0, 0)),  # data
@@ -224,5 +286,179 @@ def rss_scan_agg_grouped(data: jax.Array, ts: jax.Array, gid: jax.Array,
         out_specs=pl.BlockSpec((gp, 128), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((P // bp * gp, 128), jnp.int32),
         interpret=interpret,
-    )(mem, scal, gid.astype(jnp.int32), ts, data)
+    )(mem, scal, gtile, gid.astype(jnp.int32), ts, data)
     return out.reshape(P // bp, gp, 128)[:, :n_groups, :5]
+
+
+# ---------------------------------------------------------------------------
+# chunked two-stage grouped reduction
+# ---------------------------------------------------------------------------
+
+def _select_kernel(mem_ref, scal_ref, gid_ref, ts_ref, data_ref, out_ref):
+    """Stage one: resolve visibility for SELECT_BLOCK pages and pack
+    (tag, field, gid) into one [1, 4*SELECT_BLOCK] row — the expensive
+    member compare runs exactly once per page, independent of G."""
+    tag, x = _resolve_tag_x(mem_ref, scal_ref, ts_ref, data_ref)
+    gid = gid_ref[...][:, 0]                               # [SB]
+    row = jnp.concatenate([tag, x, gid, jnp.zeros_like(tag)])
+    out_ref[...] = row[None, :]
+
+
+def _chunk_reduce_kernel(gprm_ref, sel_ref, out_ref):
+    """Stage two: re-reduce the packed select stream over a TILED group
+    axis.  Grid (G/GT, chunks, steps); each step folds `rows_per_step`
+    select rows into its (chunk, group-tile) partial via @pl.when
+    revisits, so live VMEM is one [GT, 128] tile — bounded by the group
+    tile, not by G."""
+    i = pl.program_id(2)                                   # step in chunk
+    j = pl.program_id(0)                                   # group tile
+    sb = SELECT_BLOCK
+    blk = sel_ref[...]                                     # [R, 4*SB]
+    tag = blk[:, 0:sb].reshape(-1)                         # [R*SB]
+    x = blk[:, sb:2 * sb].reshape(-1)
+    gid = blk[:, 2 * sb:3 * sb].reshape(-1)
+    prm = gprm_ref[...]                                    # [GT, 128]
+    gt = prm.shape[0]
+    # global group ids covered by this tile
+    gl = j * gt + jax.lax.broadcasted_iota(jnp.int32, (1, gt), 1)[0]
+    tagm = ((tag[:, None] == prm[:, 0][None, :]) |
+            (tag[:, None] == prm[:, 1][None, :]))
+    grp = (gid[:, None] == gl[None, :]) & tagm             # [R*SB, GT]
+    thresh = prm[:, 2][None, :]
+    xg = x[:, None]
+    psum = jnp.sum(jnp.where(grp, xg, 0), axis=0)          # [GT]
+    pcount = jnp.sum(grp.astype(jnp.int32), axis=0)
+    pbelow = jnp.sum((grp & (xg < thresh)).astype(jnp.int32), axis=0)
+    pmin = jnp.min(jnp.where(grp, xg, _I32_MAX), axis=0)
+    pmax = jnp.max(jnp.where(grp, xg, _I32_MIN), axis=0)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, gt, 128), 2)
+    tile = jnp.where(lane == 0, psum[None, :, None], 0)
+    tile = jnp.where(lane == 1, pcount[None, :, None], tile)
+    tile = jnp.where(lane == 2, pbelow[None, :, None], tile)
+    tile = jnp.where(lane == 3, pmin[None, :, None], tile)
+    tile = jnp.where(lane == 4, pmax[None, :, None], tile)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = tile
+
+    @pl.when(i > 0)
+    def _accumulate():
+        prev = out_ref[...]
+        out_ref[...] = jnp.where(
+            lane < 3, prev + tile,
+            jnp.where(lane == 3, jnp.minimum(prev, tile),
+                      jnp.maximum(prev, tile)))
+
+
+def _chunk_shape(P: int, rows_per_step: int, fold_chunks: int):
+    """Static chunking math shared by kernel and ref: pad P to
+    rows * SELECT_BLOCK pages where rows divides evenly into
+    `fold_chunks`-or-fewer chunks of `rows_per_step`-row steps."""
+    sb = SELECT_BLOCK
+    rows0 = max(1, -(-P // sb))
+    r = max(1, min(rows_per_step, rows0))
+    nc = max(1, min(fold_chunks, rows0 // r))
+    unit = r * nc
+    rows = -(-rows0 // unit) * unit
+    return rows, r, nc, rows * sb
+
+
+def _pad_pages(data, ts, gid, P, Pp):
+    """Pad to the chunk-aligned page count: tag -1 / ts 0 / gid -1 pages
+    that match no group lane."""
+    if Pp == P:
+        return data, ts, gid.astype(jnp.int32)
+    pad = Pp - P
+    K, E = data.shape[1], data.shape[2]
+    pad_data = jnp.zeros((pad, K, E), jnp.int32).at[:, :, 0].set(-1)
+    data = jnp.concatenate([data, pad_data])
+    ts = jnp.concatenate([ts, jnp.zeros((pad, K), jnp.int32)])
+    gid = jnp.concatenate(
+        [gid.astype(jnp.int32), jnp.full((pad, 1), -1, jnp.int32)])
+    return data, ts, gid
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_groups", "group_tile", "rows_per_step", "fold_chunks", "interpret"))
+def rss_scan_agg_chunked(data: jax.Array, ts: jax.Array, gid: jax.Array,
+                         member_ts: jax.Array,
+                         floor: jax.Array | int = 0,
+                         tag_main: jax.Array | int = 1,
+                         tag_alt: jax.Array | int = -2,
+                         threshold: jax.Array | int = _I32_MAX,
+                         *, n_groups: int = 1,
+                         group_params: jax.Array | None = None,
+                         group_tile: int = 8,
+                         rows_per_step: int = 8,
+                         fold_chunks: int = 8,
+                         interpret: bool = True) -> jax.Array:
+    """Chunked two-stage grouped scan+agg: one select pass packs
+    (tag, field, gid) per page, then a tiled-group reduce re-reads the
+    packed stream — VMEM bounded by `group_tile`, visibility resolved
+    once.  Returns [chunks, n_groups, 5] int32 per-chunk per-group
+    partials (fold with `tree_fold_partials` on device, or
+    `ops.fold_group_partials` on host).  Same lane semantics and
+    group_params contract as `rss_scan_agg_grouped`; exact only when the
+    whole-scan sum fits int32 (|field| max < 2**31/P — callers go through
+    `ops`, which enforces the bound and falls back to flat-lane)."""
+    P, K, E = data.shape
+    assert ts.shape == (P, K) and gid.shape == (P, 1)
+    assert n_groups >= 1
+    assert group_tile >= 8 and group_tile % 8 == 0, group_tile
+    sb = SELECT_BLOCK
+    rows, r, nc, Pp = _chunk_shape(P, rows_per_step, fold_chunks)
+    data, ts, gid = _pad_pages(data, ts, gid, P, Pp)
+    gp = -(-n_groups // group_tile) * group_tile
+    mem, mp = _mem_tile(member_ts)
+    scal = _scal_tile(floor, tag_main, tag_alt, threshold)
+    gtile = _group_param_tile(n_groups, gp, tag_main, tag_alt, threshold,
+                              group_params)
+    sel = pl.pallas_call(
+        _select_kernel,
+        grid=(rows,),
+        in_specs=[
+            pl.BlockSpec((1, mp), lambda i: (0, 0)),        # members
+            pl.BlockSpec((1, 128), lambda i: (0, 0)),       # scalar params
+            pl.BlockSpec((sb, 1), lambda i: (i, 0)),        # group ids
+            pl.BlockSpec((sb, K), lambda i: (i, 0)),        # ts
+            pl.BlockSpec((sb, K, E), lambda i: (i, 0, 0)),  # data
+        ],
+        out_specs=pl.BlockSpec((1, 4 * sb), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, 4 * sb), jnp.int32),
+        interpret=interpret,
+    )(mem, scal, gid, ts, data)
+    ngt = gp // group_tile
+    bpc = rows // (r * nc)                     # steps per chunk
+    out = pl.pallas_call(
+        _chunk_reduce_kernel,
+        grid=(ngt, nc, bpc),
+        in_specs=[
+            pl.BlockSpec((group_tile, 128), lambda j, c, i: (j, 0)),
+            pl.BlockSpec((r, 4 * sb), lambda j, c, i: (c * bpc + i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, group_tile, 128),
+                               lambda j, c, i: (c, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((nc, gp, 128), jnp.int32),
+        interpret=interpret,
+    )(gtile, sel)
+    return out[:, :n_groups, :5]
+
+
+@jax.jit
+def tree_fold_partials(partials: jax.Array) -> jax.Array:
+    """Device-side pairwise fold of [chunks, G, 5] chunked partials into
+    the final [G, 5] rows (lanes 0-2 add, 3 min, 4 max).  int32
+    throughout — exact only under the whole-scan bound the chunked path
+    already requires."""
+    ident = jnp.asarray([0, 0, 0, _I32_MAX, _I32_MIN], jnp.int32)
+    lane = jnp.arange(5, dtype=jnp.int32)[None, None, :]
+    while partials.shape[0] > 1:
+        if partials.shape[0] % 2:
+            pad = jnp.broadcast_to(ident, (1,) + partials.shape[1:])
+            partials = jnp.concatenate([partials, pad])
+        a, b = partials[0::2], partials[1::2]
+        partials = jnp.where(
+            lane < 3, a + b,
+            jnp.where(lane == 3, jnp.minimum(a, b), jnp.maximum(a, b)))
+    return partials[0]

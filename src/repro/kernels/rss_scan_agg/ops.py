@@ -1,32 +1,150 @@
-"""Public ops: snapshot_agg_members / snapshot_group_agg_members — fused
-scan+aggregate (scalar and GROUP BY variants), kernel or jnp."""
+"""Public ops: fused scan+aggregate (scalar, grouped flat-lane, grouped
+chunked two-stage), kernel or jnp — plus the shape dispatcher that picks
+the grouped strategy and the host-side int32 overflow guard.
+
+Dispatch (`select_grouped_mode`, flash-linear-attention's chunk /
+fused_recurrent idiom): small scans go "host" (launch overhead dominates
+— the mirror decodes and aggregates in Python), few groups go "flat"
+(all-G accumulator lanes per grid step), many groups go "chunked"
+(two-stage tiled-group reduction).  Thresholds come from
+`benchmarks.bench_kernels.group_agg_report` and are overridable — per
+call, or globally via the REPRO_GROUPED_MODE env var.
+
+Overflow guard: device partials are int32.  The flat path only needs one
+BP-page block's partial to fit (|field| max * BP < 2**31) — when the
+store's field magnitude violates that, the block size is SHRUNK until it
+fits (BP=1 always does: a single int32 value cannot overflow), keeping
+the host Python-int fold exact.  The chunked path folds ON DEVICE, so it
+needs the whole-scan bound (|field| max * P < 2**31) and falls back to
+flat-lane when violated.  `LAUNCH_STATS` counts dispatches, pallas
+calls, chosen modes, shrinks and fallbacks — the driver and verify.sh
+read it to assert one-launch-per-fused-batch."""
 
 from __future__ import annotations
 
+import os
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..config import resolve_interpret
-from .kernel import rss_scan_agg, rss_scan_agg_grouped
-from .ref import rss_scan_agg_grouped_ref, rss_scan_agg_ref
+from .kernel import (rss_scan_agg, rss_scan_agg_chunked,
+                     rss_scan_agg_grouped, tree_fold_partials)
+from .ref import (rss_scan_agg_chunked_ref, rss_scan_agg_grouped_ref,
+                  rss_scan_agg_ref)
+
+# jitted ref entry points: the use_kernel=False paths serve fused
+# dispatches too (benches, oracle runs), where eager per-op dispatch of
+# the segment/scatter refs would swamp the fusion win
+_scan_agg_ref = jax.jit(rss_scan_agg_ref, static_argnames=("block_pages",))
+_grouped_ref = jax.jit(rss_scan_agg_grouped_ref,
+                       static_argnames=("n_groups", "block_pages"))
+_chunked_ref = jax.jit(rss_scan_agg_chunked_ref,
+                       static_argnames=("n_groups", "rows_per_step",
+                                        "fold_chunks"))
 
 _I32_MAX = jnp.iinfo(jnp.int32).max
 _I32_MIN = jnp.iinfo(jnp.int32).min
 
+BLOCK_PAGES = 8                   # default flat/scalar grid block
+
+# --- shape dispatch ---------------------------------------------------------
+
+GROUPED_MODE_ENV = "REPRO_GROUPED_MODE"
+GROUPED_MODES = ("host", "flat", "chunked")
+# sweep-derived thresholds (benchmarks.bench_kernels.group_agg_report):
+# below HOST_MODE_MAX_PAGES the launch overhead beats any fusion win for a
+# single plan; flat-lane wins while all-G lanes still fit useful VMEM —
+# the measured flat/chunked crossover sits between G=32 and G=64 at
+# P=1024..4096.
+HOST_MODE_MAX_PAGES = 64
+FLAT_MODE_MAX_GROUPS = 32
+
+# process-wide launch accounting (reset per measurement window)
+LAUNCH_STATS = {"dispatches": 0, "pallas_calls": 0, "host": 0, "flat": 0,
+                "chunked": 0, "block_shrinks": 0, "overflow_fallbacks": 0}
+
+
+def reset_launch_stats() -> dict:
+    """Zero LAUNCH_STATS and return the pre-reset snapshot."""
+    snap = dict(LAUNCH_STATS)
+    for k in LAUNCH_STATS:
+        LAUNCH_STATS[k] = 0
+    return snap
+
+
+def select_grouped_mode(n_pages: int, n_groups: int, n_plans: int = 1, *,
+                        override: Optional[str] = None) -> str:
+    """Pick the grouped execution strategy for a (P, G, n_plans) shape:
+    "host" (decode + Python aggregate), "flat" (all-G accumulator lanes),
+    or "chunked" (two-stage tiled-group reduction).  `override` (or the
+    REPRO_GROUPED_MODE env var) forces a mode; "auto" defers to the
+    shape heuristic.  Fused batches (n_plans > 1) never pick "host" —
+    one device launch is the point of batching."""
+    mode = override or os.environ.get(GROUPED_MODE_ENV) or "auto"
+    if mode != "auto":
+        assert mode in GROUPED_MODES, mode
+        return mode
+    if n_pages < HOST_MODE_MAX_PAGES and n_plans == 1:
+        return "host"
+    if n_groups <= FLAT_MODE_MAX_GROUPS:
+        return "flat"
+    return "chunked"
+
+
+# --- overflow guard ---------------------------------------------------------
+
+def field_maxabs(store: dict) -> int:
+    """Largest |aggregable field| (payload element 1) across every slot of
+    the store — the host-side input to the int32 partial bounds."""
+    col = np.asarray(store["data"])[:, :, 1]
+    return int(np.abs(col.astype(np.int64)).max()) if col.size else 0
+
+
+def safe_block_pages(maxabs: int, n_pages: int,
+                     preferred: int = BLOCK_PAGES) -> int:
+    """Largest block size <= preferred whose per-block partial provably
+    fits int32 (maxabs * BP < 2**31).  Halving keeps P % BP == 0 (stores
+    are sublane-padded to multiples of 8); BP=1 always fits — a single
+    int32 value cannot overflow its own sum."""
+    bp = max(1, min(preferred, n_pages))
+    while bp > 1 and maxabs > (2**31 - 1) // bp:
+        bp //= 2
+    return bp
+
+
+def check_block_bound(maxabs: int, block_pages: int) -> None:
+    """Raise OverflowError when a BP-page block partial could wrap int32
+    — the guard for callers that pin an explicit block size."""
+    if block_pages > 1 and maxabs > (2**31 - 1) // block_pages:
+        raise OverflowError(
+            f"int32 partial overflow: |field| max {maxabs} * "
+            f"block_pages {block_pages} exceeds 2**31-1; shrink the "
+            f"block (safe_block_pages) or aggregate on host")
+
+
+def scan_bound_ok(maxabs: int, n_pages: int) -> bool:
+    """True when a whole-scan int32 sum provably cannot wrap — the bound
+    the chunked path's DEVICE fold needs (host folds are exact Python
+    ints and only need the per-block bound)."""
+    return n_pages == 0 or maxabs <= (2**31 - 1) // max(1, n_pages)
+
+
+# --- scalar path ------------------------------------------------------------
 
 def fold_partials(partials) -> list[int]:
     """Fold [n_blocks, 5] per-block device partials into the final [sum,
-    count, count_below, min, max] — in arbitrary-precision Python ints, so
-    whole-scan sums are exact even past int32 (only a single block's
-    partial must fit int32 on device)."""
-    rows = np.asarray(partials)
-    return [int(sum(int(v) for v in rows[:, 0])),
-            int(sum(int(v) for v in rows[:, 1])),
-            int(sum(int(v) for v in rows[:, 2])),
-            int(min((int(v) for v in rows[:, 3]), default=_I32_MAX)),
-            int(max((int(v) for v in rows[:, 4]), default=_I32_MIN))]
+    count, count_below, min, max] — exact past int32: partials are int32,
+    so an int64 host accumulation cannot wrap below 2**32 blocks (a store
+    that large doesn't fit an int32 page index anyway)."""
+    rows = np.asarray(partials, dtype=np.int64)
+    if not rows.shape[0]:
+        return [0, 0, 0, int(_I32_MAX), int(_I32_MIN)]
+    return [int(rows[:, 0].sum()), int(rows[:, 1].sum()),
+            int(rows[:, 2].sum()), int(rows[:, 3].min()),
+            int(rows[:, 4].max())]
 
 
 def snapshot_agg_members(store: dict, member_ts, floor=0, *,
@@ -44,52 +162,151 @@ def snapshot_agg_members(store: dict, member_ts, floor=0, *,
     Returns the folded [sum, count, count_below, min, max] as Python ints
     (per-block int32 partials on device, exact fold on host);
     `tensorstore.version_store.finalize_agg` picks the requested statistic
-    (min/max carry sentinels when count == 0).  interpret defaults to the
-    REPRO_INTERPRET switch (`repro.kernels.config`)."""
+    (min/max carry sentinels when count == 0).  The block size shrinks
+    automatically when the store's field magnitude could wrap a block
+    partial.  interpret defaults to the REPRO_INTERPRET switch
+    (`repro.kernels.config`)."""
     thresh = _I32_MAX if threshold is None else int(threshold)
+    P = int(store["ts"].shape[0])
+    bp = safe_block_pages(field_maxabs(store), P)
+    if bp != min(BLOCK_PAGES, P):
+        LAUNCH_STATS["block_shrinks"] += 1
     if not use_kernel:
-        partials = rss_scan_agg_ref(store["data"], store["ts"], member_ts,
-                                    floor, tag_main, tag_alt, thresh)
+        partials = _scan_agg_ref(store["data"], store["ts"], member_ts,
+                                 floor, tag_main, tag_alt, thresh,
+                                 block_pages=bp)
     else:
+        LAUNCH_STATS["pallas_calls"] += 1
         partials = rss_scan_agg(store["data"], store["ts"], member_ts,
                                 floor, tag_main, tag_alt, thresh,
+                                block_pages=bp,
                                 interpret=resolve_interpret(interpret))
     return fold_partials(partials)
 
 
+# --- grouped paths ----------------------------------------------------------
+
 def fold_group_partials(partials) -> list[list[int]]:
     """Fold [n_blocks, G, 5] per-block per-group device partials into G
-    final [sum, count, count_below, min, max] rows — exact Python-int
-    arithmetic, same overflow discipline as `fold_partials`."""
-    rows = np.asarray(partials)
-    return [fold_partials(rows[:, g]) for g in range(rows.shape[1])]
+    final [sum, count, count_below, min, max] rows — vectorized int64
+    accumulation, same overflow discipline as `fold_partials`."""
+    rows = np.asarray(partials, dtype=np.int64)
+    n_groups = rows.shape[1]
+    if not rows.shape[0]:
+        return [[0, 0, 0, int(_I32_MAX), int(_I32_MIN)]
+                for _ in range(n_groups)]
+    folded = np.concatenate([rows[:, :, :3].sum(axis=0),
+                             rows[:, :, 3].min(axis=0)[:, None],
+                             rows[:, :, 4].max(axis=0)[:, None]], axis=1)
+    return folded.tolist()
 
 
 def snapshot_group_agg_members(store: dict, gid, n_groups: int,
                                member_ts, floor=0, *,
-                               tag_main: int, tag_alt: int = -2,
+                               tag_main: int = 1, tag_alt: int = -2,
                                threshold: Optional[int] = None,
+                               group_params=None,
                                use_kernel: bool = True,
                                interpret: Optional[bool] = None) \
         -> list[list[int]]:
-    """GROUP BY variant of `snapshot_agg_members`: `gid` maps each page of
-    the store to an accumulator lane (0..n_groups-1; -1 = no group), and
-    ONE fused device pass resolves visibility AND reduces every group —
-    a small [n_groups, 5] tile back instead of one scalar per group.
+    """GROUP BY variant of `snapshot_agg_members` (flat-lane strategy):
+    `gid` maps each page of the store to an accumulator lane
+    (0..n_groups-1; -1 = no group), and ONE fused device pass resolves
+    visibility AND reduces every group — a small [n_groups, 5] tile back
+    instead of one scalar per group.  group_params [n_groups, 3] int32
+    rows of (tag_main, tag_alt, threshold) give each lane its own config
+    (fused multi-plan batches); None broadcasts the scalar args.
 
     Returns n_groups folded [sum, count, count_below, min, max] rows as
     Python ints; a group no visible page maps to is [0, 0, 0, INT32_MAX,
     INT32_MIN] (count disambiguates — `finalize_agg` folds the sentinels
-    to 0)."""
+    to 0).  Block size shrinks automatically under the overflow bound."""
     thresh = _I32_MAX if threshold is None else int(threshold)
     gid = jnp.asarray(np.asarray(gid, np.int32).reshape(-1, 1))
+    P = int(store["ts"].shape[0])
+    bp = safe_block_pages(field_maxabs(store), P)
+    if bp != min(BLOCK_PAGES, P):
+        LAUNCH_STATS["block_shrinks"] += 1
+    if group_params is not None:
+        group_params = jnp.asarray(np.asarray(group_params, np.int32))
     if not use_kernel:
-        partials = rss_scan_agg_grouped_ref(
+        partials = _grouped_ref(
             store["data"], store["ts"], gid, member_ts, floor,
-            tag_main, tag_alt, thresh, n_groups=n_groups)
+            tag_main, tag_alt, thresh, n_groups=n_groups,
+            group_params=group_params, block_pages=bp)
     else:
+        LAUNCH_STATS["pallas_calls"] += 1
         partials = rss_scan_agg_grouped(
             store["data"], store["ts"], gid, member_ts, floor,
             tag_main, tag_alt, thresh, n_groups=n_groups,
+            block_pages=bp, group_params=group_params,
             interpret=resolve_interpret(interpret))
     return fold_group_partials(partials)
+
+
+def snapshot_group_agg_chunked(store: dict, gid, n_groups: int,
+                               member_ts, floor=0, *,
+                               tag_main: int = 1, tag_alt: int = -2,
+                               threshold: Optional[int] = None,
+                               group_params=None,
+                               group_tile: int = 8,
+                               use_kernel: bool = True,
+                               interpret: Optional[bool] = None) \
+        -> list[list[int]]:
+    """Chunked two-stage GROUP BY: select pass + tiled-group reduce +
+    device tree fold (two pallas calls, [G, 5] back).  Same semantics as
+    `snapshot_group_agg_members`; requires the whole-scan int32 bound —
+    callers should go through `grouped_agg_auto`, which checks it and
+    falls back to flat-lane."""
+    thresh = _I32_MAX if threshold is None else int(threshold)
+    gid = jnp.asarray(np.asarray(gid, np.int32).reshape(-1, 1))
+    if group_params is not None:
+        group_params = jnp.asarray(np.asarray(group_params, np.int32))
+    if not use_kernel:
+        partials = _chunked_ref(
+            store["data"], store["ts"], gid, member_ts, floor,
+            tag_main, tag_alt, thresh, n_groups=n_groups,
+            group_params=group_params)
+    else:
+        LAUNCH_STATS["pallas_calls"] += 2      # select + reduce
+        partials = rss_scan_agg_chunked(
+            store["data"], store["ts"], gid, member_ts, floor,
+            tag_main, tag_alt, thresh, n_groups=n_groups,
+            group_params=group_params, group_tile=group_tile,
+            interpret=resolve_interpret(interpret))
+    return np.asarray(tree_fold_partials(partials)).tolist()
+
+
+def grouped_agg_auto(store: dict, gid, n_groups: int, member_ts, floor=0,
+                     *, group_params=None, n_plans: int = 1,
+                     mode: Optional[str] = None,
+                     use_kernel: bool = True,
+                     interpret: Optional[bool] = None):
+    """Shape-dispatched grouped aggregate: pick flat / chunked by
+    (P, G, n_plans) — or honor `mode` / REPRO_GROUPED_MODE — run it, and
+    return (rows, mode_used).  mode_used == "host" returns (None,
+    "host"): the caller (the mirror) owns the decode-and-aggregate
+    fallback, since it needs key-level values the kernel layer never
+    sees.  A chunked pick that violates the whole-scan int32 bound
+    silently demotes to flat (exact host fold) and counts an
+    overflow_fallback."""
+    P = int(store["ts"].shape[0])
+    m = select_grouped_mode(P, n_groups, n_plans, override=mode)
+    if m == "chunked" and not scan_bound_ok(field_maxabs(store), P):
+        LAUNCH_STATS["overflow_fallbacks"] += 1
+        m = "flat"
+    LAUNCH_STATS["dispatches"] += 1
+    LAUNCH_STATS[m] += 1
+    if m == "host":
+        return None, m
+    if m == "chunked":
+        rows = snapshot_group_agg_chunked(
+            store, gid, n_groups, member_ts, floor,
+            group_params=group_params, use_kernel=use_kernel,
+            interpret=interpret)
+    else:
+        rows = snapshot_group_agg_members(
+            store, gid, n_groups, member_ts, floor,
+            group_params=group_params, use_kernel=use_kernel,
+            interpret=interpret)
+    return rows, m

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the fused rss_scan_agg kernel."""
+"""Pure-jnp oracle for the fused rss_scan_agg kernels."""
 
 from __future__ import annotations
 
@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from ..rss_gather.ref import rss_visible_slots_ref
+from .kernel import SELECT_BLOCK, _chunk_shape
 
 _I32_MAX = jnp.iinfo(jnp.int32).max
 _I32_MIN = jnp.iinfo(jnp.int32).min
@@ -43,6 +44,18 @@ def rss_scan_agg_ref(data: jax.Array, ts: jax.Array, member_ts: jax.Array,
     ], axis=1).astype(jnp.int32)
 
 
+def _group_param_cols(n_groups, tag_main, tag_alt, threshold, group_params):
+    """Per-group (tag_main, tag_alt, threshold) columns [G] — scalar args
+    broadcast when group_params is None (same contract as the kernel's
+    group-param tile)."""
+    if group_params is None:
+        return (jnp.full((n_groups,), jnp.asarray(tag_main, jnp.int32)),
+                jnp.full((n_groups,), jnp.asarray(tag_alt, jnp.int32)),
+                jnp.full((n_groups,), jnp.asarray(threshold, jnp.int32)))
+    prm = jnp.asarray(group_params, jnp.int32)
+    return prm[:, 0], prm[:, 1], prm[:, 2]
+
+
 def rss_scan_agg_grouped_ref(data: jax.Array, ts: jax.Array, gid: jax.Array,
                              member_ts: jax.Array,
                              floor: jax.Array | int = 0,
@@ -50,13 +63,16 @@ def rss_scan_agg_grouped_ref(data: jax.Array, ts: jax.Array, gid: jax.Array,
                              tag_alt: jax.Array | int = -2,
                              threshold: jax.Array | int = _I32_MAX,
                              *, n_groups: int = 1,
+                             group_params: jax.Array | None = None,
                              block_pages: int = 8) -> jax.Array:
-    """GROUP BY twin of `rss_scan_agg_ref`: `gid` [P, 1] int32 group id
-    per page (-1 = no group), `n_groups` accumulator rows -> [P/BP,
-    n_groups, 5] per-block per-group partials with the kernel's exact
-    blocking (bitwise comparable; fold the block axis per group on host —
-    `ops.fold_group_partials`).  A group no page maps to folds to count 0
-    with min/max sentinels (empty-group semantics)."""
+    """GROUP BY twin of `rss_scan_agg_ref` (flat-lane blocking): `gid`
+    [P, 1] int32 group id per page (-1 = no group), `n_groups`
+    accumulator rows -> [P/BP, n_groups, 5] per-block per-group partials
+    with the kernel's exact blocking (bitwise comparable; fold the block
+    axis per group on host — `ops.fold_group_partials`).  group_params
+    [n_groups, 3] gives each lane its own (tag_main, tag_alt, threshold).
+    A group no page maps to folds to count 0 with min/max sentinels
+    (empty-group semantics)."""
     P = data.shape[0]
     bp = min(block_pages, P)
     assert P % bp == 0, (P, bp)
@@ -65,15 +81,71 @@ def rss_scan_agg_grouped_ref(data: jax.Array, ts: jax.Array, gid: jax.Array,
     sel = jnp.take_along_axis(data, slot[:, None, None], axis=1)[:, 0]
     tag = sel[:, 0]
     x = sel[:, 1]                                          # [P]
-    valid = (tag == tag_main) | (tag == tag_alt)
+    tmain, talt, thr = _group_param_cols(n_groups, tag_main, tag_alt,
+                                         threshold, group_params)
+    tagm = ((tag[:, None] == tmain[None, :]) |
+            (tag[:, None] == talt[None, :]))               # [P, G]
     grp = (gid[:, 0][:, None] ==
-           jnp.arange(n_groups, dtype=jnp.int32)[None, :]) & valid[:, None]
+           jnp.arange(n_groups, dtype=jnp.int32)[None, :]) & tagm
     grp = grp.reshape(P // bp, bp, n_groups)               # [NB, BP, G]
     xb = x.reshape(P // bp, bp)[:, :, None]
+    thr3 = thr[None, None, :]
     return jnp.stack([
         jnp.sum(jnp.where(grp, xb, 0), axis=1),
         jnp.sum(grp.astype(jnp.int32), axis=1),
-        jnp.sum((grp & (xb < threshold)).astype(jnp.int32), axis=1),
+        jnp.sum((grp & (xb < thr3)).astype(jnp.int32), axis=1),
         jnp.min(jnp.where(grp, xb, _I32_MAX), axis=1),
         jnp.max(jnp.where(grp, xb, _I32_MIN), axis=1),
     ], axis=2).astype(jnp.int32)
+
+
+def rss_scan_agg_chunked_ref(data: jax.Array, ts: jax.Array,
+                             gid: jax.Array, member_ts: jax.Array,
+                             floor: jax.Array | int = 0,
+                             tag_main: jax.Array | int = 1,
+                             tag_alt: jax.Array | int = -2,
+                             threshold: jax.Array | int = _I32_MAX,
+                             *, n_groups: int = 1,
+                             group_params: jax.Array | None = None,
+                             rows_per_step: int = 8,
+                             fold_chunks: int = 8) -> jax.Array:
+    """Oracle for `rss_scan_agg_chunked`: same chunk-aligned padding math
+    (`_chunk_shape`), but each chunk reduces via `jax.ops.segment_*` —
+    O(P) regardless of G, and bitwise equal to the kernel's one-hot sums
+    (int32 addition is order-independent; segment_min/max identities are
+    the kernel's sentinels).  Returns [chunks, n_groups, 5] int32."""
+    P = data.shape[0]
+    assert gid.shape == (P, 1)
+    rows, _r, nc, Pp = _chunk_shape(P, rows_per_step, fold_chunks)
+    del rows
+    slot = rss_visible_slots_ref(ts, member_ts, floor)
+    sel = jnp.take_along_axis(data, slot[:, None, None], axis=1)[:, 0]
+    tag = sel[:, 0]
+    x = sel[:, 1]
+    g = gid[:, 0].astype(jnp.int32)
+    if Pp != P:
+        pad = Pp - P
+        tag = jnp.concatenate([tag, jnp.full((pad,), -1, jnp.int32)])
+        x = jnp.concatenate([x, jnp.zeros((pad,), jnp.int32)])
+        g = jnp.concatenate([g, jnp.full((pad,), -1, jnp.int32)])
+    tmain, talt, thr = _group_param_cols(n_groups, tag_main, tag_alt,
+                                         threshold, group_params)
+    gc = jnp.clip(g, 0, n_groups - 1)
+    valid = (((tag == tmain[gc]) | (tag == talt[gc])) &
+             (g >= 0) & (g < n_groups))
+    seg = jnp.where(valid, g, n_groups)        # invalid -> spill segment
+    below = (valid & (x < thr[gc])).astype(jnp.int32)
+    cp = Pp // nc                              # pages per chunk
+    out = []
+    for c in range(nc):
+        sl = slice(c * cp, (c + 1) * cp)
+        s, v, b = seg[sl], valid[sl], x[sl]
+        args = dict(num_segments=n_groups + 1)
+        out.append(jnp.stack([
+            jax.ops.segment_sum(jnp.where(v, b, 0), s, **args),
+            jax.ops.segment_sum(v.astype(jnp.int32), s, **args),
+            jax.ops.segment_sum(below[sl], s, **args),
+            jax.ops.segment_min(jnp.where(v, b, _I32_MAX), s, **args),
+            jax.ops.segment_max(jnp.where(v, b, _I32_MIN), s, **args),
+        ], axis=1)[:n_groups])
+    return jnp.stack(out).astype(jnp.int32)

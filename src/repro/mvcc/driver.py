@@ -16,6 +16,7 @@ import random
 from dataclasses import dataclass, field
 from typing import Optional
 
+from ..core.replica import RssSnapshot
 from ..tensorstore.version_store import (AggPlan, GroupByPlan, MultiAggPlan,
                                          ScanPlan)
 from .engine import SerializationFailure, Status
@@ -40,6 +41,17 @@ class Metrics:
     # that sliced the store vs gathered (page-range locality metric)
     olap_dense_range_hits: int = 0
     olap_dense_range_misses: int = 0
+    # cross-reader plan batching (batch_plans=True): same-horizon
+    # aggregate plans collected per round and served by one fused
+    # BatchPlan dispatch each
+    olap_batch_dispatches: int = 0   # fused multi-plan dispatches
+    olap_batched_plans: int = 0      # plans served via those dispatches
+    # grouped-kernel dispatch accounting (paged mirrors): fused aggregate
+    # dispatches and which strategy the shape dispatcher picked
+    olap_agg_dispatches: int = 0
+    olap_mode_flat: int = 0
+    olap_mode_chunked: int = 0
+    olap_mode_host: int = 0
     max_engine_txns: int = 0     # peak engine per-txn state (bounded by GC)
     max_rss_tracked: int = 0     # peak RSSManager per-txn state (ditto)
     max_wal_records: int = 0     # peak primary WAL length (truncation bound)
@@ -82,6 +94,40 @@ class Metrics:
     def dense_range_hit_rate(self) -> float:
         d = self.olap_dense_range_hits + self.olap_dense_range_misses
         return self.olap_dense_range_hits / d if d else 0.0
+
+    def plans_per_dispatch(self) -> float:
+        """Mean plans served per fused multi-plan dispatch (1.0 = no
+        cross-reader batching happened)."""
+        return self.olap_batched_plans / max(self.olap_batch_dispatches, 1)
+
+
+class _PlanBatcher:
+    """Round-scope cross-reader plan batcher: OLAP clients whose current
+    step is an aggregate plan at a shared snapshot horizon enqueue
+    (client, context, plan) instead of executing; at the end of the round
+    the driver flushes each horizon group through ONE
+    `olap_execute_batch` call — whole-batch plan fusion across readers
+    (PRoT pin sharing means same-round RSS readers share a horizon
+    almost always).  Results land in each client's `pending` slot exactly
+    as an unbatched execution would."""
+
+    def __init__(self, htap, m: Metrics) -> None:
+        self.htap, self.m = htap, m
+        self.groups: dict = {}
+
+    def add(self, key, client, ctx, plan) -> None:
+        self.groups.setdefault(key, []).append((client, ctx, plan))
+
+    def flush(self) -> None:
+        for entries in self.groups.values():
+            results = self.htap.olap_execute_batch(
+                [(ctx, plan) for _cl, ctx, plan in entries])
+            if len(entries) > 1:
+                self.m.olap_batch_dispatches += 1
+                self.m.olap_batched_plans += len(entries)
+            for (client, _ctx, _plan), result in zip(entries, results):
+                client.pending = result
+        self.groups.clear()
 
 
 class _OltpClient:
@@ -142,9 +188,11 @@ class _OlapClientSingle:
     """OLAP client against the unified (single-node) architecture."""
 
     def __init__(self, htap: SingleNodeHTAP, rng, sc: Scale, m: Metrics,
-                 *, batched: bool = False):
+                 *, batched: bool = False,
+                 batcher: Optional[_PlanBatcher] = None):
         self.htap, self.rng, self.sc, self.m = htap, rng, sc, m
         self.batched = batched
+        self.batcher = batcher
         self.txn = None
         self.gen = None
         self.pending = None
@@ -181,9 +229,18 @@ class _OlapClientSingle:
             if step[0] == "r":
                 self.pending = eng.read(self.txn, step[1])
             elif step[0] == "olap":
-                # ONE plan-execution seam serves every OLAP step kind
-                self.pending = self.htap.olap_execute(self.txn, step[1])
-                self.m.count_plan_step(step[1])
+                # ONE plan-execution seam serves every OLAP step kind;
+                # aggregate plans at a shared RSS horizon may defer to the
+                # round's cross-reader batcher (one fused dispatch)
+                plan = step[1]
+                if (self.batcher is not None and self.txn.rss is not None
+                        and isinstance(plan, (AggPlan, MultiAggPlan,
+                                              GroupByPlan))):
+                    self.batcher.add(("rss", self.txn.rss.lsn), self,
+                                     self.txn, plan)
+                else:
+                    self.pending = self.htap.olap_execute(self.txn, plan)
+                self.m.count_plan_step(plan)
             elif step[0] == "scan":            # legacy step kind
                 self.pending = self.htap.olap_execute(
                     self.txn, ScanPlan(tuple(step[1])))
@@ -233,10 +290,12 @@ class _OlapClientMulti:
     replica set per acquisition."""
 
     def __init__(self, htap: MultiNodeHTAP, rng, sc: Scale, m: Metrics,
-                 *, batched: bool = False, freshness_hints: bool = False):
+                 *, batched: bool = False, freshness_hints: bool = False,
+                 batcher: Optional[_PlanBatcher] = None):
         self.htap, self.rng, self.sc, self.m = htap, rng, sc, m
         self.batched = batched
         self.freshness_hints = freshness_hints
+        self.batcher = batcher
         self.snap = None
         self.gen = None
         self.pending = None
@@ -260,9 +319,19 @@ class _OlapClientMulti:
         if step[0] == "r":
             self.pending = self.htap.olap_read(self.snap, step[1])
         elif step[0] == "olap":
-            # ONE plan-execution seam serves every OLAP step kind
-            self.pending = self.htap.olap_execute(self.snap, step[1])
-            self.m.count_plan_step(step[1])
+            # ONE plan-execution seam serves every OLAP step kind; aggregate
+            # plans may defer to the round's cross-reader batcher, keyed by
+            # (snapshot kind, serving replica, horizon)
+            plan = step[1]
+            if (self.batcher is not None
+                    and isinstance(plan, (AggPlan, MultiAggPlan,
+                                          GroupByPlan))):
+                kind, idx, _, s = self.snap
+                horizon = s.lsn if isinstance(s, RssSnapshot) else int(s)
+                self.batcher.add((kind, idx, horizon), self, self.snap, plan)
+            else:
+                self.pending = self.htap.olap_execute(self.snap, plan)
+            self.m.count_plan_step(plan)
         elif step[0] == "scan":                # legacy step kind
             self.pending = self.htap.olap_execute(self.snap,
                                                   ScanPlan(tuple(step[1])))
@@ -281,23 +350,27 @@ def run_single_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
                     rss_refresh_every: int = 50,
                     olap_scan: bool = False,
                     paged_olap: bool = False,
-                    check_scans: bool = False) -> Metrics:
+                    check_scans: bool = False,
+                    batch_plans: bool = False) -> Metrics:
     """olap_scan=True routes OLAP queries through batched ("olap", plan)
     steps served by one plan-execution seam call each; paged_olap=True
     additionally serves protected readers from the WAL-mirrored paged store
     (workload key families reserved contiguously for the dense page-range
-    fast path); and check_scans=True asserts every plan result equals the
-    per-key engine read path (the oracle)."""
+    fast path); check_scans=True asserts every plan result equals the
+    per-key engine read path (the oracle); and batch_plans=True collects
+    each round's same-horizon aggregate plans into ONE fused BatchPlan
+    dispatch (cross-reader whole-batch plan fusion)."""
     htap = SingleNodeHTAP(olap_mode, paged=paged_olap,
                           check_scans=check_scans,
                           reserve_keys=scale.key_families())
     load_initial(htap.engine, scale)
     m = Metrics()
     rng = random.Random(seed)
+    batcher = _PlanBatcher(htap, m) if batch_plans else None
     clients = [_OltpClient(htap.engine, random.Random(rng.random()), scale, m)
                for _ in range(oltp_clients)]
     clients += [_OlapClientSingle(htap, random.Random(rng.random()), scale, m,
-                                  batched=olap_scan)
+                                  batched=olap_scan, batcher=batcher)
                 for _ in range(olap_clients)]
     if olap_mode == "ssi+rss":
         htap.refresh_rss()
@@ -307,6 +380,8 @@ def run_single_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
             htap.refresh_rss()   # RSS construction invoker (fixed interval)
         for cl in clients:
             cl.step()
+        if batcher is not None:
+            batcher.flush()
         m.max_engine_txns = max(m.max_engine_txns, len(htap.engine.txns))
         m.max_rss_tracked = max(m.max_rss_tracked,
                                 htap.rss_manager.tracked_txns())
@@ -315,6 +390,11 @@ def run_single_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
     if htap.mirror is not None:
         m.olap_dense_range_hits = htap.mirror.range_stats["dense"]
         m.olap_dense_range_misses = htap.mirror.range_stats["gather"]
+        es = htap.mirror.exec_stats
+        m.olap_agg_dispatches = es["agg_dispatches"]
+        m.olap_mode_flat = es["mode_flat"]
+        m.olap_mode_chunked = es["mode_chunked"]
+        m.olap_mode_host = es["mode_host"]
     return m
 
 
@@ -329,7 +409,8 @@ def run_multi_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
                    route_policy="freshest",
                    max_staleness: int = 100,
                    ship_skew: int = 0,
-                   freshness_hints: bool = False) -> Metrics:
+                   freshness_hints: bool = False,
+                   batch_plans: bool = False) -> Metrics:
     """N-replica decoupled-storage run.  `ship_skew` staggers the fleet:
     replica i ships every `ship_every * (1 + i * ship_skew)` rounds, so the
     run exercises skewed per-replica lag (the routing policies' input);
@@ -344,11 +425,13 @@ def run_multi_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
     htap.ship_log()
     m = Metrics()
     rng = random.Random(seed)
+    batcher = _PlanBatcher(htap, m) if batch_plans else None
     clients = [_OltpClient(htap.primary, random.Random(rng.random()), scale, m)
                for _ in range(oltp_clients)]
     clients += [_OlapClientMulti(htap, random.Random(rng.random()), scale, m,
                                  batched=olap_scan,
-                                 freshness_hints=freshness_hints)
+                                 freshness_hints=freshness_hints,
+                                 batcher=batcher)
                 for _ in range(olap_clients)]
     for rnd in range(rounds):
         m.rounds = rnd + 1
@@ -361,6 +444,8 @@ def run_multi_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
             m.gc_versions_pruned += htap.gc_versions()
         for cl in clients:
             cl.step()
+        if batcher is not None:
+            batcher.flush()
         m.max_engine_txns = max(m.max_engine_txns, len(htap.primary.txns))
         for rep in htap.cluster.replicas:
             if rep.rss_manager is not None:
@@ -372,6 +457,11 @@ def run_multi_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
         if rep.mirror is not None:
             m.olap_dense_range_hits += rep.mirror.range_stats["dense"]
             m.olap_dense_range_misses += rep.mirror.range_stats["gather"]
+            es = rep.mirror.exec_stats
+            m.olap_agg_dispatches += es["agg_dispatches"]
+            m.olap_mode_flat += es["mode_flat"]
+            m.olap_mode_chunked += es["mode_chunked"]
+            m.olap_mode_host += es["mode_host"]
     st = htap.cluster.stats
     m.olap_served_by = list(st["served"])
     m.olap_ship_then_serve = st["ship_then_serve"]

@@ -30,9 +30,8 @@ from ..core.history import History, b as op_b, r as op_r, w as op_w, \
     c as op_c, a as op_a
 from ..core.replica import RssSnapshot
 from ..core.wal import Wal, WalRecord
-from ..tensorstore.version_store import (AggOp, AggPlan, ChainVersionStore,
-                                         Plan, ScanPlan, VersionStore,
-                                         apply_plan, plan_keys)
+from ..tensorstore.version_store import (ChainVersionStore, Plan,
+                                         VersionStore, apply_plan, plan_keys)
 from .store import Store, Version
 
 
@@ -205,15 +204,6 @@ class Engine:
                                                                   snapshot)
         self.record_scan(t, keys, writers)
         return result
-
-    # deprecated per-op aliases (one PR): thin shims over the plan seam
-    def scan(self, t: Txn, keys: Sequence[str]) -> list[Any]:
-        """Deprecated alias: `execute(t, ScanPlan(keys))`."""
-        return self.execute(t, ScanPlan(tuple(keys)))
-
-    def agg(self, t: Txn, keys: Sequence[str], op: AggOp) -> int:
-        """Deprecated alias: `execute(t, AggPlan(keys, op))`."""
-        return self.execute(t, AggPlan(tuple(keys), op))
 
     def record_scan(self, t: Txn, keys: Sequence[str],
                     writers: Sequence[int]) -> None:

@@ -24,8 +24,14 @@ the device-resident K-slot paged store (`tensorstore.mirror.PagedMirror`)
 and lower aggregate plans to the fused `rss_scan_agg` kernels.  With
 `check_scans=True` every plan result is asserted equal to the per-key
 engine read path (the `apply_plan` oracle).  The per-op methods
-(`olap_scan`/`olap_agg`/`scan_si`/`agg_rss`/...) survive as deprecated
-aliases that route through the same seam.
+(`olap_scan`/`olap_agg`/`scan_si`/`agg_rss`/...) that survived PR 5 as
+deprecated aliases are GONE: `execute(plan)` is the only OLAP read path.
+
+`olap_execute_batch` is the cross-reader batching seam: aggregate plans
+from several same-horizon readers (PRoT pin sharing hands them the SAME
+snapshot object) fuse into one `BatchPlan` — ONE kernel dispatch serves
+the whole batch, with per-transaction read-set recording and per-plan
+oracle checks preserved.
 """
 
 from __future__ import annotations
@@ -37,9 +43,11 @@ from ..cluster import ReplicaCluster
 from ..core.replica import PRoTManager, RSSManager, RssSnapshot
 from ..core.wal import effective_commit_seq
 from ..tensorstore.mirror import PagedMirror
-from ..tensorstore.version_store import (AggOp, AggPlan, ChainVersionStore,
-                                         PagedVersionStore, Plan, ScanPlan,
-                                         VersionStore, apply_plan, plan_keys)
+from ..tensorstore.version_store import (AggPlan, BatchPlan,
+                                         ChainVersionStore, GroupByPlan,
+                                         MultiAggPlan, PagedVersionStore,
+                                         Plan, VersionStore, apply_plan,
+                                         plan_keys)
 from .engine import AbortReason, Engine, SerializationFailure, Status, Txn
 from .store import Store
 
@@ -141,15 +149,44 @@ class SingleNodeHTAP:
             assert result == oracle, (result, oracle)
         return result
 
-    # deprecated per-op aliases (one PR): route through the plan seam so
-    # facade behavior can never drift from the plan path
-    def olap_scan(self, t: Txn, keys: Sequence[str]) -> list[Any]:
-        """Deprecated alias: `olap_execute(t, ScanPlan(keys))`."""
-        return self.olap_execute(t, ScanPlan(tuple(keys)))
-
-    def olap_agg(self, t: Txn, keys: Sequence[str], op: AggOp) -> int:
-        """Deprecated alias: `olap_execute(t, AggPlan(keys, op))`."""
-        return self.olap_execute(t, AggPlan(tuple(keys), op))
+    def olap_execute_batch(self, entries: Sequence[tuple]) -> list[Any]:
+        """Cross-reader whole-batch plan fusion: `entries` is a sequence
+        of (txn, plan) pairs whose plans are aggregate-shaped and whose
+        transactions share ONE RSS horizon (PRoT pin sharing hands
+        same-round readers the same snapshot object).  The plans lower to
+        a single `BatchPlan` — ONE fused kernel dispatch — and each
+        transaction records exactly the read set its plan would record
+        unbatched.  Entries that can't fuse (no paged mirror, non-RSS
+        readers, mixed horizons, scan plans) fall back to per-plan
+        `olap_execute`.  Returns per-entry results in order."""
+        entries = list(entries)
+        batchable = (
+            self.paged_store is not None and len(entries) > 1 and
+            all(isinstance(p, (AggPlan, MultiAggPlan, GroupByPlan))
+                for _, p in entries) and
+            all(t.rss is not None for t, _ in entries) and
+            len({t.rss.lsn for t, _ in entries}) == 1)
+        if not batchable:
+            return [self.olap_execute(t, p) for t, p in entries]
+        for t, _ in entries:
+            self.engine._check_active(t)
+        snap = entries[0][0].rss
+        batch = BatchPlan(tuple(p for _, p in entries))
+        results, writers = self.paged_store.execute_with_writers(batch, snap)
+        off = 0
+        for (t, p), result in zip(entries, results):
+            pk = plan_keys(p)
+            self.engine.record_scan(t, pk, writers[off:off + len(pk)])
+            off += len(pk)
+            if self.check_scans:
+                hist, self.engine.history = self.engine.history, None
+                try:
+                    oracle = apply_plan(
+                        [self.engine.read(t, k) for k in pk], p)
+                finally:
+                    self.engine.history = hist
+                assert result == oracle, (result, oracle)
+        return list(results)
 
     def olap_commit(self, t: Txn) -> None:
         try:
@@ -308,25 +345,6 @@ class Replica:
         """Execute a plan under RSS membership visibility."""
         return self._execute(snap, plan)
 
-    # deprecated per-op aliases (one PR): route through the plan seam
-    def scan_si(self, snapshot_seq: int, keys: Sequence[str]) -> list[Any]:
-        """Deprecated alias: `execute_si(seq, ScanPlan(keys))`."""
-        return self.execute_si(snapshot_seq, ScanPlan(tuple(keys)))
-
-    def scan_rss(self, snap: RssSnapshot, keys: Sequence[str]) -> list[Any]:
-        """Deprecated alias: `execute_rss(snap, ScanPlan(keys))`."""
-        return self.execute_rss(snap, ScanPlan(tuple(keys)))
-
-    def agg_si(self, snapshot_seq: int, keys: Sequence[str],
-               op: AggOp) -> int:
-        """Deprecated alias: `execute_si(seq, AggPlan(keys, op))`."""
-        return self.execute_si(snapshot_seq, AggPlan(tuple(keys), op))
-
-    def agg_rss(self, snap: RssSnapshot, keys: Sequence[str],
-                op: AggOp) -> int:
-        """Deprecated alias: `execute_rss(snap, AggPlan(keys, op))`."""
-        return self.execute_rss(snap, AggPlan(tuple(keys), op))
-
 
 class MultiNodeHTAP:
     """Primary + N-replica decoupled-storage cluster.  Snapshot handles are
@@ -377,14 +395,30 @@ class MultiNodeHTAP:
         freshness-policy decision as the acquisition."""
         return self.cluster.execute(snap, plan)
 
-    # deprecated per-op aliases (one PR): route through the plan seam
-    def olap_scan(self, snap, keys: Sequence[str]) -> list[Any]:
-        """Deprecated alias: `olap_execute(snap, ScanPlan(keys))`."""
-        return self.olap_execute(snap, ScanPlan(tuple(keys)))
+    def olap_execute_batch(self, entries: Sequence[tuple]) -> list[Any]:
+        """Cross-reader whole-batch plan fusion, cluster-routed: `entries`
+        is a sequence of (snapshot handle, plan) pairs.  When every plan
+        is aggregate-shaped and every handle names the same replica and
+        snapshot horizon, the plans fuse into one `BatchPlan` served by a
+        single replica dispatch (one fused kernel launch on a paged
+        replica); otherwise each entry executes alone.  Returns per-entry
+        results in order."""
+        entries = list(entries)
 
-    def olap_agg(self, snap, keys: Sequence[str], op: AggOp) -> int:
-        """Deprecated alias: `olap_execute(snap, AggPlan(keys, op))`."""
-        return self.olap_execute(snap, AggPlan(tuple(keys), op))
+        def _horizon(handle):
+            kind, idx, _rid, snap = handle
+            return (kind, idx,
+                    snap.lsn if isinstance(snap, RssSnapshot) else int(snap))
+
+        batchable = (
+            len(entries) > 1 and
+            all(isinstance(p, (AggPlan, MultiAggPlan, GroupByPlan))
+                for _, p in entries) and
+            len({_horizon(h) for h, _ in entries}) == 1)
+        if not batchable:
+            return [self.olap_execute(h, p) for h, p in entries]
+        batch = BatchPlan(tuple(p for _, p in entries))
+        return list(self.cluster.execute(entries[0][0], batch))
 
     def olap_release(self, snap) -> None:
         self.cluster.release(snap)

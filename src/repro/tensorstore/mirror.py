@@ -63,6 +63,42 @@ def _op_config(op) -> tuple:
     return (op.field, op.threshold if op.kind == "count_below" else None)
 
 
+def _lane_layout(plans) -> tuple[list, list, dict]:
+    """Accumulator-lane layout for a sequence of aggregate plans served by
+    ONE fused grouped launch: one lane per (plan, kernel config, group),
+    where a config is the (field, threshold) pass `_op_config` derives.
+    Per-lane kernel params (tag_main, tag_alt, threshold) ride the
+    kernel's group-param tile, so lanes from different plans/configs
+    coexist in a single dispatch — whole-batch plan fusion.
+
+    Returns (lane_groups, lane_params, lane_of): the key sequence feeding
+    each lane, each lane's (field, tag_main, tag_alt, threshold), and
+    (plan index, config, group index) -> lane index for result
+    assembly."""
+    from .version_store import AggPlan, GroupByPlan, MultiAggPlan
+
+    lane_groups: list[tuple] = []
+    lane_params: list[tuple] = []
+    lane_of: dict[tuple, int] = {}
+    for p_i, plan in enumerate(plans):
+        if isinstance(plan, GroupByPlan):
+            key_groups, ops = plan.key_groups, plan.ops
+        elif isinstance(plan, MultiAggPlan):
+            key_groups, ops = (plan.keys,), plan.ops
+        elif isinstance(plan, AggPlan):
+            key_groups, ops = (plan.keys,), (plan.op,)
+        else:
+            raise TypeError(f"not an aggregate plan: {type(plan).__name__}")
+        for cfg in dict.fromkeys(_op_config(op) for op in ops):
+            field, thr = cfg
+            tag_main, tag_alt = AGG_FIELD_TAGS[field]
+            for g_i, grp in enumerate(key_groups):
+                lane_of[(p_i, cfg, g_i)] = len(lane_groups)
+                lane_groups.append(tuple(grp))
+                lane_params.append((field, tag_main, tag_alt, thr))
+    return lane_groups, lane_params, lane_of
+
+
 def encode_value(value: Any, elems: int) -> np.ndarray:
     """Encode a workload value into a fixed [elems] int32 payload."""
     out = np.zeros(elems, np.int32)
@@ -123,6 +159,15 @@ class PagedMirror:
         # contiguous ascending page run slices the store (no gather) —
         # `reserve` key families contiguously to raise the hit rate
         self.range_stats = {"dense": 0, "gather": 0}
+        # grouped-strategy override (None = shape dispatch; "host" /
+        # "flat" / "chunked" forces a mode — tests and benches pin it)
+        self.grouped_mode: str | None = None
+        # plan-execution accounting: plans served, fused batches, grouped
+        # dispatches and which strategy each took (the driver surfaces
+        # these as plans/dispatch and mode counters)
+        self.exec_stats = {"plans": 0, "batches": 0, "batched_plans": 0,
+                           "agg_dispatches": 0, "mode_flat": 0,
+                           "mode_chunked": 0, "mode_host": 0}
 
     # ----------------------------------------------------------- page alloc
     @property
@@ -358,37 +403,96 @@ class PagedMirror:
                 threshold=thr, use_kernel=use_kernel, interpret=interpret)
         return raws
 
-    def _grouped_raws(self, key_groups, pages: np.ndarray, member_ts, floor,
-                      ops, *, use_kernel: bool = True, interpret=None) \
-            -> dict:
-        """Grouped twin of `_scalar_raws`: one fused `rss_scan_agg_grouped`
-        pass per distinct kernel config, every group reduced into its own
-        accumulator lanes.  Group ids follow the flat group-major page
-        order (a key in two groups occupies two gathered rows, each with
-        its own gid); padding pages carry gid -1 and match no lane.
-        Returns {config: [group][sum, count, count_below, min, max]}."""
-        n_groups = len(key_groups)
-        configs = list(dict.fromkeys(_op_config(op) for op in ops))
-        empty = [0, 0, 0, int(_INT32.max), int(_INT32.min)]
-        if not len(pages) or not n_groups:
-            return {cfg: [list(empty) for _ in range(n_groups)]
-                    for cfg in configs}
-        from ..kernels.rss_scan_agg.ops import snapshot_group_agg_members
+    def _grouped_rows(self, lane_groups, lane_params, mask_fn, member_ts,
+                      floor, n_plans, *, use_kernel: bool = True,
+                      interpret=None) -> list:
+        """Serve one fused grouped dispatch: every accumulator lane of a
+        `_lane_layout` reduced in ONE strategy-dispatched pass.  The
+        strategy comes from `ops.select_grouped_mode` (or the mirror's
+        `grouped_mode` override): "host" decodes the scanned values and
+        aggregates in Python (small scans — launch overhead dominates);
+        "flat"/"chunked" gather the lane-major sub-store once, hand every
+        lane its own kernel params, and launch a single grouped kernel
+        pipeline.  Returns [lane][sum, count, count_below, min, max]."""
+        from ..kernels.rss_scan_agg import ops as kops
+        from .version_store import agg_value
 
+        empty = [0, 0, 0, int(_INT32.max), int(_INT32.min)]
+        flat_keys = [k for grp in lane_groups for k in grp]
+        if not lane_groups or not flat_keys:
+            return [list(empty) for _ in lane_groups]
+        self.exec_stats["agg_dispatches"] += 1
+        mode = kops.select_grouped_mode(
+            len(flat_keys), len(lane_groups), n_plans,
+            override=self.grouped_mode)
+        if mode == "host":
+            kops.LAUNCH_STATS["dispatches"] += 1
+            kops.LAUNCH_STATS["host"] += 1
+            self.exec_stats["mode_host"] += 1
+            vals = self._scan(flat_keys, mask_fn)
+            rows, off = [], 0
+            for grp, (field, _tm, _ta, thr) in zip(lane_groups,
+                                                   lane_params):
+                xs = [x for v in vals[off:off + len(grp)]
+                      if (x := agg_value(v, field)) is not None]
+                off += len(grp)
+                thr_eff = int(_INT32.max) if thr is None else int(thr)
+                rows.append([sum(xs), len(xs),
+                             sum(1 for x in xs if x < thr_eff),
+                             min(xs, default=int(_INT32.max)),
+                             max(xs, default=int(_INT32.min))])
+            return rows
+        pages = self.page_index(flat_keys)
         store = self.jnp_store_for(pages)
         gid = np.full(int(store["ts"].shape[0]), -1, np.int32)
         gid[:len(pages)] = np.concatenate(
             [np.full(len(grp), g, np.int32)
-             for g, grp in enumerate(key_groups)])
-        mem = np.asarray(member_ts, np.int32)
-        raws = {}
-        for field, thr in configs:
-            tag_main, tag_alt = AGG_FIELD_TAGS[field]
-            raws[(field, thr)] = snapshot_group_agg_members(
-                store, gid, n_groups, mem, floor, tag_main=tag_main,
-                tag_alt=tag_alt, threshold=thr, use_kernel=use_kernel,
-                interpret=interpret)
-        return raws
+             for g, grp in enumerate(lane_groups)])
+        gparams = np.asarray(
+            [[tm, ta, int(_INT32.max) if thr is None else int(thr)]
+             for _f, tm, ta, thr in lane_params], np.int32)
+        rows, used = kops.grouped_agg_auto(
+            store, gid, len(lane_groups), np.asarray(member_ts, np.int32),
+            floor, group_params=gparams, n_plans=n_plans, mode=mode,
+            use_kernel=use_kernel, interpret=interpret)
+        self.exec_stats["mode_" + used] += 1
+        return rows
+
+    def _grouped_execute(self, plans, snapshot, *, use_kernel: bool = True,
+                         interpret=None) -> tuple:
+        """Execute a sequence of aggregate plans sharing ONE snapshot in a
+        single fused grouped dispatch (one visibility resolve, one pass
+        over the gathered pages, one accumulator lane per plan × config ×
+        group).  Returns (per-plan results list, writers over the
+        plan-major flat key sequence)."""
+        from .version_store import (AggPlan, GroupByPlan, MultiAggPlan,
+                                    finalize_agg, plan_keys)
+
+        lane_groups, lane_params, lane_of = _lane_layout(plans)
+        mask_fn, member_ts, floor = self._snapshot_mask(snapshot)
+        all_keys = [k for p in plans for k in plan_keys(p)]
+        writers = self._writers_for(self.page_index(all_keys), mask_fn)
+        rows = self._grouped_rows(lane_groups, lane_params, mask_fn,
+                                  member_ts, floor, len(plans),
+                                  use_kernel=use_kernel,
+                                  interpret=interpret)
+        results = []
+        for p_i, plan in enumerate(plans):
+            if isinstance(plan, GroupByPlan):
+                results.append(tuple(
+                    tuple(finalize_agg(
+                        rows[lane_of[(p_i, _op_config(op), g)]], op)
+                        for op in plan.ops)
+                    for g in range(len(plan.key_groups))))
+            elif isinstance(plan, MultiAggPlan):
+                results.append(tuple(finalize_agg(
+                    rows[lane_of[(p_i, _op_config(op), 0)]], op)
+                    for op in plan.ops))
+            else:
+                assert isinstance(plan, AggPlan), plan
+                results.append(finalize_agg(
+                    rows[lane_of[(p_i, _op_config(plan.op), 0)]], plan.op))
+        return results, writers
 
     def execute_with_writers(self, plan, snapshot, *,
                              use_kernel: bool = True,
@@ -398,29 +502,39 @@ class PagedMirror:
         takes the batched scan path; aggregate plans lower to the fused
         kernels — `AggPlan`/`MultiAggPlan` to `rss_scan_agg` (one pass per
         distinct field/threshold config, all of a compound's statistics
-        from the same pass), `GroupByPlan` to `rss_scan_agg_grouped` (a
-        [groups, 5] partial tile per pass).  Writers always cover the
-        plan's flat key sequence from the same host-side slot resolve, so
-        read-set recording is identical for every plan kind."""
-        from .version_store import (AggPlan, GroupByPlan, MultiAggPlan,
-                                    ScanPlan, finalize_agg, plan_keys)
+        from the same pass), `GroupByPlan` to the strategy-dispatched
+        grouped reduction (flat accumulator lanes, chunked two-stage, or
+        host — `kernels.rss_scan_agg.ops.select_grouped_mode`), and
+        `BatchPlan` to ONE fused grouped dispatch for ALL its member
+        plans (whole-batch plan fusion: one lane per plan × config ×
+        group).  Writers always cover the plan's flat key sequence from
+        the same host-side slot resolve, so read-set recording is
+        identical for every plan kind."""
+        from .version_store import (AggPlan, BatchPlan, GroupByPlan,
+                                    MultiAggPlan, ScanPlan, finalize_agg,
+                                    plan_keys)
 
         if isinstance(plan, ScanPlan):
+            self.exec_stats["plans"] += 1
             return self.scan_with_writers(plan.keys, snapshot)
+        if isinstance(plan, BatchPlan):
+            self.exec_stats["plans"] += len(plan.plans)
+            self.exec_stats["batches"] += 1
+            self.exec_stats["batched_plans"] += len(plan.plans)
+            results, writers = self._grouped_execute(
+                plan.plans, snapshot, use_kernel=use_kernel,
+                interpret=interpret)
+            return tuple(results), writers
+        self.exec_stats["plans"] += 1
+        if isinstance(plan, GroupByPlan):
+            results, writers = self._grouped_execute(
+                [plan], snapshot, use_kernel=use_kernel,
+                interpret=interpret)
+            return results[0], writers
         keys = plan_keys(plan)
         pages = self.page_index(keys)
         mask_fn, member_ts, floor = self._snapshot_mask(snapshot)
         writers = self._writers_for(pages, mask_fn)
-        if isinstance(plan, GroupByPlan):
-            raws = self._grouped_raws(plan.key_groups, pages, member_ts,
-                                      floor, plan.ops,
-                                      use_kernel=use_kernel,
-                                      interpret=interpret)
-            result = tuple(
-                tuple(finalize_agg(raws[_op_config(op)][g], op)
-                      for op in plan.ops)
-                for g in range(len(plan.key_groups)))
-            return result, writers
         ops = (plan.op,) if isinstance(plan, AggPlan) else plan.ops
         raws = self._scalar_raws(pages, member_ts, floor, ops,
                                  use_kernel=use_kernel, interpret=interpret)

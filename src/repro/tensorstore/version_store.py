@@ -22,7 +22,10 @@ semantics but different shapes:
     statistics over ONE read set, e.g. sum+count for AVG, served by a
     single visibility pass — the kernel computes all five lanes anyway),
     and `GroupByPlan` (GROUP BY: per-group key sequences reduced to a
-    small [groups × ops] tile in one fused pass).  `ChainVersionStore`
+    small [groups × ops] tile in one fused pass).  `BatchPlan` fuses
+    several same-horizon aggregate plans into ONE kernel launch
+    (whole-batch plan fusion — the device half of cross-reader
+    batching).  `ChainVersionStore`
     executes plans on the per-key Python path (the oracle);
     `PagedVersionStore` lowers aggregate plans to the fused
     `rss_scan_agg` Pallas kernels, so results come back as a handful of
@@ -106,7 +109,33 @@ class GroupByPlan:
         return tuple(k for grp in self.key_groups for k in grp)
 
 
-Plan = Union[ScanPlan, AggPlan, MultiAggPlan, GroupByPlan]
+@dataclass(frozen=True)
+class BatchPlan:
+    """Whole-batch plan fusion: several aggregate-shaped plans sharing ONE
+    snapshot horizon, lowered to a single fused kernel launch — one
+    visibility resolve, one pass over the pages, one accumulator lane per
+    (plan, kernel config, group) — instead of one launch per plan.  This
+    is the device half of cross-reader batching: PRoT pin sharing already
+    hands same-horizon readers the same `RssSnapshot` object, and a
+    `BatchPlan` lets their plans ride one kernel dispatch.  Result: a
+    tuple of per-plan results in `plans` order, each exactly what the
+    plan would return unbatched.  `ScanPlan`s don't batch (they
+    materialize values, not lanes)."""
+    plans: tuple[Plan, ...]
+
+    def __post_init__(self) -> None:
+        assert self.plans, "empty BatchPlan"
+        for p in self.plans:
+            assert isinstance(p, (AggPlan, MultiAggPlan, GroupByPlan)), \
+                f"BatchPlan takes aggregate plans, not {type(p).__name__}"
+
+    @property
+    def keys(self) -> tuple[str, ...]:
+        """Flat read set: every member plan's keys, plan-major."""
+        return tuple(k for p in self.plans for k in plan_keys(p))
+
+
+Plan = Union[ScanPlan, AggPlan, MultiAggPlan, GroupByPlan, BatchPlan]
 
 
 def plan_keys(plan: Plan) -> tuple[str, ...]:
@@ -179,6 +208,13 @@ def apply_plan(values: Sequence[Any], plan: Plan) -> Any:
             gvals = values[i:i + len(grp)]
             i += len(grp)
             out.append(tuple(apply_agg(gvals, op) for op in plan.ops))
+        return tuple(out)
+    if isinstance(plan, BatchPlan):
+        out, i = [], 0
+        for p in plan.plans:
+            pk = plan_keys(p)
+            out.append(apply_plan(values[i:i + len(pk)], p))
+            i += len(pk)
         return tuple(out)
     raise TypeError(f"unknown plan kind {type(plan).__name__}")
 

@@ -23,6 +23,7 @@ from repro.cluster import (BoundedStaleness, Freshest, ReplicaCluster,
 from repro.core import RSSManager, Wal
 from repro.mvcc import (MultiNodeHTAP, SerializationFailure, Status,
                         run_multi_node)
+from repro.tensorstore import ScanPlan
 
 KEYS = [f"k{i}" for i in range(8)]
 
@@ -228,7 +229,7 @@ def check_cluster_vs_oracle(seed, *, n_replicas=3, steps=250):
             assert s_rep.floor_seq == s_ora.floor_seq, seed
             assert s_rep.member_seqs == s_ora.member_seqs, seed
             # replica batched scan == primary per-key protected reads
-            vals = rep.scan_rss(s_rep, KEYS)
+            vals = rep.execute_rss(s_rep, ScanPlan(tuple(KEYS)))
             r = eng.begin(read_only=True, rss=s_rep)
             assert vals == [eng.read(r, k) for k in KEYS], seed
             rep.release(rid)

@@ -1,23 +1,34 @@
-"""Facade-drift regression: deprecated per-op aliases == the plan path.
+"""Facade-alias removal regression: the per-op aliases are GONE.
 
-PR 5 collapsed the per-op OLAP facade seams (`olap_scan`/`olap_agg`,
-`scan_si`/`scan_rss`/`agg_si`/`agg_rss`, cluster `scan`/`agg`, engine
-`scan`/`agg`) into one `execute(plan)` seam per layer, keeping the old
-names as thin aliases.  The drift hazard: an alias that re-implements its
-op can silently diverge from the plan path.  These tests assert (a) alias
-results == plan-path results at every facade, and (b) the aliases really
-ROUTE through the plan seam (counted via monkeypatching), so logic cannot
-be duplicated without failing here.
+PR 5 collapsed the per-op OLAP facade seams into one `execute(plan)` seam
+per layer and kept the old names as deprecated thin aliases.  This PR
+deletes them: `olap_scan`/`olap_agg` on both HTAP facades,
+`scan_si`/`scan_rss`/`agg_si`/`agg_rss` on `Replica`, and `scan`/`agg`
+on `Engine` and `ReplicaCluster`.  These tests pin the removal — an
+alias that sneaks back in is facade drift waiting to happen — and
+re-verify that the surviving plan seam serves the same results the
+aliases used to.
 """
 
 import random
 
+import pytest
+
+from repro.cluster import ReplicaCluster
 from repro.mvcc import Engine
 from repro.mvcc.htap import MultiNodeHTAP, Replica, SingleNodeHTAP
 from repro.mvcc.workload import Scale, load_initial
-from repro.tensorstore import AggOp, AggPlan, ScanPlan
+from repro.tensorstore import AggOp, AggPlan, ScanPlan, apply_plan
 
 OP = AggOp("count_below", "int", 60)
+
+REMOVED = {
+    Engine: ("scan", "agg"),
+    SingleNodeHTAP: ("olap_scan", "olap_agg"),
+    MultiNodeHTAP: ("olap_scan", "olap_agg"),
+    Replica: ("scan_si", "scan_rss", "agg_si", "agg_rss"),
+    ReplicaCluster: ("scan", "agg"),
+}
 
 
 def _loaded_single(paged):
@@ -33,98 +44,78 @@ def _loaded_single(paged):
     return htap
 
 
-class TestSingleNodeAliases:
-    def test_alias_equals_plan_path(self):
+class TestAliasesRemoved:
+    @pytest.mark.parametrize("cls,names", sorted(
+        REMOVED.items(), key=lambda kv: kv[0].__name__),
+        ids=lambda v: v.__name__ if isinstance(v, type) else None)
+    def test_class_has_no_alias(self, cls, names):
+        for name in names:
+            assert not hasattr(cls, name), \
+                f"deprecated alias {cls.__name__}.{name} is back"
+
+    def test_instances_have_no_alias(self):
+        eng = Engine("ssi")
+        for name in REMOVED[Engine]:
+            assert not hasattr(eng, name)
+        htap = _loaded_single(paged=True)
+        for name in REMOVED[SingleNodeHTAP]:
+            assert not hasattr(htap, name)
+        mh = MultiNodeHTAP("ssi+rss", paged_olap=True)
+        for name in REMOVED[MultiNodeHTAP]:
+            assert not hasattr(mh, name)
+        for name in REMOVED[Replica]:
+            assert not hasattr(mh.replica, name)
+        for name in REMOVED[ReplicaCluster]:
+            assert not hasattr(mh.cluster, name)
+
+
+class TestPlanSeamStillServes:
+    """The one surviving seam serves what the aliases used to serve."""
+
+    def test_single_node_execute(self):
         for paged in (False, True):
             htap = _loaded_single(paged)
             keys = Scale().all_stock_keys()
             t = htap.olap_begin()
-            assert htap.olap_scan(t, keys) == \
-                htap.olap_execute(t, ScanPlan(tuple(keys)))
-            assert htap.olap_agg(t, keys, OP) == \
-                htap.olap_execute(t, AggPlan(tuple(keys), OP))
+            vals = htap.olap_execute(t, ScanPlan(tuple(keys)))
+            assert vals == [htap.engine.read(t, k) for k in keys]
+            assert htap.olap_execute(t, AggPlan(tuple(keys), OP)) == \
+                apply_plan(vals, AggPlan(tuple(keys), OP))
             htap.olap_commit(t)
 
-    def test_alias_routes_through_execute(self, monkeypatch):
-        htap = _loaded_single(paged=True)
-        calls = []
-        orig = SingleNodeHTAP.olap_execute
-        monkeypatch.setattr(
-            SingleNodeHTAP, "olap_execute",
-            lambda self, t, plan: calls.append(type(plan).__name__)
-            or orig(self, t, plan))
-        t = htap.olap_begin()
-        htap.olap_scan(t, ["stock:0:0"])
-        htap.olap_agg(t, ["stock:0:0"], OP)
-        assert calls == ["ScanPlan", "AggPlan"]
-
-
-class TestEngineAliases:
-    def test_alias_equals_plan_path_and_routes(self, monkeypatch):
+    def test_engine_execute(self):
         eng = Engine("ssi")
         t0 = eng.begin()
         for i in range(8):
             eng.write(t0, f"k:{i}", i * 9)
         eng.commit(t0)
-        keys = [f"k:{i}" for i in range(8)]
+        keys = tuple(f"k:{i}" for i in range(8))
         t = eng.begin(read_only=True, skip_siread=True)
-        assert eng.scan(t, keys) == eng.execute(t, ScanPlan(tuple(keys)))
-        assert eng.agg(t, keys, OP) == \
-            eng.execute(t, AggPlan(tuple(keys), OP))
-        calls = []
-        orig = Engine.execute
-        monkeypatch.setattr(
-            Engine, "execute",
-            lambda self, txn, plan: calls.append(type(plan).__name__)
-            or orig(self, txn, plan))
-        eng.scan(t, keys)
-        eng.agg(t, keys, OP)
-        assert calls == ["ScanPlan", "AggPlan"]
+        vals = eng.execute(t, ScanPlan(keys))
+        assert vals == [eng.read(t, k) for k in keys]
+        assert eng.execute(t, AggPlan(keys, OP)) == \
+            apply_plan(vals, AggPlan(keys, OP))
 
-
-class TestMultiNodeAliases:
-    def test_alias_equals_plan_path(self):
+    def test_multi_node_execute(self):
         for paged in (False, True):
             htap = MultiNodeHTAP("ssi+rss", paged_olap=paged, n_replicas=2)
             load_initial(htap.primary, Scale())
             htap.ship_log()
-            keys = Scale().all_stock_keys()
+            keys = tuple(Scale().all_stock_keys())
             snap = htap.olap_snapshot()
-            assert htap.olap_scan(snap, keys) == \
-                htap.olap_execute(snap, ScanPlan(tuple(keys)))
-            assert htap.olap_agg(snap, keys, OP) == \
-                htap.olap_execute(snap, AggPlan(tuple(keys), OP))
+            vals = htap.olap_execute(snap, ScanPlan(keys))
+            assert vals == [htap.olap_read(snap, k) for k in keys]
+            assert htap.olap_execute(snap, AggPlan(keys, OP)) == \
+                apply_plan(vals, AggPlan(keys, OP))
             htap.olap_release(snap)
 
-    def test_cluster_and_replica_aliases_route_through_execute(
-            self, monkeypatch):
-        htap = MultiNodeHTAP("ssi+rss", paged_olap=True)
-        load_initial(htap.primary, Scale())
-        htap.ship_log()
-        keys = ["stock:0:0", "stock:0:1"]
-        snap = htap.olap_snapshot()
-        calls = []
-        orig = Replica._execute
-        monkeypatch.setattr(
-            Replica, "_execute",
-            lambda self, s, plan: calls.append(type(plan).__name__)
-            or orig(self, s, plan))
-        htap.olap_scan(snap, keys)        # facade -> cluster -> replica
-        htap.olap_agg(snap, keys, OP)
-        rep = htap.replica
-        rep.scan_si(rep.si_snapshot(), keys)
-        rep.agg_si(rep.si_snapshot(), keys, OP)
-        assert calls == ["ScanPlan", "AggPlan", "ScanPlan", "AggPlan"]
-        htap.olap_release(snap)
-
-    def test_si_replica_aliases_equal_plan_path(self):
+    def test_si_replica_execute(self):
         htap = MultiNodeHTAP("ssi+si", paged_olap=True)
         load_initial(htap.primary, Scale())
         htap.ship_log()
         rep = htap.replica
-        keys = Scale().all_stock_keys()
+        keys = tuple(Scale().all_stock_keys())
         seq = rep.si_snapshot()
-        assert rep.scan_si(seq, keys) == \
-            rep.execute_si(seq, ScanPlan(tuple(keys)))
-        assert rep.agg_si(seq, keys, OP) == \
-            rep.execute_si(seq, AggPlan(tuple(keys), OP))
+        vals = rep.execute_si(seq, ScanPlan(keys))
+        assert rep.execute_si(seq, AggPlan(keys, OP)) == \
+            apply_plan(vals, AggPlan(keys, OP))

@@ -84,16 +84,20 @@ def _rand_plan(rng):
                         ops)
 
 
-def check_group_stream(seed, *, gc_prob=0.0, legacy_prob=0.0, pin_prob=0.0):
+def check_group_stream(seed, *, gc_prob=0.0, legacy_prob=0.0, pin_prob=0.0,
+                       grouped_mode=None):
     """Replay a random stream into RSSManager + paged mirror + chain store
     in randomized batches; at every round, every live snapshot must
     execute random grouped/compound plans identically through the fused
-    kernels and the chain oracle (results AND writers)."""
+    kernels and the chain oracle (results AND writers).  `grouped_mode`
+    pins the mirror's kernel-strategy override (host / flat / chunked) so
+    every strategy faces the same stream."""
     rng = random.Random(seed)
     wal = random_writes_wal(rng, legacy_prob=legacy_prob)
     man = RSSManager()
     prot = PRoTManager(man)
     mirror = PagedMirror(slots=64)            # retain everything: parity
+    mirror.grouped_mode = grouped_mode
     store = Store()                           # under K-slot pressure is the
     chain = ChainVersionStore(store)          # driver tests' job
     paged = PagedVersionStore(mirror)
@@ -153,6 +157,15 @@ def test_grouped_equal_oracle_with_legacy_records(seed):
     check_group_stream(seed, legacy_prob=0.3, gc_prob=0.3, pin_prob=0.2)
 
 
+@pytest.mark.parametrize("mode", ["host", "flat", "chunked"])
+@pytest.mark.parametrize("seed", range(2))
+def test_grouped_equal_oracle_every_forced_mode(seed, mode):
+    """Every kernel strategy — host decode, flat-lane, chunked two-stage —
+    must match the chain oracle on the same randomized stream (shape
+    dispatch must never be load-bearing for correctness)."""
+    check_group_stream(seed, gc_prob=0.3, pin_prob=0.2, grouped_mode=mode)
+
+
 # ------------------------------------------------------ kernel-level parity
 @pytest.mark.parametrize("seed", range(4))
 def test_grouped_kernel_matches_ref(seed):
@@ -187,6 +200,58 @@ def test_grouped_kernel_matches_ref(seed):
                             np.asarray(rss_scan_agg_grouped_ref(
                                 *args, n_groups=G)),
                             err_msg=f"{seed},{P},{G},{M},{floor}")
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_chunked_kernel_matches_ref_and_flat(seed):
+    """Chunked two-stage kernel == its segment-sum oracle per chunk, and
+    after the device tree fold == the flat-lane kernel's host fold —
+    across TAG_PAD pages, gid -1, empty groups, group counts that don't
+    divide the group tile, page counts that don't divide the select
+    block, empty/large member sets, and per-group param tiles."""
+    import jax.numpy as jnp
+    from repro.kernels.rss_scan_agg.kernel import (rss_scan_agg_chunked,
+                                                   rss_scan_agg_grouped,
+                                                   tree_fold_partials)
+    from repro.kernels.rss_scan_agg.ops import fold_group_partials
+    from repro.kernels.rss_scan_agg.ref import rss_scan_agg_chunked_ref
+
+    rng = np.random.default_rng(seed)
+    for P, K, E in [(8, 3, 8), (72, 4, 16), (256, 4, 8)]:
+        data = np.zeros((P, K, E), np.int32)
+        data[:, :, 0] = rng.integers(-1, 4, (P, K))     # tags incl. TAG_PAD
+        data[:, :, 1] = rng.integers(-100, 100, (P, K))
+        ts = rng.integers(0, 60, (P, K)).astype(np.int32)
+        for G in (1, 13, 40):
+            gid = rng.integers(-1, max(G - 1, 1), (P, 1)).astype(np.int32)
+            gprm = np.stack([rng.choice([1, 3], G),
+                             rng.choice([0, -2], G),
+                             rng.integers(-50, 50, G)], 1).astype(np.int32)
+            for M in (0, 7, 140):
+                mem = np.sort(rng.choice(np.arange(1, 60), size=min(M, 59),
+                                         replace=False)).astype(np.int32)
+                for params in ({"tag_main": 1, "tag_alt": 0,
+                                "threshold": 50},
+                               {"group_params": jnp.asarray(gprm)}):
+                    args = (jnp.asarray(data), jnp.asarray(ts),
+                            jnp.asarray(gid), jnp.asarray(mem), 23)
+                    chunks = rss_scan_agg_chunked(
+                        *args, n_groups=G, rows_per_step=2, fold_chunks=2,
+                        **params)
+                    ref = rss_scan_agg_chunked_ref(
+                        *args, n_groups=G, rows_per_step=2, fold_chunks=2,
+                        **params)
+                    np.testing.assert_array_equal(
+                        np.asarray(chunks), np.asarray(ref),
+                        err_msg=f"{seed},{P},{G},{M}")
+                    # device tree fold == host fold == flat-lane kernel
+                    flat = rss_scan_agg_grouped(*args, n_groups=G, **params)
+                    assert fold_group_partials(chunks) == \
+                        fold_group_partials(flat), (seed, P, G, M)
+                    np.testing.assert_array_equal(
+                        np.asarray(tree_fold_partials(chunks)),
+                        np.asarray(fold_group_partials(chunks)),
+                        err_msg=f"{seed},{P},{G},{M}")
 
 
 def test_grouped_op_empty_groups_and_sentinels():

@@ -10,6 +10,7 @@ from repro.core.replica import RssSnapshot
 from repro.mvcc import (Engine, SerializationFailure, Status,
                         SingleNodeHTAP, MultiNodeHTAP,
                         run_single_node, run_multi_node)
+from repro.tensorstore import ScanPlan
 
 
 class TestSIBasics:
@@ -196,7 +197,7 @@ class TestScanRecording:
         e.write(t0, "a", 7)
         e.commit(t0)
         t = e.begin(read_only=True)
-        e.scan(t, ["a", "b"])
+        e.execute(t, ScanPlan(("a", "b")))
         assert t.reads == {"a": t0.tid, "b": 0}
         scan_reads = [(op.key, op.version) for op in e.history.ops
                       if op.kind == READ and op.txn == t.tid]
@@ -208,7 +209,7 @@ class TestScanRecording:
         t2 = e.begin(); e.write(t2, "x", 2); e.commit(t2)
         snap = RssSnapshot(lsn=0, txns=frozenset({t1.tid}))
         t = e.begin(read_only=True, rss=snap)
-        vals = e.scan(t, ["x", "y"])
+        vals = e.execute(t, ScanPlan(("x", "y")))
         assert vals == [1, 0]                   # member-visible version
         assert t.reads == {"x": t1.tid, "y": 0}
         recorded = [(op.key, op.version) for op in e.history.ops
@@ -219,7 +220,7 @@ class TestScanRecording:
         e = Engine("si", record=True)
         t = e.begin()
         e.write(t, "k1", 42)
-        assert e.scan(t, ["k0", "k1"]) == [0, 42]
+        assert e.execute(t, ScanPlan(("k0", "k1"))) == [0, 42]
         assert "k1" not in t.reads              # never hit the store
         assert t.reads == {"k0": 0}
 
@@ -232,7 +233,7 @@ class TestScanRecording:
         e.write(t0, "a", 1); e.write(t0, "b", 2)
         e.commit(t0)
         r1 = e.begin(read_only=True, skip_siread=True)
-        e.scan(r1, ["a", "b"])
+        e.execute(r1, ScanPlan(("a", "b")))
         e.commit(r1)
         assert is_serializable(e.history)
         assert ssi_accepts(e.history)

@@ -228,7 +228,7 @@ class TestEngineAgg:
         eng.write(t0, "b", {"items": [], "total": 3})
         eng.commit(t0)
         t = eng.begin(read_only=True, skip_siread=True)
-        got = eng.agg(t, ["a", "b", "c"], AggOp("sum", "int"))
+        got = eng.execute(t, AggPlan(("a", "b", "c"), AggOp("sum", "int")))
         assert got == 7                      # 7 + initial c=0; b is a dict
         assert t.reads == {"a": t0.tid, "b": t0.tid, "c": 0}
         reads = [op for op in eng.history.ops
@@ -238,7 +238,7 @@ class TestEngineAgg:
     def test_ssi_tracked_agg_falls_back_to_per_key_reads(self):
         eng = Engine("ssi")
         t = eng.begin(read_only=True)
-        eng.agg(t, ["a", "b"], AggOp("count", "int"))
+        eng.execute(t, AggPlan(("a", "b"), AggOp("count", "int")))
         assert t.tid in eng.siread.get("a", set())
         assert t.tid in eng.siread.get("b", set())
 
@@ -246,14 +246,16 @@ class TestEngineAgg:
         eng = Engine("si")
         t = eng.begin()
         eng.write(t, "k1", 42)
-        assert eng.agg(t, ["k0", "k1"], AggOp("sum", "int")) == 42
-        assert eng.agg(t, ["k0", "k1"], AggOp("count_below", "int", 10)) == 1
+        assert eng.execute(
+            t, AggPlan(("k0", "k1"), AggOp("sum", "int"))) == 42
+        assert eng.execute(
+            t, AggPlan(("k0", "k1"), AggOp("count_below", "int", 10))) == 1
 
     def test_rss_agg_has_no_siread_side_effects(self):
         from repro.core.replica import RssSnapshot
         eng = Engine("ssi")
         t = eng.begin(read_only=True, rss=RssSnapshot(0, frozenset()))
-        eng.agg(t, ["a", "b"], AggOp("sum", "int"))
+        eng.execute(t, AggPlan(("a", "b"), AggOp("sum", "int")))
         assert "a" not in eng.siread and "b" not in eng.siread
 
 

@@ -13,7 +13,8 @@ from repro.mvcc import (Engine, MultiNodeHTAP, SingleNodeHTAP,
                         run_multi_node, run_single_node)
 from repro.mvcc.workload import Scale, load_initial, olap_query
 from repro.tensorstore import (ChainVersionStore, PagedMirror,
-                               PagedVersionStore, decode_value, encode_value)
+                               PagedVersionStore, ScanPlan, decode_value,
+                               encode_value)
 
 
 class TestCodec:
@@ -122,20 +123,21 @@ class TestEngineScan:
         eng = Engine("si")
         keys = _run_workload(eng, seed=3)
         t = eng.begin(read_only=True)
-        assert eng.scan(t, keys) == [eng.read(t, k) for k in keys]
+        assert eng.execute(t, ScanPlan(tuple(keys))) == \
+            [eng.read(t, k) for k in keys]
 
     def test_scan_sees_own_writes(self):
         eng = Engine("si")
         t = eng.begin()
         eng.write(t, "k1", 42)
-        assert eng.scan(t, ["k0", "k1"]) == [0, 42]
+        assert eng.execute(t, ScanPlan(("k0", "k1"))) == [0, 42]
 
     def test_ssi_scan_falls_back_to_tracked_reads(self):
         """SSI-tracked transactions must take the per-key path so SIRead
         registration still observes every key."""
         eng = Engine("ssi")
         t = eng.begin(read_only=True)
-        eng.scan(t, ["a", "b"])
+        eng.execute(t, ScanPlan(("a", "b")))
         assert t.tid in eng.siread.get("a", set())
         assert t.tid in eng.siread.get("b", set())
 
@@ -143,7 +145,7 @@ class TestEngineScan:
         eng = Engine("ssi")
         snap = RssSnapshot(lsn=0, txns=frozenset())
         t = eng.begin(read_only=True, rss=snap)
-        eng.scan(t, ["a", "b"])
+        eng.execute(t, ScanPlan(("a", "b")))
         assert "a" not in eng.siread and "b" not in eng.siread
 
 
