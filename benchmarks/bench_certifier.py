@@ -1,0 +1,100 @@
+"""Certifier abort-rate-vs-throughput sweep (certifier x contention).
+
+Replays the contended write-skew stress workload (`repro.mvcc.workload.
+write_skew` via `driver.run_write_skew`) under each commit-certification
+policy and records, per (certifier, contention) cell: commit throughput,
+total/certification abort counts, and the per-AbortReason breakdown.
+
+The headline claim this bench pins down: the commit-order-precise SSI and
+SSN certifiers admit strictly more behavior than the conservative
+structural-pivot rule — strictly fewer certification (writer) aborts at
+equal-or-better commit throughput, at every contention level — while every
+committed history remains serializable (that part is asserted by the test
+suite and `scripts/verify.sh`; here we record the performance side).
+
+Standalone run persists the report to BENCH_kernels.json under the
+``certifier_aborts`` section:  PYTHONPATH=src python -m benchmarks.bench_certifier
+"""
+
+from __future__ import annotations
+
+import time
+
+CERTS = ("conservative-ssi", "commit-order-ssi", "ssn")
+REFINED = ("commit-order-ssi", "ssn")
+
+
+def certifier_sweep(contentions=(0.25, 0.5, 0.9), rounds: int = 2000,
+                    n_clients: int = 8, seed: int = 0) -> dict:
+    """Run the certifier x contention matrix; returns a report dict with
+    one cell per run plus the refined-strictly-better headline checks."""
+    from repro.mvcc import run_write_skew
+
+    sweep: dict = {}
+    for contention in contentions:
+        for cert in CERTS:
+            t0 = time.perf_counter()
+            m, e = run_write_skew(certifier=cert, n_clients=n_clients,
+                                  contention=contention, rounds=rounds,
+                                  seed=seed)
+            wall = time.perf_counter() - t0
+            denom = max(m.oltp_commits + m.oltp_aborts, 1)
+            sweep[f"{cert}:c={contention}"] = {
+                "certifier": m.certifier,
+                "contention": contention,
+                "commits": m.oltp_commits,
+                "aborts": m.oltp_aborts,
+                "writer_aborts": e.stats["writer_aborts"],
+                "ww_aborts": e.stats["ww_aborts"],
+                "by_reason": dict(e.stats["by_reason"]),
+                "abort_rate": round(m.oltp_aborts / denom, 4),
+                "tps": round(m.oltp_commits / rounds, 4),
+                "wall_s": round(wall, 3),
+            }
+
+    checks = []
+    for contention in contentions:
+        base = sweep[f"conservative-ssi:c={contention}"]
+        for cert in REFINED:
+            r = sweep[f"{cert}:c={contention}"]
+            checks.append({
+                "certifier": cert,
+                "contention": contention,
+                "fewer_writer_aborts":
+                    r["writer_aborts"] < base["writer_aborts"],
+                "no_worse_commits": r["commits"] >= base["commits"],
+                "ok": (r["writer_aborts"] < base["writer_aborts"]
+                       and r["commits"] >= base["commits"]),
+            })
+    return {
+        "sweep": sweep,
+        "rounds": rounds,
+        "n_clients": n_clients,
+        "checks": checks,
+        "refined_strictly_better": all(c["ok"] for c in checks),
+    }
+
+
+def bench_rows(report: dict):
+    """CSV rows in the suite-wide ``name,us_per_call,derived`` shape."""
+    for cell, r in report["sweep"].items():
+        yield (f"certifier:{cell}", r["wall_s"] * 1e6 / max(r["commits"], 1),
+               f"commits={r['commits']};aborts={r['aborts']};"
+               f"writer_aborts={r['writer_aborts']};"
+               f"abort_rate={r['abort_rate']}")
+    yield ("certifier:headline", 0,
+           "refined_strictly_fewer_writer_aborts="
+           f"{report['refined_strictly_better']}")
+
+
+def main() -> None:
+    report = certifier_sweep()
+    for name, us, derived in bench_rows(report):
+        print(f"{name},{us:.1f},{derived}")
+    from .persist import persist_bench_sections
+    print(f"bench_kernels_json,0,"
+          f"{persist_bench_sections(certifier_aborts=report)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -130,6 +130,14 @@ def main(smoke: bool = False) -> None:
           f"batched=x{batch_report['headline_speedup']}"
           f"_vs_unbatched_at_N={batch_report['headline_batch']}")
 
+    # ----------------- commit certification (certifier x contention)
+    from .bench_certifier import bench_rows, certifier_sweep
+    cert_report = certifier_sweep(
+        contentions=(0.5,) if smoke else (0.25, 0.5, 0.9),
+        rounds=300 if smoke else 2000)
+    for name, us, derived in bench_rows(cert_report):
+        print(f"{name},{us:.1f},{derived}")
+
     if smoke:
         print("bench_kernels_json,0,skipped_(smoke_mode)")
     else:
@@ -142,7 +150,8 @@ def main(smoke: bool = False) -> None:
                                           replica_lag=lag_report,
                                           scan_agg=agg_report,
                                           group_agg=group_report,
-                                          plan_batch=batch_report)
+                                          plan_batch=batch_report,
+                                          certifier_aborts=cert_report)
         print(f"bench_kernels_json,0,{out_path}")
 
     # --------------------------------------------------------- roofline

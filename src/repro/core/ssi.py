@@ -106,11 +106,15 @@ def fatal_dangerous_structures(h: History) -> list[tuple[int, int, int]]:
     """Dangerous structures satisfying the full Fekete condition: the
     structure can close a cycle only if Tc (the pivot's out-neighbour)
     commits FIRST of the three.  PostgreSQL's commit-time check aborts
-    exactly these; a structure whose Tc commits last is provably benign."""
+    exactly these; a structure whose Tc commits last is provably benign.
+
+    Fekete et al. allow Ta and Tc to coincide (plain two-transaction write
+    skew is the structure Tc -> Tb -> Tc): then "Tc first" only constrains
+    Tc against Tb."""
     out = []
     for (ta, tb, tc) in dangerous_structures(h):
         ec = h.end_pos(tc)
-        if ec < h.end_pos(ta) and ec < h.end_pos(tb):
+        if ec < h.end_pos(tb) and (ta == tc or ec < h.end_pos(ta)):
             out.append((ta, tb, tc))
     return out
 

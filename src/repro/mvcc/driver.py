@@ -19,14 +19,15 @@ from typing import Optional
 from ..core.replica import RssSnapshot
 from ..tensorstore.version_store import (AggPlan, GroupByPlan, MultiAggPlan,
                                          ScanPlan)
-from .engine import SerializationFailure, Status
+from .engine import Engine, SerializationFailure, Status
 from .htap import MultiNodeHTAP, SingleNodeHTAP
 from .workload import (Scale, load_initial, olap_freshness, olap_query,
-                       oltp_transaction)
+                       oltp_transaction, write_skew)
 
 
 @dataclass
 class Metrics:
+    certifier: str = ""          # commit-certification policy of the run
     oltp_commits: int = 0
     oltp_aborts: int = 0
     oltp_retries: int = 0
@@ -131,14 +132,21 @@ class _PlanBatcher:
 
 
 class _OltpClient:
-    def __init__(self, engine, rng: random.Random, sc: Scale, m: Metrics):
+    def __init__(self, engine, rng: random.Random, sc: Scale, m: Metrics,
+                 *, txn_factory=None):
+        """`txn_factory(rng) -> (step generator, name)` swaps the CH-style
+        OLTP mix for another workload (e.g. `workload.write_skew`)."""
         self.engine, self.rng, self.sc, self.m = engine, rng, sc, m
+        self.txn_factory = txn_factory
         self.txn = None
         self.gen = None
         self.pending = None  # value to send into the generator
 
     def _restart(self) -> None:
-        self.gen, self.name = oltp_transaction(self.rng, self.sc)
+        if self.txn_factory is not None:
+            self.gen, self.name = self.txn_factory(self.rng)
+        else:
+            self.gen, self.name = oltp_transaction(self.rng, self.sc)
         read_only = self.name == "order_status"
         self.txn = self.engine.begin(read_only=read_only)
         self.pending = None
@@ -351,20 +359,23 @@ def run_single_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
                     olap_scan: bool = False,
                     paged_olap: bool = False,
                     check_scans: bool = False,
-                    batch_plans: bool = False) -> Metrics:
+                    batch_plans: bool = False,
+                    certifier=None) -> Metrics:
     """olap_scan=True routes OLAP queries through batched ("olap", plan)
     steps served by one plan-execution seam call each; paged_olap=True
     additionally serves protected readers from the WAL-mirrored paged store
     (workload key families reserved contiguously for the dense page-range
     fast path); check_scans=True asserts every plan result equals the
-    per-key engine read path (the oracle); and batch_plans=True collects
+    per-key engine read path (the oracle); batch_plans=True collects
     each round's same-horizon aggregate plans into ONE fused BatchPlan
-    dispatch (cross-reader whole-batch plan fusion)."""
+    dispatch (cross-reader whole-batch plan fusion); and `certifier`
+    selects the OLTP commit-certification policy (`repro.mvcc.certify`)."""
     htap = SingleNodeHTAP(olap_mode, paged=paged_olap,
                           check_scans=check_scans,
-                          reserve_keys=scale.key_families())
+                          reserve_keys=scale.key_families(),
+                          certifier=certifier)
     load_initial(htap.engine, scale)
-    m = Metrics()
+    m = Metrics(certifier=htap.engine.certifier.name)
     rng = random.Random(seed)
     batcher = _PlanBatcher(htap, m) if batch_plans else None
     clients = [_OltpClient(htap.engine, random.Random(rng.random()), scale, m)
@@ -410,7 +421,8 @@ def run_multi_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
                    max_staleness: int = 100,
                    ship_skew: int = 0,
                    freshness_hints: bool = False,
-                   batch_plans: bool = False) -> Metrics:
+                   batch_plans: bool = False,
+                   certifier=None) -> Metrics:
     """N-replica decoupled-storage run.  `ship_skew` staggers the fleet:
     replica i ships every `ship_every * (1 + i * ship_skew)` rounds, so the
     run exercises skewed per-replica lag (the routing policies' input);
@@ -420,10 +432,11 @@ def run_multi_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
                          check_scans=check_scans, n_replicas=n_replicas,
                          route_policy=route_policy,
                          max_staleness=max_staleness,
-                         reserve_keys=scale.key_families())
+                         reserve_keys=scale.key_families(),
+                         certifier=certifier)
     load_initial(htap.primary, scale)
     htap.ship_log()
-    m = Metrics()
+    m = Metrics(certifier=htap.primary.certifier.name)
     rng = random.Random(seed)
     batcher = _PlanBatcher(htap, m) if batch_plans else None
     clients = [_OltpClient(htap.primary, random.Random(rng.random()), scale, m)
@@ -469,3 +482,30 @@ def run_multi_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
     m.olap_avg_lag_records = round(htap.cluster.avg_served_lag(), 2)
     m.olap_avg_predicted_lag = round(htap.cluster.avg_predicted_lag(), 2)
     return m
+
+
+def run_write_skew(*, certifier=None, n_clients: int = 8,
+                   contention: float = 0.5, rounds: int = 4000,
+                   seed: int = 0, record: bool = False
+                   ) -> tuple[Metrics, Engine]:
+    """Contended write-skew stress run (the certifier comparison bench):
+    `n_clients` OLTP clients replay `workload.write_skew` transactions
+    against one SSI engine under the chosen certifier.  Returns
+    `(metrics, engine)` so callers can inspect engine stats, the final
+    rota state (every on-call group must keep >= 1 doctor under any
+    serializable execution), and — with `record=True` — check the Adya
+    history against the `repro.core` serializability oracles."""
+    txn_factory, load, _keys = write_skew(n_clients, contention)
+    engine = Engine("ssi", record=record, certifier=certifier)
+    load(engine)
+    m = Metrics(certifier=engine.certifier.name)
+    rng = random.Random(seed)
+    clients = [_OltpClient(engine, random.Random(rng.random()), None, m,
+                           txn_factory=txn_factory)
+               for _ in range(n_clients)]
+    for rnd in range(rounds):
+        m.rounds = rnd + 1
+        for cl in clients:
+            cl.step()
+        m.max_engine_txns = max(m.max_engine_txns, len(engine.txns))
+    return m, engine

@@ -5,8 +5,10 @@ whose accepted histories satisfy the specification-level checks (asserted by
 property tests).  It implements:
 
   * SI        — snapshot reads (SI-V) + first-committer-wins (SI-W)
-  * SSI       — SI + SIRead-lock rw-antidependency tracking + dangerous-
-                structure aborts (conservative, PostgreSQL-style pivot abort)
+  * SSI       — SI + SIRead-lock rw-antidependency tracking + pluggable
+                commit certification (`repro.mvcc.certify`): conservative
+                PostgreSQL-style pivot aborts by default, commit-order-
+                precise SSI or SSN by configuration
   * SafeSnapshots — READ ONLY DEFERRABLE readers: reader-WAITS until no
                 read/write transaction is active, then reads snapshot without
                 SSI validation (Ports & Grittner)
@@ -45,6 +47,9 @@ class AbortReason(Enum):
     WW_CONFLICT = "first-committer-wins"
     PIVOT = "dangerous-structure pivot"
     INCOMING_PIVOT = "dangerous-structure (in-edge to committed pivot)"
+    FATAL_PIVOT = "fatal dangerous structure (out-neighbour committed first)"
+    FATAL_NEIGHBOUR = "fatal dangerous structure (commit into fatal pivot)"
+    EXCLUSION_WINDOW = "SSN exclusion window (pi <= eta)"
     USER = "user abort"
 
 
@@ -75,11 +80,23 @@ class Txn:
 
 
 class Engine:
-    """mode: 'si' or 'ssi'.  SafeSnapshots/RSS are per-transaction options."""
+    """mode: 'si' or 'ssi'.  SafeSnapshots/RSS are per-transaction options.
 
-    def __init__(self, mode: str = "ssi", *, record: bool = False) -> None:
+    `certifier` selects the commit-certification policy for SSI-tracked
+    transactions (see `repro.mvcc.certify`): a registry name
+    ('conservative' / 'commit-order' / 'ssn'), a `Certifier` instance, or
+    a zero-arg factory.  Default is the conservative structural pivot
+    abort — the seed behaviour.  The engine owns the mechanism (version
+    install, WAL, rw-edge bookkeeping, GC); the certifier owns every
+    serializability abort decision."""
+
+    def __init__(self, mode: str = "ssi", *, record: bool = False,
+                 certifier=None) -> None:
         assert mode in ("si", "ssi")
         self.mode = mode
+        from .certify import make_certifier   # lazy: certify imports us
+        self.certifier = make_certifier(certifier)
+        self.certifier.attach(self)
         self.store = Store()
         # unified read surface over the chain store; HTAP facades may swap in
         # a paged/mirrored VersionStore for the batched OLAP scan path
@@ -96,7 +113,8 @@ class Engine:
         # while concurrency with future writers is possible)
         self.siread: dict[str, set[int]] = {}
         self.stats = {"commits": 0, "aborts": 0, "writer_aborts": 0,
-                      "reader_aborts": 0, "ww_aborts": 0, "gc_versions": 0}
+                      "reader_aborts": 0, "ww_aborts": 0, "gc_versions": 0,
+                      "by_reason": {}}
 
     # -------------------------------------------------------------- lifecycle
     def _tick(self) -> int:
@@ -119,7 +137,15 @@ class Engine:
         self.wal.log_begin(t.tid)
         if self.history is not None:
             self.history.append(op_b(t.tid))
+        if self._tracked(t):
+            self.certifier.on_begin(t)
         return t
+
+    def _tracked(self, t: Txn) -> bool:
+        """Does t participate in SSI conflict tracking / certification?
+        (Exactly the seed gate: RSS / safe-snapshot readers and plain-SI
+        transactions are outside certification.)"""
+        return self.mode == "ssi" and not t.skip_siread
 
     def safe_snapshot_ready(self) -> bool:
         """Deferrable-reader condition: no active read/write transaction."""
@@ -152,15 +178,19 @@ class Engine:
         t.reads[key] = v.writer
         if self.history is not None:
             self.history.append(op_r(t.tid, key, v.writer))
-        if self.mode == "ssi" and not t.skip_siread:
+        if self._tracked(t):
             self.siread.setdefault(key, set()).add(t.tid)
+            self.certifier.on_read(t, v.writer, v.commit_seq)
             # reading an old version while *committed* newer versions exist
             # creates an out-going rw edge to EVERY skipped writer still
             # concurrent with us (PostgreSQL's CheckForSerializableConflictOut
             # fires per skipped tuple version during the scan).
             for ver in ch.versions:
                 if ver.commit_seq > t.begin_seq:
-                    self._add_rw_edge(t, self.txns.get(ver.writer))
+                    writer = self.txns.get(ver.writer)
+                    self.certifier.on_read_skipped_version(t, writer,
+                                                           ver.commit_seq)
+                    self._add_rw_edge(t, writer)
             # ... and so is reading a key an in-progress transaction has an
             # uncommitted write for (the invisible-tuple case).
             for u in list(self.active.values()):
@@ -244,8 +274,8 @@ class Engine:
                 for key in t.writes:
                     if self.store.chain(key).newest().commit_seq > t.begin_seq:
                         raise SerializationFailure(AbortReason.WW_CONFLICT)
-            if self.mode == "ssi" and not t.skip_siread:
-                self._precommit_ssi_check(t)
+            if self._tracked(t):
+                self.certifier.on_precommit(t)
         except SerializationFailure as e:
             self._abort(t, e.reason)
             raise
@@ -262,6 +292,8 @@ class Engine:
             # just-committed reader, for replica-side RSS construction.
             self.wal.log_deps(t.tid, sorted(t.out_rw))
         self.stats["commits"] += 1
+        if self._tracked(t):
+            self.certifier.on_end(t, committed=True)
         self._gc()
 
     def abort(self, t: Txn) -> None:
@@ -280,15 +312,26 @@ class Engine:
         self.stats["aborts"] += 1
         if reason == AbortReason.WW_CONFLICT:
             self.stats["ww_aborts"] += 1
-        elif reason in (AbortReason.PIVOT, AbortReason.INCOMING_PIVOT):
+        elif reason is not AbortReason.USER:
             if t.read_only:
                 self.stats["reader_aborts"] += 1
             else:
                 self.stats["writer_aborts"] += 1
-        # drop edges referencing the aborted txn
-        for other in self.txns.values():
-            other.in_rw.discard(t.tid)
-            other.out_rw.discard(t.tid)
+        self.stats["by_reason"][reason.value] = \
+            self.stats["by_reason"].get(reason.value, 0) + 1
+        # drop edges referencing the aborted txn — via its OWN edge sets
+        # (edges are maintained symmetrically, so t's neighbours are exactly
+        # the txns holding a reference to it; scanning all of `self.txns`
+        # made every abort O(tracked transactions))
+        for nid in t.in_rw | t.out_rw:
+            n = self.txns.get(nid)
+            if n is not None:
+                n.in_rw.discard(t.tid)
+                n.out_rw.discard(t.tid)
+        t.in_rw.clear()
+        t.out_rw.clear()
+        if self._tracked(t):
+            self.certifier.on_end(t, committed=False)
 
     # --------------------------------------------------------------- SSI core
     def _concurrent(self, a: Txn, b: Txn) -> bool:
@@ -307,27 +350,7 @@ class Engine:
             return  # only *vulnerable* (concurrent) rw edges matter
         reader.out_rw.add(writer.tid)
         writer.in_rw.add(reader.tid)
-        self._maybe_abort_pivot(reader, writer)
-
-    def _maybe_abort_pivot(self, reader: Txn, writer: Txn) -> None:
-        """Dangerous structure: T_in -rw-> pivot -rw-> T_out.  Abort the pivot
-        when still active; else abort the active neighbour (PostgreSQL's
-        conservative strategy — never aborts an already-committed txn)."""
-        for cand in (writer, reader):
-            if cand.is_pivot:
-                if cand.status == Status.ACTIVE:
-                    self._abort(cand, AbortReason.PIVOT)
-                    return
-                # pivot already committed: abort an active neighbour
-                for nid in list(cand.in_rw) + list(cand.out_rw):
-                    n = self.txns.get(nid)
-                    if n is not None and n.status == Status.ACTIVE:
-                        self._abort(n, AbortReason.INCOMING_PIVOT)
-                        return
-
-    def _precommit_ssi_check(self, t: Txn) -> None:
-        if t.is_pivot and t.status == Status.ACTIVE:
-            raise SerializationFailure(AbortReason.PIVOT)
+        self.certifier.on_rw_edge(reader, writer)
 
     # --------------------------------------------------------------------- GC
     def _gc(self) -> None:
@@ -369,6 +392,7 @@ class Engine:
             self.siread[key] -= deadset
             if not self.siread[key]:
                 del self.siread[key]
+        self.certifier.on_gc(deadset)
 
     def prune_versions(self, floor_seq: int) -> int:
         n = self.store.prune(floor_seq)

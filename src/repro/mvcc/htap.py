@@ -56,10 +56,16 @@ from .store import Store
 class SingleNodeHTAP:
     def __init__(self, olap_mode: str = "ssi+rss", *, paged: bool = False,
                  check_scans: bool = False,
-                 reserve_keys: Optional[Sequence[str]] = None) -> None:
+                 reserve_keys: Optional[Sequence[str]] = None,
+                 certifier=None) -> None:
+        """`certifier` picks the OLTP commit-certification policy
+        (`repro.mvcc.certify`): name / instance / factory; None keeps the
+        conservative structural SSI abort.  OLAP behaviour — RSS
+        construction, the WAL deps messages it feeds on — is certifier-
+        independent by design."""
         assert olap_mode in ("ssi", "ssi+safesnapshots", "ssi+rss")
         self.olap_mode = olap_mode
-        self.engine = Engine("ssi")
+        self.engine = Engine("ssi", certifier=certifier)
         self.rss_manager = RSSManager()
         self.prot = PRoTManager(self.rss_manager)
         self.check_scans = check_scans
@@ -355,11 +361,17 @@ class MultiNodeHTAP:
     def __init__(self, olap_mode: str = "ssi+rss", *, paged_olap: bool = False,
                  check_scans: bool = False, n_replicas: int = 1,
                  route_policy="freshest", max_staleness: int = 100,
-                 reserve_keys: Optional[Sequence[str]] = None) -> None:
+                 reserve_keys: Optional[Sequence[str]] = None,
+                 certifier=None) -> None:
+        """`certifier` configures the PRIMARY's commit certification (see
+        `repro.mvcc.certify`).  Replicas replay begin/commit/abort + deps
+        WAL records, which are certifier-independent: only WHICH txns
+        commit varies, never the shape of a committed txn's records — so
+        replica-side RSS construction is untouched by the choice."""
         assert olap_mode in ("ssi+si", "ssi+rss")
         assert n_replicas >= 1
         self.olap_mode = olap_mode
-        self.primary = Engine("ssi")
+        self.primary = Engine("ssi", certifier=certifier)
         replicas = [Replica(with_rss=(olap_mode == "ssi+rss"),
                             paged=paged_olap, check_scans=check_scans,
                             reserve_keys=reserve_keys)

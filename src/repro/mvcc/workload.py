@@ -277,6 +277,61 @@ def olap_freshness(name: str):
     return OLAP_FRESHNESS.get(name)
 
 
+# ----------------------------------------------------------- write-skew bench
+def write_skew(n_clients: int, contention: float = 0.5, *,
+               doctors: int = 6):
+    """Doctor-on-call write-skew stress generator (the classic SSI
+    anomaly, grown from the ddia-study-practice snippet into a driver/
+    bench workload): doctors are partitioned into on-call groups; each
+    transaction reads its whole group's rota, then — believing at least
+    one colleague stays on call — writes only its OWN slot.  Two
+    concurrent sign-offs in one group are write skew: disjoint writes,
+    serializable only if a certifier kills one.
+
+    `contention` in [0, 1] sets how many clients share a group:  0 gives
+    ~one group per client (almost no conflicts), 1 gives a single group
+    everyone fights over.  Returns `(txn_factory, load, keys)`:
+    `txn_factory(rng) -> (step generator, name)` (the `_OltpClient`
+    transaction-factory interface), `load(engine)` commits the initial
+    everyone-on-call rota, and `keys` lists the rota keys."""
+    assert 0.0 <= contention <= 1.0
+    groups = max(1, round(n_clients * (1.0 - contention)))
+    keys = [f"oncall:{g}:{d}" for g in range(groups)
+            for d in range(doctors)]
+
+    def load(engine) -> None:
+        t = engine.begin()
+        for k in keys:
+            engine.write(t, k, 1)          # 1 = on call
+        engine.commit(t)
+
+    def txn_factory(rng: random.Random):
+        return _write_skew_txn(rng, groups, doctors), "write_skew"
+
+    return txn_factory, load, keys
+
+
+def _write_skew_txn(rng: random.Random, groups: int,
+                    doctors: int) -> Iterator[Step]:
+    g = rng.randrange(groups)
+    me = rng.randrange(doctors)
+    on_call = 0
+    mine = 0
+    for d in range(doctors):
+        v = yield ("r", f"oncall:{g}:{d}")
+        v = v if isinstance(v, int) else 0
+        on_call += v
+        if d == me:
+            mine = v
+    if mine and on_call > 1:
+        # someone else is on call: sign off (the write-skew write)
+        yield ("w", f"oncall:{g}:{me}", 0)
+    elif not mine:
+        # understaffed rota oscillates back: go on call again
+        yield ("w", f"oncall:{g}:{me}", 1)
+    yield ("out", on_call)
+
+
 def olap_query(rng: random.Random, sc: Scale, *, batched: bool = False):
     fn = OLAP_QUERIES[rng.randrange(len(OLAP_QUERIES))]
     return fn(rng, sc, batched=batched), fn.__name__

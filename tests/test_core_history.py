@@ -49,6 +49,37 @@ class TestReadOnlyAnomaly:
         assert is_serializable(h2)
 
 
+class TestFatalStructures:
+    """The full Fekete condition, including the Ta == Tc coincidence."""
+
+    def test_two_txn_write_skew_is_fatal(self):
+        """Plain write skew is the structure T2 -rw-> T1 -rw-> T2 (Ta and
+        Tc coincide): non-serializable, so `ssi_accepts` must reject it —
+        the commit-order filter may only compare Tc against Tb."""
+        h = History([b(1), b(2),
+                     r(1, "x", T0), r(1, "y", T0),
+                     r(2, "x", T0), r(2, "y", T0),
+                     w(1, "x"), w(2, "y"), c(1), c(2)])
+        assert is_si_history(h)
+        assert not is_serializable(h)
+        assert not ssi_accepts(h)
+
+    def test_hs_fatal_pivot_rejected(self):
+        assert not ssi_accepts(read_only_anomaly_example())
+
+    def test_structure_with_tc_last_is_benign(self):
+        """Ta -rw-> Tb -rw-> Tc with Tc committing LAST of the three:
+        dangerous structurally but provably benign — accepted."""
+        h = History([b(1), b(2), b(3),
+                     r(1, "a", T0),                  # T1 -rw-> T2 (w a)
+                     r(2, "b", T0),                  # T2 -rw-> T3 (w b)
+                     w(2, "a"), w(3, "b"), w(1, "z"),
+                     c(1), c(2), c(3)])
+        assert dangerous_structures(h)
+        assert is_serializable(h)
+        assert ssi_accepts(h)
+
+
 class TestDefinitions:
     def test_clear_done_obscure(self):
         h = History([b(1), w(1, "x"), c(1),          # ends before T2 begins

@@ -169,6 +169,25 @@ class TestEngineGC:
         assert peak < 60, peak                  # bounded, not O(history)
         assert sum(len(s) for s in e.siread.values()) < 60
 
+    def test_aborted_txn_edges_drop_and_drain(self):
+        """Aborting drops the txn from its neighbours' edge sets via its
+        OWN in_rw/out_rw (not a scan of all tracked txns), and the edge
+        state still drains under GC afterwards."""
+        e = Engine("ssi")
+        for i in range(150):
+            r = e.begin(read_only=True)
+            e.read(r, "k")
+            w = e.begin()
+            e.write(w, "k", i)                  # r -rw-> w edge
+            e.commit(w)
+            e.abort(r)                          # user abort, edge intact
+            assert not r.in_rw and not r.out_rw
+            assert all(r.tid not in (x.in_rw | x.out_rw)
+                       for x in e.txns.values()), i
+            assert len(e.txns) < 20, (i, len(e.txns))
+        assert e.stats["aborts"] == 150
+        assert e.stats["by_reason"] == {"user abort": 150}
+
     def test_gc_keeps_edges_spanning_the_horizon(self):
         """Only edges between two ended-below-horizon txns are released:
         an edge whose writer ends above the horizon (a long-running reader
