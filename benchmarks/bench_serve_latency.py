@@ -1,0 +1,159 @@
+"""Serve-path latency characterization + observability overhead bound.
+
+Two reports:
+
+  * `serve_latency_sweep` — end-to-end OLAP serve latency (p50/p95/p99)
+    per plan kind, with the per-stage breakdown (route / resolve /
+    kernel dispatch / finalize) and OLTP commit latency, swept over
+    plan batching (single-node) and routing policy (multi-node).  The
+    numbers come straight from the registry's fixed-bucket histograms —
+    the same series verify.sh prints — so the bench measures exactly
+    what production-style scraping would see.
+
+  * `overhead_report` — the cost of the observability layer itself:
+    identical workloads run with timing instrumentation ON (default)
+    and STUBBED (`set_timing(False)` turns tick/tock into no-ops), in
+    interleaved pairs; the minimum pairwise ratio bounds the true
+    overhead from above modulo noise.  Asserted <= OVERHEAD_BOUND_PCT.
+
+Standalone: ``PYTHONPATH=src python -m benchmarks.bench_serve_latency``
+(persists the ``serve_latency`` section of BENCH_kernels.json; --smoke
+skips persistence).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.mvcc import run_multi_node, run_single_node
+from repro.obs import TRACER, set_timing
+
+# asserted ceiling for always-on instrumentation (counters + histogram
+# observes) relative to a tick/tock-stubbed run of the same workload
+OVERHEAD_BOUND_PCT = 5.0
+
+_SINGLE = dict(olap_mode="ssi+rss", oltp_clients=3, olap_clients=3,
+               olap_scan=True, paged_olap=True)
+_MULTI = dict(_SINGLE, n_replicas=2)
+
+
+def _collect(m) -> dict:
+    return {
+        "serve": m.serve_latency,
+        "by_plan": m.serve_latency_by_plan,
+        "stages": m.serve_stage_latency,
+        "oltp_commit": m.oltp_commit_latency,
+    }
+
+
+def serve_latency_sweep(*, rounds: int = 1500,
+                        policies=("freshest", "round_robin",
+                                  "bounded_staleness",
+                                  "predicted_staleness")) -> dict:
+    """plan kind x batching x routing policy -> latency summaries."""
+    sweep: dict[str, dict] = {}
+    for batching in (False, True):
+        m = run_single_node(rounds=rounds, seed=42, batch_plans=batching,
+                            **_SINGLE)
+        sweep[f"single|batch={'on' if batching else 'off'}"] = _collect(m)
+    for pol in policies:
+        m = run_multi_node(rounds=rounds, seed=42, route_policy=pol,
+                           **_MULTI)
+        sweep[f"multi|{pol}"] = _collect(m)
+    return {"sweep": sweep, "rounds": rounds}
+
+
+def overhead_report(*, rounds: int = 800, pairs: int = 3) -> dict:
+    """Wall-clock ratio of instrumented vs instrumentation-stubbed runs.
+
+    The first (untimed) run warms JIT caches so compilation doesn't land
+    in either side; pairs are interleaved so drift hits both equally and
+    the MIN ratio is the honest upper bound on steady-state overhead."""
+    args = dict(_SINGLE, rounds=rounds, seed=7)
+    TRACER.set_enabled(False)       # span capture off on both sides
+    try:
+        run_single_node(**args)     # warmup: JIT compile + page build
+        ratios = []
+        for _ in range(pairs):
+            set_timing(False)
+            t0 = time.perf_counter()
+            run_single_node(**args)
+            stubbed = time.perf_counter() - t0
+            set_timing(True)
+            t0 = time.perf_counter()
+            run_single_node(**args)
+            timed = time.perf_counter() - t0
+            ratios.append(timed / stubbed)
+    finally:
+        set_timing(True)
+        TRACER.set_enabled(None)
+    overhead_pct = round((min(ratios) - 1.0) * 100.0, 2)
+    report = {
+        "pair_ratios": [round(r, 4) for r in ratios],
+        "overhead_pct": overhead_pct,
+        "bound_pct": OVERHEAD_BOUND_PCT,
+    }
+    assert overhead_pct <= OVERHEAD_BOUND_PCT, \
+        f"observability overhead {overhead_pct}% exceeds " \
+        f"{OVERHEAD_BOUND_PCT}% bound: {report}"
+    return report
+
+
+def bench_rows(report: dict) -> list[tuple[str, float, str]]:
+    """CSV rows (name, us_per_call, derived) for benchmarks.run."""
+    rows: list[tuple[str, float, str]] = []
+    for cfg, r in report["sweep"].items():
+        s = r["serve"]
+        rows.append((f"serve_latency:{cfg}", s["p50_us"],
+                     f"p95={s['p95_us']}us;p99={s['p99_us']}us;"
+                     f"n={s['count']}"))
+        for plan, ps in sorted(r["by_plan"].items()):
+            rows.append((f"serve_latency:{cfg}:{plan}", ps["p50_us"],
+                         f"p99={ps['p99_us']}us;n={ps['count']}"))
+        stage_bits = ";".join(
+            f"{st}={r['stages'][st]['p50_us']}us"
+            for st in ("route", "resolve", "dispatch", "finalize")
+            if st in r["stages"])
+        rows.append((f"serve_stages:{cfg}", 0.0, stage_bits or "none"))
+        c = r["oltp_commit"]
+        rows.append((f"commit_latency:{cfg}", c["p50_us"],
+                     f"p99={c['p99_us']}us;n={c['count']}"))
+    ov = report.get("overhead")
+    if ov:
+        rows.append(("obs_overhead", 0.0,
+                     f"{ov['overhead_pct']}%_vs_stubbed"
+                     f"_(bound={ov['bound_pct']}%);"
+                     f"pairs={ov['pair_ratios']}"))
+    return rows
+
+
+def full_report(*, smoke: bool = False) -> dict:
+    report = serve_latency_sweep(
+        rounds=300 if smoke else 1500,
+        policies=("round_robin",) if smoke else ("freshest", "round_robin",
+                                                 "bounded_staleness",
+                                                 "predicted_staleness"))
+    report["overhead"] = overhead_report(rounds=200 if smoke else 800,
+                                         pairs=2 if smoke else 3)
+    return report
+
+
+def main(smoke: bool = False) -> None:
+    report = full_report(smoke=smoke)
+    print("name,us_per_call,derived")
+    for name, us, derived in bench_rows(report):
+        print(f"{name},{us:.1f},{derived}")
+    if smoke:
+        print("bench_kernels_json,0,skipped_(smoke_mode)")
+        return
+    from .persist import persist_bench_sections
+    print(f"bench_kernels_json,0,"
+          f"{persist_bench_sections(serve_latency=report)}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-scale pass; does not write BENCH_kernels.json")
+    main(smoke=ap.parse_args().smoke)

@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV rows covering:
   * kernel micro-benchmarks (CPU ref timing + TPU roofline),
   * the scan-vs-fused-agg executor sweep (host decode eliminated),
   * RSS freshness-lag characterization (beyond-paper),
+  * serve-path p50/p95/p99 latency per plan kind + stage breakdown and
+    the observability-overhead bound (benchmarks.bench_serve_latency),
   * the roofline summary when dry-run artifacts exist.
 
 ``--smoke`` exercises every bench entry point at tiny scale (CI: the
@@ -130,6 +132,13 @@ def main(smoke: bool = False) -> None:
           f"batched=x{batch_report['headline_speedup']}"
           f"_vs_unbatched_at_N={batch_report['headline_batch']}")
 
+    # ------------- serve-path latency (p50/p99) + observability overhead
+    from .bench_serve_latency import bench_rows as serve_rows
+    from .bench_serve_latency import full_report as serve_report_fn
+    serve_report = serve_report_fn(smoke=smoke)
+    for name, us, derived in serve_rows(serve_report):
+        print(f"{name},{us:.1f},{derived}")
+
     # ----------------- commit certification (certifier x contention)
     from .bench_certifier import bench_rows, certifier_sweep
     cert_report = certifier_sweep(
@@ -151,7 +160,8 @@ def main(smoke: bool = False) -> None:
                                           scan_agg=agg_report,
                                           group_agg=group_report,
                                           plan_batch=batch_report,
-                                          certifier_aborts=cert_report)
+                                          certifier_aborts=cert_report,
+                                          serve_latency=serve_report)
         print(f"bench_kernels_json,0,{out_path}")
 
     # --------------------------------------------------------- roofline

@@ -167,8 +167,66 @@ print("certifier matrix OK (fused == oracle; RSS abort-/wait-free; "
 EOF
 
 echo
+echo "== observability (both facades traced; invariants; p50/p99 table) =="
+REPRO_TRACE=1 python - <<'EOF'
+from repro.mvcc import run_multi_node, run_single_node
+from repro.obs import REGISTRY, TRACER
+
+assert TRACER.enabled            # REPRO_TRACE=1 reached the tracer
+
+
+def table(tag, m):
+    print(f"  {tag:28s} {'n':>5s} {'p50_us':>9s} {'p99_us':>10s}")
+    rows = [("serve (all plans)", m.serve_latency)]
+    rows += sorted(m.serve_latency_by_plan.items())
+    rows += [(f"stage:{k}", v) for k, v in
+             sorted(m.serve_stage_latency.items())]
+    rows.append(("oltp_commit", m.oltp_commit_latency))
+    for name, s in rows:
+        print(f"  {name:28s} {s['count']:5d} {s['p50_us']:9.1f} "
+              f"{s['p99_us']:10.1f}")
+
+
+def check(m, *, engine_commits):
+    steps = (m.olap_scan_steps + m.olap_agg_steps +
+             m.olap_multi_agg_steps + m.olap_group_steps)
+    by_plan = m.serve_latency_by_plan
+    unbatched = sum(v["count"] for k, v in by_plan.items()
+                    if k != "BatchPlan")
+    fused = by_plan.get("BatchPlan", {"count": 0})["count"]
+    # every counted plan step served exactly once (solo or fused)
+    assert unbatched == steps - m.olap_batched_plans
+    assert fused == m.olap_batch_dispatches
+    assert m.serve_latency["count"] == unbatched + fused > 0
+    # mirror-layer dispatch accounting == kernel-layer launch accounting
+    assert m.olap_agg_dispatches == m.olap_kernel_dispatches > 0
+    # engine-layer commits == driver-observed commits; the commit
+    # histogram observes successes only
+    assert REGISTRY.total("engine_commits") == engine_commits
+    assert m.oltp_commit_latency["count"] == engine_commits
+    # span trees balanced: opened == closed, stack drained
+    assert TRACER.opened == TRACER.closed and TRACER.depth == 0
+
+
+args = dict(olap_mode="ssi+rss", oltp_clients=3, olap_clients=3,
+            rounds=600, seed=13, olap_scan=True, paged_olap=True,
+            batch_plans=True)
+ms = run_single_node(**args)
+check(ms, engine_commits=ms.oltp_commits + ms.olap_commits)
+table("single-node (batched)", ms)
+mm = run_multi_node(**args, n_replicas=2, route_policy="bounded_staleness")
+check(mm, engine_commits=mm.oltp_commits)   # OLAP never hits the primary
+table("multi-node N=2 (batched)", mm)
+print("  most recent trace tree:")
+print("\n".join(f"    {l}" for l in TRACER.render(limit=1).splitlines()))
+print("observability OK (latency recorded on both facades; cross-layer "
+      "counters consistent; span trees balanced)")
+EOF
+
+echo
 echo "== examples (smoke mode: demos must not rot) =="
-for ex in quickstart anomaly_demo paged_snapshot_reads cluster_fanout; do
+for ex in quickstart anomaly_demo paged_snapshot_reads cluster_fanout \
+          observability_demo; do
     python "examples/$ex.py" > /dev/null
     echo "example OK: $ex"
 done

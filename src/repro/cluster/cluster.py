@@ -31,11 +31,16 @@ from __future__ import annotations
 from collections import deque
 from typing import Any, Iterable, Optional, Sequence, Union
 
+from ..obs import (REGISTRY, TRACER, CounterList, StatsView, tick, tock)
 from ..tensorstore.version_store import Plan
 from .routing import Freshest, RoutingPolicy, make_policy
 
 # handle: (kind, replica_idx, reader_id, snapshot)
 SnapshotHandle = tuple
+
+# the serve path's route stage: policy choice + cadence/ship decision +
+# snapshot pin (the resolve/dispatch/finalize stages live in the mirror)
+_ROUTE_H = REGISTRY.histogram("olap_stage_seconds", stage="route")
 
 
 class ReplicaCluster:
@@ -65,15 +70,21 @@ class ReplicaCluster:
                                         for _ in self.replicas]
         self._last_ship_lsn: list[int] = [primary.wal.head_lsn
                                           for _ in self.replicas]
-        self.stats: dict[str, Any] = {
-            "served": [0] * len(self.replicas),
-            "acquires": 0,
-            "ship_then_serve": 0,
-            "scheduled_ships": 0,       # cadence-due ships run at serve
-            "lag_records_sum": 0,       # observed, summed over served snaps
-            "predicted_lag_sum": 0,     # predicted at routing time, ditto
-            "truncated_records": 0,
-        }
+        # registry-backed accounting (series cluster_*), dict-shaped view;
+        # "served" is a per-replica counter family (cluster_served{replica=i})
+        lbl = {"cluster": REGISTRY.scope("cluster"),
+               "policy": self.policy.name}
+        self.stats = StatsView(
+            REGISTRY, "cluster",
+            ("acquires",
+             "ship_then_serve",
+             "scheduled_ships",         # cadence-due ships run at serve
+             "lag_records_sum",         # observed, summed over served snaps
+             "predicted_lag_sum",       # predicted at routing time, ditto
+             "truncated_records"),
+            labels=lbl,
+            sub={"served": CounterList(REGISTRY, "cluster_served",
+                                       len(self.replicas), labels=lbl)})
 
     def __len__(self) -> int:
         return len(self.replicas)
@@ -158,36 +169,45 @@ class ReplicaCluster:
         emergency round.  When no replica satisfies the staleness bound,
         ship-then-serve: catch the freshest replica up synchronously, then
         serve it."""
-        idx = self.policy.choose(self, max_lag=max_lag)
-        predicted = self.predicted_lag(idx) if idx is not None else 0
-        if idx is None:
-            idx = self.freshest_idx()
-            predicted = 0                  # served post-ship: lag ~0
-            self.ship(idx, record_cadence=False)
-            self.stats["ship_then_serve"] += 1
-        elif getattr(self.policy, "predictive", False) and \
-                predicted < self.lag_records(idx):
-            # the prediction was load-bearing: this replica only met the
-            # staleness bound because its imminent ship counts as run —
-            # run it (cadence-owed work pulled forward, not an emergency
-            # round).  A replica whose OBSERVED lag already satisfies the
-            # bound is served as-is: no ship, no extra work.
-            bound = self.policy.effective_bound(max_lag)
-            if bound is not None and self.lag_records(idx) > bound:
-                self.ship(idx, record_cadence=False)
-                self.stats["scheduled_ships"] += 1
+        t0 = tick()
+        with TRACER.span("route", policy=self.policy.name):
+            idx = self.policy.choose(self, max_lag=max_lag)
+            predicted = self.predicted_lag(idx) if idx is not None else 0
+            if idx is None:
+                idx = self.freshest_idx()
+                predicted = 0                  # served post-ship: lag ~0
+                with TRACER.span("ship_then_serve", replica=idx):
+                    self.ship(idx, record_cadence=False)
+                self.stats["ship_then_serve"] += 1
+            elif getattr(self.policy, "predictive", False) and \
+                    predicted < self.lag_records(idx):
+                # the prediction was load-bearing: this replica only met
+                # the staleness bound because its imminent ship counts as
+                # run — run it (cadence-owed work pulled forward, not an
+                # emergency round).  A replica whose OBSERVED lag already
+                # satisfies the bound is served as-is: no ship, no extra
+                # work.
+                bound = self.policy.effective_bound(max_lag)
+                if bound is not None and self.lag_records(idx) > bound:
+                    with TRACER.span("scheduled_ship", replica=idx):
+                        self.ship(idx, record_cadence=False)
+                    self.stats["scheduled_ships"] += 1
+                else:
+                    predicted = self.lag_records(idx)   # served unshipped
+            self.stats["acquires"] += 1
+            self.stats["served"][idx] += 1
+            self.stats["predicted_lag_sum"] += predicted
+            self.stats["lag_records_sum"] += self.lag_records(idx)
+            rep = self.replicas[idx]
+            TRACER.annotate(replica=idx)
+            if rep.with_rss:
+                rid, snap = rep.rss_snapshot()
+                handle = ("rss", idx, rid, snap)
             else:
-                predicted = self.lag_records(idx)   # served unshipped
-        self.stats["acquires"] += 1
-        self.stats["served"][idx] += 1
-        self.stats["predicted_lag_sum"] += predicted
-        self.stats["lag_records_sum"] += self.lag_records(idx)
-        rep = self.replicas[idx]
-        if rep.with_rss:
-            rid, snap = rep.rss_snapshot()
-            return ("rss", idx, rid, snap)
-        rid, seq = rep.si_snapshot_pinned()
-        return ("si", idx, rid, seq)
+                rid, seq = rep.si_snapshot_pinned()
+                handle = ("si", idx, rid, seq)
+        tock(_ROUTE_H, t0)
+        return handle
 
     def avg_served_lag(self) -> float:
         """Mean observed replication lag (WAL records) of served snapshots —

@@ -38,6 +38,7 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Iterable, Mapping, Optional
 
+from ..obs import REGISTRY, StatsView
 from .rss import IncrementalRss, advance, construct_rss_ssi
 from .wal import Wal, WalRecord, effective_commit_seq
 
@@ -106,7 +107,9 @@ class RSSManager:
         self._snapshot: RssSnapshot = RssSnapshot(0, frozenset(),
                                                   member_seqs=())
         self.members_total = 0               # monotone member count
-        self.stats = {"gc_txns": 0, "edges_pruned_pull": 0}
+        self.stats = StatsView(REGISTRY, "rss",
+                               ("gc_txns", "edges_pruned_pull"),
+                               labels={"rss": REGISTRY.scope("rss")})
 
     @property
     def rw_out(self) -> dict[int, set[int]]:

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...obs import REGISTRY, StatsView
 from ..config import resolve_interpret
 from .kernel import (rss_scan_agg, rss_scan_agg_chunked,
                      rss_scan_agg_grouped, tree_fold_partials)
@@ -62,17 +63,17 @@ GROUPED_MODES = ("host", "flat", "chunked")
 HOST_MODE_MAX_PAGES = 64
 FLAT_MODE_MAX_GROUPS = 32
 
-# process-wide launch accounting (reset per measurement window)
-LAUNCH_STATS = {"dispatches": 0, "pallas_calls": 0, "host": 0, "flat": 0,
-                "chunked": 0, "block_shrinks": 0, "overflow_fallbacks": 0}
+# process-wide launch accounting — a registry view (series
+# kernel_launch_*), so snapshots/export/reset compose with every other
+# layer's metrics; dict-shaped API preserved for existing readers
+LAUNCH_STATS = StatsView(REGISTRY, "kernel_launch",
+                         ("dispatches", "pallas_calls", "host", "flat",
+                          "chunked", "block_shrinks", "overflow_fallbacks"))
 
 
 def reset_launch_stats() -> dict:
-    """Zero LAUNCH_STATS and return the pre-reset snapshot."""
-    snap = dict(LAUNCH_STATS)
-    for k in LAUNCH_STATS:
-        LAUNCH_STATS[k] = 0
-    return snap
+    """Atomically zero LAUNCH_STATS and return the pre-reset snapshot."""
+    return LAUNCH_STATS.reset()
 
 
 def select_grouped_mode(n_pages: int, n_groups: int, n_plans: int = 1, *,

@@ -17,6 +17,7 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 from ..core.replica import RssSnapshot
+from ..obs import REGISTRY, reset_run
 from ..tensorstore.version_store import (AggPlan, GroupByPlan, MultiAggPlan,
                                          ScanPlan)
 from .engine import Engine, SerializationFailure, Status
@@ -66,6 +67,15 @@ class Metrics:
     olap_avg_lag_records: float = 0.0  # mean served-snapshot lag (observed)
     olap_avg_predicted_lag: float = 0.0  # mean lag predicted at routing
     gc_versions_pruned: int = 0     # chain versions pruned cluster-wide
+    # kernel-layer launch accounting (registry series kernel_launch_*)
+    olap_kernel_dispatches: int = 0
+    olap_kernel_pallas_calls: int = 0
+    # latency distributions (registry histograms; {count, sum_us, p50_us,
+    # p95_us, p99_us} summaries — no samples stored anywhere)
+    serve_latency: dict = field(default_factory=dict)          # merged
+    serve_latency_by_plan: dict = field(default_factory=dict)  # per plan kind
+    serve_stage_latency: dict = field(default_factory=dict)    # per stage
+    oltp_commit_latency: dict = field(default_factory=dict)
 
     def oltp_tps(self) -> float:
         return self.oltp_commits / max(self.rounds, 1)
@@ -100,6 +110,35 @@ class Metrics:
         """Mean plans served per fused multi-plan dispatch (1.0 = no
         cross-reader batching happened)."""
         return self.olap_batched_plans / max(self.olap_batch_dispatches, 1)
+
+
+def _harvest_obs(m: Metrics) -> None:
+    """Snapshot the run's layer metrics out of the registry into the
+    Metrics record.  ONE harvest path for both architectures: family
+    totals sum over every instance label set (mirrors of all replicas,
+    the kernel layer's launch counters), so single-node assignment and
+    multi-node summation can never diverge again — the registry was reset
+    at run start, so totals are exactly this run's activity."""
+    tot = REGISTRY.totals()
+    m.olap_dense_range_hits = tot.get("mirror_range_dense", 0)
+    m.olap_dense_range_misses = tot.get("mirror_range_gather", 0)
+    m.olap_agg_dispatches = tot.get("mirror_exec_agg_dispatches", 0)
+    m.olap_mode_flat = tot.get("mirror_exec_mode_flat", 0)
+    m.olap_mode_chunked = tot.get("mirror_exec_mode_chunked", 0)
+    m.olap_mode_host = tot.get("mirror_exec_mode_host", 0)
+    m.olap_kernel_dispatches = tot.get("kernel_launch_dispatches", 0)
+    m.olap_kernel_pallas_calls = tot.get("kernel_launch_pallas_calls", 0)
+    m.serve_latency = REGISTRY.hist_summary("olap_serve_seconds")
+    m.serve_latency_by_plan = REGISTRY.hist_group("olap_serve_seconds",
+                                                  "plan")
+    m.serve_stage_latency = REGISTRY.hist_group("olap_stage_seconds",
+                                                "stage")
+    m.oltp_commit_latency = REGISTRY.hist_summary("oltp_commit_seconds")
+    # peaks as gauges, so snapshot()/export surfaces them alongside the
+    # counter families
+    REGISTRY.gauge("driver_peak_engine_txns").track_max(m.max_engine_txns)
+    REGISTRY.gauge("driver_peak_rss_tracked").track_max(m.max_rss_tracked)
+    REGISTRY.gauge("driver_peak_wal_records").track_max(m.max_wal_records)
 
 
 class _PlanBatcher:
@@ -385,6 +424,10 @@ def run_single_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
                 for _ in range(olap_clients)]
     if olap_mode == "ssi+rss":
         htap.refresh_rss()
+    # fresh measurement window: zero every registry series (incl. the
+    # kernel layer's LAUNCH_STATS and any prior run's engines/mirrors)
+    # and drop captured traces — back-to-back runs both start from zero
+    reset_run()
     for rnd in range(rounds):
         m.rounds = rnd + 1
         if olap_mode == "ssi+rss" and rnd % rss_refresh_every == 0:
@@ -398,14 +441,7 @@ def run_single_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
                                 htap.rss_manager.tracked_txns())
         m.max_wal_records = max(m.max_wal_records,
                                 len(htap.engine.wal.records))
-    if htap.mirror is not None:
-        m.olap_dense_range_hits = htap.mirror.range_stats["dense"]
-        m.olap_dense_range_misses = htap.mirror.range_stats["gather"]
-        es = htap.mirror.exec_stats
-        m.olap_agg_dispatches = es["agg_dispatches"]
-        m.olap_mode_flat = es["mode_flat"]
-        m.olap_mode_chunked = es["mode_chunked"]
-        m.olap_mode_host = es["mode_host"]
+    _harvest_obs(m)
     return m
 
 
@@ -446,6 +482,7 @@ def run_multi_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
                                  freshness_hints=freshness_hints,
                                  batcher=batcher)
                 for _ in range(olap_clients)]
+    reset_run()    # fresh measurement window (see run_single_node)
     for rnd in range(rounds):
         m.rounds = rnd + 1
         for i in range(n_replicas):   # asynchronous streaming replication,
@@ -466,15 +503,7 @@ def run_multi_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
                                         rep.rss_manager.tracked_txns())
         m.max_wal_records = max(m.max_wal_records,
                                 len(htap.primary.wal.records))
-    for rep in htap.cluster.replicas:
-        if rep.mirror is not None:
-            m.olap_dense_range_hits += rep.mirror.range_stats["dense"]
-            m.olap_dense_range_misses += rep.mirror.range_stats["gather"]
-            es = rep.mirror.exec_stats
-            m.olap_agg_dispatches += es["agg_dispatches"]
-            m.olap_mode_flat += es["mode_flat"]
-            m.olap_mode_chunked += es["mode_chunked"]
-            m.olap_mode_host += es["mode_host"]
+    _harvest_obs(m)
     st = htap.cluster.stats
     m.olap_served_by = list(st["served"])
     m.olap_ship_then_serve = st["ship_then_serve"]
@@ -503,9 +532,15 @@ def run_write_skew(*, certifier=None, n_clients: int = 8,
     clients = [_OltpClient(engine, random.Random(rng.random()), None, m,
                            txn_factory=txn_factory)
                for _ in range(n_clients)]
+    reset_run()    # fresh measurement window (see run_single_node)
     for rnd in range(rounds):
         m.rounds = rnd + 1
         for cl in clients:
             cl.step()
         m.max_engine_txns = max(m.max_engine_txns, len(engine.txns))
+    _harvest_obs(m)
+    # the engine outlives this measurement window: detach its stats into a
+    # plain dict so a later run's registry-wide reset can't zero the copy
+    # the caller inspects (e.g. comparing engines across certifier runs)
+    engine.stats = engine.stats.detach()
     return m, engine

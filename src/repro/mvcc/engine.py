@@ -32,6 +32,7 @@ from ..core.history import History, b as op_b, r as op_r, w as op_w, \
     c as op_c, a as op_a
 from ..core.replica import RssSnapshot
 from ..core.wal import Wal, WalRecord
+from ..obs import REGISTRY, TRACER, LabeledCounterMap, StatsView, tick, tock
 from ..tensorstore.version_store import (ChainVersionStore, Plan,
                                          VersionStore, apply_plan, plan_keys)
 from .store import Store, Version
@@ -112,9 +113,21 @@ class Engine:
         # SIRead "locks": key -> list of reader txn ids (kept past commit
         # while concurrency with future writers is possible)
         self.siread: dict[str, set[int]] = {}
-        self.stats = {"commits": 0, "aborts": 0, "writer_aborts": 0,
-                      "reader_aborts": 0, "ww_aborts": 0, "gc_versions": 0,
-                      "by_reason": {}}
+        # registry-backed stats (series engine_* / engine_aborts_by_reason):
+        # dict-shaped view per instance — the `engine` scope label keeps two
+        # engines (e.g. per-test, or oracle vs primary) from aliasing, the
+        # `certifier` label gives per-policy breakdowns for free
+        lbl = {"engine": REGISTRY.scope("engine"),
+               "certifier": self.certifier.name}
+        self.stats = StatsView(
+            REGISTRY, "engine",
+            ("commits", "aborts", "writer_aborts", "reader_aborts",
+             "ww_aborts", "gc_versions"), labels=lbl,
+            sub={"by_reason": LabeledCounterMap(
+                REGISTRY, "engine_aborts_by_reason", "reason", labels=lbl)})
+        self._commit_hist = REGISTRY.histogram("oltp_commit_seconds", **lbl)
+        self._certify_hist = REGISTRY.histogram("oltp_certify_seconds", **lbl)
+        self._wal_hist = REGISTRY.histogram("oltp_wal_seconds", **lbl)
 
     # -------------------------------------------------------------- lifecycle
     def _tick(self) -> int:
@@ -267,34 +280,49 @@ class Engine:
     # ----------------------------------------------------------------- commit
     def commit(self, t: Txn) -> None:
         self._check_active(t)
-        try:
-            if t.writes:
-                # SI-W first-committer-wins: a version committed after our
-                # snapshot on any written key aborts us.
-                for key in t.writes:
-                    if self.store.chain(key).newest().commit_seq > t.begin_seq:
-                        raise SerializationFailure(AbortReason.WW_CONFLICT)
+        t0 = tick()
+        with TRACER.span("oltp_commit", certifier=self.certifier.name,
+                         n_reads=len(t.reads), n_writes=len(t.writes)):
+            tc = tick()
+            try:
+                with TRACER.span("certify"):
+                    if t.writes:
+                        # SI-W first-committer-wins: a version committed
+                        # after our snapshot on any written key aborts us.
+                        for key in t.writes:
+                            if self.store.chain(key).newest().commit_seq \
+                                    > t.begin_seq:
+                                raise SerializationFailure(
+                                    AbortReason.WW_CONFLICT)
+                    if self._tracked(t):
+                        self.certifier.on_precommit(t)
+            except SerializationFailure as e:
+                self._abort(t, e.reason)
+                raise
+            tock(self._certify_hist, tc)
+            cseq = self._tick()
+            for key, value in t.writes.items():
+                self.store.chain(key).install(cseq, t.tid, value)
+            t.status, t.end_seq = Status.COMMITTED, cseq
+            self.active.pop(t.tid, None)
+            tw = tick()
+            with TRACER.span("wal_emit"):
+                self.wal.log_commit(t.tid, sorted(t.writes.items()),
+                                    seq=cseq)
+                if t.out_rw:
+                    # the paper's logical message: outgoing concurrent rw
+                    # edges of a just-committed reader, for replica-side
+                    # RSS construction.
+                    self.wal.log_deps(t.tid, sorted(t.out_rw))
+            tock(self._wal_hist, tw)
+            if self.history is not None:
+                self.history.append(op_c(t.tid))
+            self.stats["commits"] += 1
             if self._tracked(t):
-                self.certifier.on_precommit(t)
-        except SerializationFailure as e:
-            self._abort(t, e.reason)
-            raise
-        cseq = self._tick()
-        for key, value in t.writes.items():
-            self.store.chain(key).install(cseq, t.tid, value)
-        t.status, t.end_seq = Status.COMMITTED, cseq
-        self.active.pop(t.tid, None)
-        self.wal.log_commit(t.tid, sorted(t.writes.items()), seq=cseq)
-        if self.history is not None:
-            self.history.append(op_c(t.tid))
-        if t.out_rw:
-            # the paper's logical message: outgoing concurrent rw edges of a
-            # just-committed reader, for replica-side RSS construction.
-            self.wal.log_deps(t.tid, sorted(t.out_rw))
-        self.stats["commits"] += 1
-        if self._tracked(t):
-            self.certifier.on_end(t, committed=True)
-        self._gc()
+                self.certifier.on_end(t, committed=True)
+            self._gc()
+            # observed on success only: histogram count == engine commits
+            tock(self._commit_hist, t0)
 
     def abort(self, t: Txn) -> None:
         self._abort(t, AbortReason.USER)

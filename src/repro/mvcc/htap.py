@@ -42,6 +42,7 @@ from typing import Any, Optional, Sequence
 from ..cluster import ReplicaCluster
 from ..core.replica import PRoTManager, RSSManager, RssSnapshot
 from ..core.wal import effective_commit_seq
+from ..obs import REGISTRY, TRACER, tick, tock
 from ..tensorstore.mirror import PagedMirror
 from ..tensorstore.version_store import (AggPlan, BatchPlan,
                                          ChainVersionStore, GroupByPlan,
@@ -50,6 +51,20 @@ from ..tensorstore.version_store import (AggPlan, BatchPlan,
                                          plan_keys)
 from .engine import AbortReason, Engine, SerializationFailure, Status, Txn
 from .store import Store
+
+# single-node route stage: PRoT snapshot acquisition (the multi-node twin
+# — policy choice + cadence/ship decision — is timed in cluster.acquire
+# into the SAME series)
+_ROUTE_H = REGISTRY.histogram("olap_stage_seconds", stage="route")
+
+
+def _serve_hist(cache: dict, key: tuple, **labels):
+    """Per-facade cache of olap_serve_seconds{facade, plan[, replica]}
+    histograms: one dict hit per serve instead of a registry lookup."""
+    h = cache.get(key)
+    if h is None:
+        h = cache[key] = REGISTRY.histogram("olap_serve_seconds", **labels)
+    return h
 
 
 # --------------------------------------------------------------- single node
@@ -79,6 +94,7 @@ class SingleNodeHTAP:
         if self.mirror is not None and reserve_keys:
             self.mirror.reserve(reserve_keys)
         self._pins: dict[int, int] = {}       # txn tid -> PRoT reader id
+        self._serve_h: dict[tuple, Any] = {}  # plan kind -> serve histogram
         # in-process WAL consumers as registered slots: truncation goes
         # through the same min-acked accounting the replica cluster uses
         self.engine.wal.register_consumer("rss")
@@ -118,7 +134,10 @@ class SingleNodeHTAP:
         if self.olap_mode == "ssi+safesnapshots":
             return self.engine.begin_deferred()   # None => reader-wait
         # ssi+rss: wait-free protected read over the freshest constructed RSS
-        rid, snap = self.prot.acquire()
+        t0 = tick()
+        with TRACER.span("route", policy="prot"):
+            rid, snap = self.prot.acquire()
+        tock(_ROUTE_H, t0)
         t = self.engine.begin(read_only=True, rss=snap)
         self._pins[t.tid] = rid
         return t
@@ -135,13 +154,18 @@ class SingleNodeHTAP:
         identically either way — the mirror resolves writers in the same
         vectorized pass.  With `check_scans`, every result is asserted
         equal to the per-key engine read path (`apply_plan` oracle)."""
-        if self.paged_store is not None and t.rss is not None:
-            self.engine._check_active(t)
-            result, writers = self.paged_store.execute_with_writers(plan,
-                                                                    t.rss)
-            self.engine.record_scan(t, plan_keys(plan), writers)
-        else:
-            result = self.engine.execute(t, plan)
+        kind = type(plan).__name__
+        t0 = tick()
+        with TRACER.span("olap_serve", facade="single", plan=kind):
+            if self.paged_store is not None and t.rss is not None:
+                self.engine._check_active(t)
+                result, writers = self.paged_store.execute_with_writers(
+                    plan, t.rss)
+                self.engine.record_scan(t, plan_keys(plan), writers)
+            else:
+                result = self.engine.execute(t, plan)
+        tock(_serve_hist(self._serve_h, (kind,), facade="single",
+                         plan=kind), t0)
         if self.check_scans:
             # per-key oracle parity (history suppressed: the read set was
             # already recorded by the plan execution above, and the check
@@ -178,7 +202,15 @@ class SingleNodeHTAP:
             self.engine._check_active(t)
         snap = entries[0][0].rss
         batch = BatchPlan(tuple(p for _, p in entries))
-        results, writers = self.paged_store.execute_with_writers(batch, snap)
+        t0 = tick()
+        with TRACER.span("olap_serve", facade="single", plan="BatchPlan",
+                         fused=len(entries)):
+            results, writers = self.paged_store.execute_with_writers(batch,
+                                                                     snap)
+        # one observation per fused dispatch: histogram count stays equal
+        # to the number of serve-path executions, not member plans
+        tock(_serve_hist(self._serve_h, ("BatchPlan",), facade="single",
+                         plan="BatchPlan"), t0)
         off = 0
         for (t, p), result in zip(entries, results):
             pk = plan_keys(p)
@@ -380,6 +412,7 @@ class MultiNodeHTAP:
                                       policy=route_policy,
                                       max_lag=max_staleness)
         self.replica = replicas[0]     # single-replica legacy surface
+        self._serve_h: dict[tuple, Any] = {}   # (plan, replica) -> histogram
 
     def oltp_begin(self, *, read_only: bool = False) -> Txn:
         return self.primary.begin(read_only=read_only)
@@ -405,7 +438,14 @@ class MultiNodeHTAP:
         """The facade's ONE OLAP plan-execution seam: plans route to the
         replica that served the handle's snapshot — the same
         freshness-policy decision as the acquisition."""
-        return self.cluster.execute(snap, plan)
+        kind, idx = type(plan).__name__, snap[1]
+        t0 = tick()
+        with TRACER.span("olap_serve", facade="multi", plan=kind,
+                         replica=idx):
+            result = self.cluster.execute(snap, plan)
+        tock(_serve_hist(self._serve_h, (kind, idx), facade="multi",
+                         plan=kind, replica=idx), t0)
+        return result
 
     def olap_execute_batch(self, entries: Sequence[tuple]) -> list[Any]:
         """Cross-reader whole-batch plan fusion, cluster-routed: `entries`
@@ -430,7 +470,14 @@ class MultiNodeHTAP:
         if not batchable:
             return [self.olap_execute(h, p) for h, p in entries]
         batch = BatchPlan(tuple(p for _, p in entries))
-        return list(self.cluster.execute(entries[0][0], batch))
+        idx = entries[0][0][1]
+        t0 = tick()
+        with TRACER.span("olap_serve", facade="multi", plan="BatchPlan",
+                         replica=idx, fused=len(entries)):
+            results = list(self.cluster.execute(entries[0][0], batch))
+        tock(_serve_hist(self._serve_h, ("BatchPlan", idx), facade="multi",
+                         plan="BatchPlan", replica=idx), t0)
+        return results
 
     def olap_release(self, snap) -> None:
         self.cluster.release(snap)

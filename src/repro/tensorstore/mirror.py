@@ -38,6 +38,14 @@ import numpy as np
 
 from ..core.replica import RssSnapshot
 from ..core.wal import Wal, WalRecord, effective_commit_seq
+from ..obs import REGISTRY, TRACER, StatsView, tick, tock
+
+# serve-path per-stage latency: visibility resolve, kernel dispatch, and
+# result fold/finalize (the route stage is observed by the facades /
+# cluster).  Shared across mirrors: summaries merge per stage.
+_RESOLVE_H = REGISTRY.histogram("olap_stage_seconds", stage="resolve")
+_DISPATCH_H = REGISTRY.histogram("olap_stage_seconds", stage="dispatch")
+_FINALIZE_H = REGISTRY.histogram("olap_stage_seconds", stage="finalize")
 
 # payload tags (element 0 of every page payload)
 TAG_INIT = 0        # never-written page: decodes to the initial value 0
@@ -155,19 +163,25 @@ class PagedMirror:
         self.applied_lsn = 0
         self.commit_seq: dict[int, int] = {}   # txn -> commit seq
         self.watermark = 0                     # newest applied commit seq
-        # dense-range fast-path accounting for fused plan executions: a
-        # contiguous ascending page run slices the store (no gather) —
-        # `reserve` key families contiguously to raise the hit rate
-        self.range_stats = {"dense": 0, "gather": 0}
+        # registry-backed accounting (series mirror_range_* /
+        # mirror_exec_*), scoped per mirror instance so replicas never
+        # alias; dict-shaped views keep the old reader API.
+        # range: dense-range fast-path hits for fused plan executions — a
+        # contiguous ascending page run slices the store (no gather);
+        # `reserve` key families contiguously to raise the hit rate.
+        lbl = {"mirror": REGISTRY.scope("mirror")}
+        self.range_stats = StatsView(REGISTRY, "mirror_range",
+                                     ("dense", "gather"), labels=lbl)
         # grouped-strategy override (None = shape dispatch; "host" /
         # "flat" / "chunked" forces a mode — tests and benches pin it)
         self.grouped_mode: str | None = None
         # plan-execution accounting: plans served, fused batches, grouped
         # dispatches and which strategy each took (the driver surfaces
         # these as plans/dispatch and mode counters)
-        self.exec_stats = {"plans": 0, "batches": 0, "batched_plans": 0,
-                           "agg_dispatches": 0, "mode_flat": 0,
-                           "mode_chunked": 0, "mode_host": 0}
+        self.exec_stats = StatsView(
+            REGISTRY, "mirror_exec",
+            ("plans", "batches", "batched_plans", "agg_dispatches",
+             "mode_flat", "mode_chunked", "mode_host"), labels=lbl)
 
     # ----------------------------------------------------------- page alloc
     @property
@@ -426,35 +440,40 @@ class PagedMirror:
             len(flat_keys), len(lane_groups), n_plans,
             override=self.grouped_mode)
         if mode == "host":
-            kops.LAUNCH_STATS["dispatches"] += 1
-            kops.LAUNCH_STATS["host"] += 1
-            self.exec_stats["mode_host"] += 1
-            vals = self._scan(flat_keys, mask_fn)
-            rows, off = [], 0
-            for grp, (field, _tm, _ta, thr) in zip(lane_groups,
-                                                   lane_params):
-                xs = [x for v in vals[off:off + len(grp)]
-                      if (x := agg_value(v, field)) is not None]
-                off += len(grp)
-                thr_eff = int(_INT32.max) if thr is None else int(thr)
-                rows.append([sum(xs), len(xs),
-                             sum(1 for x in xs if x < thr_eff),
-                             min(xs, default=int(_INT32.max)),
-                             max(xs, default=int(_INT32.min))])
-            return rows
-        pages = self.page_index(flat_keys)
-        store = self.jnp_store_for(pages)
-        gid = np.full(int(store["ts"].shape[0]), -1, np.int32)
-        gid[:len(pages)] = np.concatenate(
-            [np.full(len(grp), g, np.int32)
-             for g, grp in enumerate(lane_groups)])
-        gparams = np.asarray(
-            [[tm, ta, int(_INT32.max) if thr is None else int(thr)]
-             for _f, tm, ta, thr in lane_params], np.int32)
-        rows, used = kops.grouped_agg_auto(
-            store, gid, len(lane_groups), np.asarray(member_ts, np.int32),
-            floor, group_params=gparams, n_plans=n_plans, mode=mode,
-            use_kernel=use_kernel, interpret=interpret)
+            with TRACER.span("kernel_dispatch", mode="host",
+                             lanes=len(lane_groups)):
+                kops.LAUNCH_STATS["dispatches"] += 1
+                kops.LAUNCH_STATS["host"] += 1
+                self.exec_stats["mode_host"] += 1
+                vals = self._scan(flat_keys, mask_fn)
+                rows, off = [], 0
+                for grp, (field, _tm, _ta, thr) in zip(lane_groups,
+                                                       lane_params):
+                    xs = [x for v in vals[off:off + len(grp)]
+                          if (x := agg_value(v, field)) is not None]
+                    off += len(grp)
+                    thr_eff = int(_INT32.max) if thr is None else int(thr)
+                    rows.append([sum(xs), len(xs),
+                                 sum(1 for x in xs if x < thr_eff),
+                                 min(xs, default=int(_INT32.max)),
+                                 max(xs, default=int(_INT32.min))])
+                return rows
+        with TRACER.span("kernel_dispatch", lanes=len(lane_groups)):
+            pages = self.page_index(flat_keys)
+            store = self.jnp_store_for(pages)
+            gid = np.full(int(store["ts"].shape[0]), -1, np.int32)
+            gid[:len(pages)] = np.concatenate(
+                [np.full(len(grp), g, np.int32)
+                 for g, grp in enumerate(lane_groups)])
+            gparams = np.asarray(
+                [[tm, ta, int(_INT32.max) if thr is None else int(thr)]
+                 for _f, tm, ta, thr in lane_params], np.int32)
+            rows, used = kops.grouped_agg_auto(
+                store, gid, len(lane_groups),
+                np.asarray(member_ts, np.int32), floor,
+                group_params=gparams, n_plans=n_plans, mode=mode,
+                use_kernel=use_kernel, interpret=interpret)
+            TRACER.annotate(mode=used)
         self.exec_stats["mode_" + used] += 1
         return rows
 
@@ -469,13 +488,19 @@ class PagedMirror:
                                     finalize_agg, plan_keys)
 
         lane_groups, lane_params, lane_of = _lane_layout(plans)
-        mask_fn, member_ts, floor = self._snapshot_mask(snapshot)
-        all_keys = [k for p in plans for k in plan_keys(p)]
-        writers = self._writers_for(self.page_index(all_keys), mask_fn)
+        t0 = tick()
+        with TRACER.span("resolve"):
+            mask_fn, member_ts, floor = self._snapshot_mask(snapshot)
+            all_keys = [k for p in plans for k in plan_keys(p)]
+            writers = self._writers_for(self.page_index(all_keys), mask_fn)
+        tock(_RESOLVE_H, t0)
+        t0 = tick()
         rows = self._grouped_rows(lane_groups, lane_params, mask_fn,
                                   member_ts, floor, len(plans),
                                   use_kernel=use_kernel,
                                   interpret=interpret)
+        tock(_DISPATCH_H, t0)
+        t0 = tick()
         results = []
         for p_i, plan in enumerate(plans):
             if isinstance(plan, GroupByPlan):
@@ -492,6 +517,7 @@ class PagedMirror:
                 assert isinstance(plan, AggPlan), plan
                 results.append(finalize_agg(
                     rows[lane_of[(p_i, _op_config(plan.op), 0)]], plan.op))
+        tock(_FINALIZE_H, t0)
         return results, writers
 
     def execute_with_writers(self, plan, snapshot, *,
@@ -514,35 +540,50 @@ class PagedMirror:
                                     MultiAggPlan, ScanPlan, finalize_agg,
                                     plan_keys)
 
-        if isinstance(plan, ScanPlan):
+        with TRACER.span("mirror_execute", plan=type(plan).__name__):
+            if isinstance(plan, ScanPlan):
+                self.exec_stats["plans"] += 1
+                t0 = tick()
+                out = self.scan_with_writers(plan.keys, snapshot)
+                tock(_RESOLVE_H, t0)       # a scan IS its visibility resolve
+                return out
+            if isinstance(plan, BatchPlan):
+                self.exec_stats["plans"] += len(plan.plans)
+                self.exec_stats["batches"] += 1
+                self.exec_stats["batched_plans"] += len(plan.plans)
+                results, writers = self._grouped_execute(
+                    plan.plans, snapshot, use_kernel=use_kernel,
+                    interpret=interpret)
+                return tuple(results), writers
             self.exec_stats["plans"] += 1
-            return self.scan_with_writers(plan.keys, snapshot)
-        if isinstance(plan, BatchPlan):
-            self.exec_stats["plans"] += len(plan.plans)
-            self.exec_stats["batches"] += 1
-            self.exec_stats["batched_plans"] += len(plan.plans)
-            results, writers = self._grouped_execute(
-                plan.plans, snapshot, use_kernel=use_kernel,
-                interpret=interpret)
-            return tuple(results), writers
-        self.exec_stats["plans"] += 1
-        if isinstance(plan, GroupByPlan):
-            results, writers = self._grouped_execute(
-                [plan], snapshot, use_kernel=use_kernel,
-                interpret=interpret)
-            return results[0], writers
-        keys = plan_keys(plan)
-        pages = self.page_index(keys)
-        mask_fn, member_ts, floor = self._snapshot_mask(snapshot)
-        writers = self._writers_for(pages, mask_fn)
-        ops = (plan.op,) if isinstance(plan, AggPlan) else plan.ops
-        raws = self._scalar_raws(pages, member_ts, floor, ops,
-                                 use_kernel=use_kernel, interpret=interpret)
-        vals = tuple(finalize_agg(raws[_op_config(op)], op) for op in ops)
-        if isinstance(plan, AggPlan):
-            return vals[0], writers
-        assert isinstance(plan, MultiAggPlan), plan
-        return vals, writers
+            if isinstance(plan, GroupByPlan):
+                results, writers = self._grouped_execute(
+                    [plan], snapshot, use_kernel=use_kernel,
+                    interpret=interpret)
+                return results[0], writers
+            keys = plan_keys(plan)
+            t0 = tick()
+            with TRACER.span("resolve"):
+                pages = self.page_index(keys)
+                mask_fn, member_ts, floor = self._snapshot_mask(snapshot)
+                writers = self._writers_for(pages, mask_fn)
+            tock(_RESOLVE_H, t0)
+            ops = (plan.op,) if isinstance(plan, AggPlan) else plan.ops
+            t0 = tick()
+            with TRACER.span("kernel_dispatch", mode="scalar",
+                             configs=len(set(_op_config(op) for op in ops))):
+                raws = self._scalar_raws(pages, member_ts, floor, ops,
+                                         use_kernel=use_kernel,
+                                         interpret=interpret)
+            tock(_DISPATCH_H, t0)
+            t0 = tick()
+            vals = tuple(finalize_agg(raws[_op_config(op)], op)
+                         for op in ops)
+            tock(_FINALIZE_H, t0)
+            if isinstance(plan, AggPlan):
+                return vals[0], writers
+            assert isinstance(plan, MultiAggPlan), plan
+            return vals, writers
 
     # -------------------------------------------------------- device export
     def jnp_store(self) -> dict:

@@ -28,6 +28,7 @@ import jax
 
 from ..core.replica import RSSManager, RssSnapshot
 from ..core.wal import Wal
+from ..obs import REGISTRY, StatsView
 
 
 @dataclass
@@ -50,7 +51,9 @@ class VersionedParamStore:
         self._txn_ids = itertools.count(1)
         self._pin_ids = itertools.count(1)
         self._pins: dict[int, int] = {}       # pin id -> slot index
-        self.stats = {"publishes": 0, "gc_blocked": 0, "pins": 0}
+        self.stats = StatsView(REGISTRY, "param_store",
+                               ("publishes", "gc_blocked", "pins"),
+                               labels={"store": REGISTRY.scope("pstore")})
 
     # --------------------------------------------------------------- writers
     def begin_txn(self) -> int:
