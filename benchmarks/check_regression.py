@@ -1,0 +1,113 @@
+"""Perf-regression gate over the persisted bench trajectory.
+
+Compares the freshly-written BENCH_kernels.json (after a full
+``benchmarks.run`` pass) against the committed baseline (``git show
+HEAD:BENCH_kernels.json`` by default) and FAILS when any tracked
+per-call cost regressed by more than ``TOLERANCE`` — i.e. throughput
+dropped >25% on the scan_agg / group_agg / serve_latency / materialized
+serve paths.  Missing sections or entries are reported and skipped (a
+new bench's first persisted run has no baseline), so the gate only ever
+compares like against like.
+
+Usage (the verify.sh --bench path):
+    PYTHONPATH=src python -m benchmarks.run            # persists fresh
+    PYTHONPATH=src python -m benchmarks.check_regression
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+
+from .persist import BENCH_PATH
+
+TOLERANCE = 0.25          # fail when new_us > (1 + TOLERANCE) * old_us
+
+
+def _tracked(blob: dict) -> dict[str, float]:
+    """Flatten the gated sections into {metric_name: us_per_call}."""
+    out: dict[str, float] = {}
+    sweep = blob.get("scan_agg", {}).get("sweep", {})
+    for p, r in sweep.items():
+        out[f"scan_agg:P={p}"] = float(r["fused_agg_us"])
+    sweep = blob.get("group_agg", {}).get("sweep", {})
+    for shape, r in sweep.items():
+        out[f"group_agg:{shape}"] = float(r["chunked_us"])
+    sweep = blob.get("serve_latency", {}).get("sweep", {})
+    for cfg, r in sweep.items():
+        out[f"serve_latency:{cfg}:p50"] = float(r["serve"]["p50_us"])
+    sweep = blob.get("materialized", {}).get("sweep", {})
+    for p, r in sweep.items():
+        out[f"materialized:P={p}"] = float(r["materialized_us"])
+    return out
+
+
+def _load_baseline(ref: str) -> dict | None:
+    if ref.endswith(".json"):
+        try:
+            with open(ref) as f:
+                return json.load(f)
+        except FileNotFoundError:
+            return None
+    try:
+        raw = subprocess.run(
+            ["git", "show", f"{ref}:BENCH_kernels.json"],
+            capture_output=True, text=True, check=True,
+            cwd=BENCH_PATH.rsplit("/", 1)[0]).stdout
+    except (subprocess.CalledProcessError, FileNotFoundError):
+        return None
+    return json.loads(raw)
+
+
+def check(baseline_ref: str = "HEAD",
+          tolerance: float = TOLERANCE) -> tuple[list[str], list[str]]:
+    """(regressions, notes) between the committed baseline and the
+    current BENCH_kernels.json."""
+    base_blob = _load_baseline(baseline_ref)
+    if base_blob is None:
+        return [], [f"no baseline at {baseline_ref}: nothing to gate"]
+    with open(BENCH_PATH) as f:
+        cur_blob = json.load(f)
+    base, cur = _tracked(base_blob), _tracked(cur_blob)
+    regressions, notes = [], []
+    for name, old_us in sorted(base.items()):
+        new_us = cur.get(name)
+        if new_us is None:
+            notes.append(f"{name}: dropped from current run (skipped)")
+            continue
+        ratio = new_us / old_us if old_us else 1.0
+        line = f"{name}: {old_us:.1f}us -> {new_us:.1f}us (x{ratio:.3f})"
+        if ratio > 1.0 + tolerance:
+            regressions.append(line)
+        else:
+            notes.append(line)
+    for name in sorted(set(cur) - set(base)):
+        notes.append(f"{name}: new metric, no baseline (skipped)")
+    return regressions, notes
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="HEAD",
+                    help="git ref, or a path ending in .json")
+    ap.add_argument("--tolerance", type=float, default=TOLERANCE,
+                    help="allowed fractional us-per-call growth")
+    args = ap.parse_args()
+    regressions, notes = check(args.baseline, args.tolerance)
+    for line in notes:
+        print(f"ok   {line}")
+    for line in regressions:
+        print(f"FAIL {line}")
+    if regressions:
+        print(f"check_regression: {len(regressions)} metric(s) regressed "
+              f">{args.tolerance:.0%} vs {args.baseline}")
+        return 1
+    print(f"check_regression: {len(notes)} metric(s) within "
+          f"{args.tolerance:.0%} of {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV rows covering:
   * kernel micro-benchmarks (CPU ref timing + TPU roofline),
   * the scan-vs-fused-agg executor sweep (host decode eliminated),
   * RSS freshness-lag characterization (beyond-paper),
+  * materialized-aggregate serve cost, O(delta) vs O(table)
+    (benchmarks.bench_materialized),
   * serve-path p50/p95/p99 latency per plan kind + stage breakdown and
     the observability-overhead bound (benchmarks.bench_serve_latency),
   * the roofline summary when dry-run artifacts exist.
@@ -132,6 +134,13 @@ def main(smoke: bool = False) -> None:
           f"batched=x{batch_report['headline_speedup']}"
           f"_vs_unbatched_at_N={batch_report['headline_batch']}")
 
+    # --------------- materialized aggregates (O(delta) vs O(table) serve)
+    from .bench_materialized import bench_rows as mat_rows
+    from .bench_materialized import full_report as mat_report_fn
+    mat_report = mat_report_fn(smoke=smoke)
+    for name, us, derived in mat_rows(mat_report):
+        print(f"{name},{us:.1f},{derived}")
+
     # ------------- serve-path latency (p50/p99) + observability overhead
     from .bench_serve_latency import bench_rows as serve_rows
     from .bench_serve_latency import full_report as serve_report_fn
@@ -161,7 +170,8 @@ def main(smoke: bool = False) -> None:
                                           group_agg=group_report,
                                           plan_batch=batch_report,
                                           certifier_aborts=cert_report,
-                                          serve_latency=serve_report)
+                                          serve_latency=serve_report,
+                                          materialized=mat_report)
         print(f"bench_kernels_json,0,{out_path}")
 
     # --------------------------------------------------------- roofline

@@ -224,6 +224,68 @@ print("observability OK (latency recorded on both facades; cross-layer "
 EOF
 
 echo
+echo "== materialized aggregates (delta-fold views == oracle on both facades) =="
+python - <<'EOF'
+import numpy as np
+from repro.core.wal import WalRecord
+from repro.kernels.rss_scan_agg import ops as kops
+from repro.kernels.rss_scan_agg.ref import rss_delta_fold_ref
+from repro.mvcc import run_multi_node, run_single_node
+from repro.tensorstore import AggOp, MultiAggPlan, PagedMirror
+
+# delta-fold kernel == ref over random dense delta buffers (interpret)
+rng = np.random.default_rng(4)
+for lp, dp in [(8, 8), (16, 32)]:
+    acc = np.zeros((lp, 128), np.int32)
+    acc[:, :7] = [0, 0, 0, np.iinfo(np.int32).max,
+                  np.iinfo(np.int32).min, 0, 0]
+    delta = np.zeros((dp, 128), np.int32)
+    delta[:, 0] = rng.integers(-1, lp, dp)         # incl. -1 padding rows
+    delta[:, 1] = rng.integers(-99, 99, dp)
+    delta[:, 2] = rng.integers(0, 2, dp)
+    delta[:, 3] = rng.integers(-99, 99, dp)
+    delta[:, 4] = rng.integers(0, 2, dp)
+    delta[:, 5] = rng.integers(-50, 50, dp)
+    np.testing.assert_array_equal(
+        np.asarray(kops.delta_fold(acc, delta, use_kernel=True)),
+        np.asarray(rss_delta_fold_ref(acc, delta)))
+print("delta_fold parity OK (kernel == ref; interpret mode)")
+
+# registry seam: >=1 view hit AND >=1 clean (gate-miss) fallback, both
+# equal to the fused scan
+mirror = PagedMirror()
+plan = MultiAggPlan(("a", "b", "c"),
+                    (AggOp("sum", "int"), AggOp("min", "int")))
+mirror.apply(WalRecord(lsn=1, type="commit", txn=1,
+                       writes=(("a", 5), ("b", 9), ("c", 2)), seq=1))
+mirror.register_view(plan)
+mirror.apply(WalRecord(lsn=2, type="commit", txn=2,
+                       writes=(("c", 11),), seq=2))
+stale = mirror.watermark - 1                 # excludes the queued commit
+hit, _ = mirror.execute_with_writers(plan, mirror.watermark,
+                                     need_writers=False)
+fb, _ = mirror.execute_with_writers(plan, stale, need_writers=False)
+assert hit == (25, 5) and fb == (16, 2), (hit, fb)
+s = mirror.exec_stats
+assert s["view_hits"] >= 1 and s["view_fallbacks"] >= 1, dict(s)
+
+# both facades thread the registry: driver runs with materialize=True
+# and check_scans=True assert tile == fused scan == per-key oracle at
+# EVERY serve, and the Metrics surface exposes the olap_view_* counters
+args = dict(olap_mode="ssi+rss", oltp_clients=3, olap_clients=2,
+            rounds=600, seed=5, olap_scan=True, paged_olap=True,
+            check_scans=True, materialize=True)
+for tag, m in (("single", run_single_node(**args)),
+               ("multi", run_multi_node(**args))):
+    assert m.olap_view_hits >= 1, (tag, m.olap_view_hits)
+    print(f"  {tag:6s} hits={m.olap_view_hits} "
+          f"fallbacks={m.olap_view_fallbacks} "
+          f"demotions={m.olap_view_demotions}")
+print("materialized OK (kernel parity; hit+fallback == fused; both "
+      "facades oracle-checked with views on)")
+EOF
+
+echo
 echo "== examples (smoke mode: demos must not rot) =="
 for ex in quickstart anomaly_demo paged_snapshot_reads cluster_fanout \
           observability_demo; do
@@ -242,6 +304,9 @@ if [[ "${1:-}" == "--bench" ]]; then
     echo
     echo "== benchmarks (writes BENCH_kernels.json) =="
     python -m benchmarks.run
+    echo
+    echo "== perf regression gate (fresh run vs committed baseline) =="
+    python -m benchmarks.check_regression
 fi
 
 echo

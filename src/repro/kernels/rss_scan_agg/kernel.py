@@ -4,9 +4,10 @@ This is the device-resident OLAP executor's hot loop: one pass that resolves
 RSS set-membership visibility for a key-range of pages per grid step (the
 multi-page columnar extension of `rss_gather`'s one-slot-per-page resolve)
 AND reduces the member-visible payloads on device — sum / count /
-count-below-threshold / min / max over a tagged scalar field — so scan
-results never leave the device.  The host receives five scalars instead of
-P decoded pages.
+count-below-threshold / min / max / count-above-threshold /
+sum-below-threshold over a tagged scalar field — so scan results never
+leave the device.  The host receives seven scalars instead of P decoded
+pages.
 
 Contract (matches ref.py):
     data      [P, K, E] int32  page payloads; element 0 is the codec tag,
@@ -21,11 +22,13 @@ Contract (matches ref.py):
                                aggregate (tag_alt = -2 to disable: real
                                tags are >= 0 and -1 marks sublane-padding
                                pages, so neither ever matches -2)
-    threshold scalar           count-below predicate bound
+    threshold scalar           predicate bound shared by the thresholded
+                               lanes (count_below / count_above /
+                               sum_below)
     out       [P/BP, 128] int32  ONE PARTIAL ROW PER GRID BLOCK, lanes
-                               0..4 = sum, count, count_below, min
+                               0..6 = sum, count, count_below, min
                                (INT32_MAX when the block matched nothing),
-                               max (INT32_MIN)
+                               max (INT32_MIN), count_above, sum_below
 
 Visibility is the `rss_gather` protocol verbatim (ts <= floor OR ts in the
 member array, newest wins, ties toward the lowest slot).  Each grid step
@@ -47,7 +50,8 @@ Three grouped strategies (shape-dispatched by `ops.select_grouped_mode`):
 `rss_scan_agg_grouped` — FLAT-LANE: every page carries a group id (`gid
 [P, 1]`, -1 = no group), each grid step reduces its BP-page block into
 PER-GROUP accumulator lanes — a [Gp, 128] tile whose row g holds group
-g's [sum, count, count_below, min, max] partial.  All G lanes stay live
+g's [sum, count, count_below, min, max, count_above, sum_below] partial.
+All G lanes stay live
 every grid step, so VMEM pressure grows with G; fine for small group
 counts, decays past G ~ 8-16.  Per-group kernel params (`group_params
 [G, 3] = tag_main, tag_alt, threshold` rows) let ONE launch serve lanes
@@ -61,8 +65,8 @@ a TILED group axis — grid (G/G_tile, chunks, steps) where each step
 accumulates `rows_per_step` rows into its chunk's [G_tile, 128] partial
 tile via `@pl.when` revisits.  VMEM per step is bounded by G_tile, not
 G, so G=64..256 no longer falls off the cliff, and the expensive member
-compare runs once instead of once per group tile.  The [chunks, G, 5]
-partials fold to [G, 5] with `tree_fold_partials` ON DEVICE (pairwise,
+compare runs once instead of once per group tile.  The [chunks, G, 7]
+partials fold to [G, 7] with `tree_fold_partials` ON DEVICE (pairwise,
 int32) — exactness now needs the whole-scan bound |field| max <
 2**31/P, which `ops` checks host-side, falling back to flat-lane (exact
 host fold) when violated.
@@ -119,17 +123,22 @@ def _resolve_block(mem_ref, scal_ref, ts_ref, data_ref):
 def _kernel(mem_ref, scal_ref, ts_ref, data_ref, out_ref):
     # --- fused aggregate over the visible payloads ----------------------
     x, valid, thresh = _resolve_block(mem_ref, scal_ref, ts_ref, data_ref)
+    below = valid & (x < thresh)
     psum = jnp.sum(jnp.where(valid, x, 0))
     pcount = jnp.sum(valid.astype(jnp.int32))
-    pbelow = jnp.sum((valid & (x < thresh)).astype(jnp.int32))
+    pbelow = jnp.sum(below.astype(jnp.int32))
     pmin = jnp.min(jnp.where(valid, x, _I32_MAX))
     pmax = jnp.max(jnp.where(valid, x, _I32_MIN))
+    pabove = jnp.sum((valid & (x > thresh)).astype(jnp.int32))
+    psumb = jnp.sum(jnp.where(below, x, 0))
     lane = jax.lax.broadcasted_iota(jnp.int32, (1, 128), 1)
     tile = jnp.where(lane == 0, psum, 0)
     tile = jnp.where(lane == 1, pcount, tile)
     tile = jnp.where(lane == 2, pbelow, tile)
     tile = jnp.where(lane == 3, pmin, tile)
     tile = jnp.where(lane == 4, pmax, tile)
+    tile = jnp.where(lane == 5, pabove, tile)
+    tile = jnp.where(lane == 6, psumb, tile)
     out_ref[...] = tile                        # this block's partial row
 
 
@@ -184,11 +193,12 @@ def rss_scan_agg(data: jax.Array, ts: jax.Array, member_ts: jax.Array,
                  threshold: jax.Array | int = _I32_MAX,
                  *, block_pages: int = 8,
                  interpret: bool = True) -> jax.Array:
-    """Fused RSS membership scan + aggregate; returns [P/BP, 5] int32
-    per-block partials of [sum, count, count_below, min, max] over
-    member-visible payloads whose tag is tag_main or tag_alt (fold the
-    block axis on host — lanes 0-2 add, 3 min, 4 max).  interpret=True
-    executes on CPU (validation); interpret=False targets TPU."""
+    """Fused RSS membership scan + aggregate; returns [P/BP, 7] int32
+    per-block partials of [sum, count, count_below, min, max,
+    count_above, sum_below] over member-visible payloads whose tag is
+    tag_main or tag_alt (fold the block axis on host — lanes 0-2 and 5-6
+    add, 3 min, 4 max).  interpret=True executes on CPU (validation);
+    interpret=False targets TPU."""
     P, K, E = data.shape
     assert ts.shape == (P, K)
     bp = min(block_pages, P)
@@ -208,7 +218,7 @@ def rss_scan_agg(data: jax.Array, ts: jax.Array, member_ts: jax.Array,
         out_shape=jax.ShapeDtypeStruct((P // bp, 128), jnp.int32),
         interpret=interpret,
     )(mem, scal, ts, data)
-    return out[:, :5]
+    return out[:, :7]
 
 
 def _grouped_kernel(mem_ref, scal_ref, gprm_ref, gid_ref, ts_ref, data_ref,
@@ -226,17 +236,22 @@ def _grouped_kernel(mem_ref, scal_ref, gprm_ref, gid_ref, ts_ref, data_ref,
     grp = (gid[:, None] == giota) & tagm                   # [BP, Gp]
     thresh = prm[:, 2][None, :]                            # [1, Gp]
     xg = x[:, None]
+    below = grp & (xg < thresh)
     psum = jnp.sum(jnp.where(grp, xg, 0), axis=0)          # [Gp]
     pcount = jnp.sum(grp.astype(jnp.int32), axis=0)
-    pbelow = jnp.sum((grp & (xg < thresh)).astype(jnp.int32), axis=0)
+    pbelow = jnp.sum(below.astype(jnp.int32), axis=0)
     pmin = jnp.min(jnp.where(grp, xg, _I32_MAX), axis=0)
     pmax = jnp.max(jnp.where(grp, xg, _I32_MIN), axis=0)
+    pabove = jnp.sum((grp & (xg > thresh)).astype(jnp.int32), axis=0)
+    psumb = jnp.sum(jnp.where(below, xg, 0), axis=0)
     lane = jax.lax.broadcasted_iota(jnp.int32, (gp, 128), 1)
     tile = jnp.where(lane == 0, psum[:, None], 0)
     tile = jnp.where(lane == 1, pcount[:, None], tile)
     tile = jnp.where(lane == 2, pbelow[:, None], tile)
     tile = jnp.where(lane == 3, pmin[:, None], tile)
     tile = jnp.where(lane == 4, pmax[:, None], tile)
+    tile = jnp.where(lane == 5, pabove[:, None], tile)
+    tile = jnp.where(lane == 6, psumb[:, None], tile)
     out_ref[...] = tile                        # this block's [Gp, 128] tile
 
 
@@ -254,9 +269,10 @@ def rss_scan_agg_grouped(data: jax.Array, ts: jax.Array, gid: jax.Array,
     """Fused RSS membership scan + GROUPED aggregate (flat-lane): `gid` is
     a [P, 1] int32 group id per page (0..n_groups-1; -1 = no group,
     matching no accumulator lane — sublane padding).  Returns [P/BP,
-    n_groups, 5] int32 per-block per-group partials of [sum, count,
-    count_below, min, max] over member-visible payloads whose tag matches
-    the group's config (fold the block axis per group on host — lanes 0-2
+    n_groups, 7] int32 per-block per-group partials of [sum, count,
+    count_below, min, max, count_above, sum_below] over member-visible
+    payloads whose tag matches the group's config (fold the block axis
+    per group on host — lanes 0-2 and 5-6
     add, 3 min, 4 max).  group_params [n_groups, 3] int32 (tag_main,
     tag_alt, threshold per lane) overrides the scalar tag/threshold args
     per group, so one launch can serve lanes from different plans."""
@@ -287,7 +303,7 @@ def rss_scan_agg_grouped(data: jax.Array, ts: jax.Array, gid: jax.Array,
         out_shape=jax.ShapeDtypeStruct((P // bp * gp, 128), jnp.int32),
         interpret=interpret,
     )(mem, scal, gtile, gid.astype(jnp.int32), ts, data)
-    return out.reshape(P // bp, gp, 128)[:, :n_groups, :5]
+    return out.reshape(P // bp, gp, 128)[:, :n_groups, :7]
 
 
 # ---------------------------------------------------------------------------
@@ -326,17 +342,22 @@ def _chunk_reduce_kernel(gprm_ref, sel_ref, out_ref):
     grp = (gid[:, None] == gl[None, :]) & tagm             # [R*SB, GT]
     thresh = prm[:, 2][None, :]
     xg = x[:, None]
+    below = grp & (xg < thresh)
     psum = jnp.sum(jnp.where(grp, xg, 0), axis=0)          # [GT]
     pcount = jnp.sum(grp.astype(jnp.int32), axis=0)
-    pbelow = jnp.sum((grp & (xg < thresh)).astype(jnp.int32), axis=0)
+    pbelow = jnp.sum(below.astype(jnp.int32), axis=0)
     pmin = jnp.min(jnp.where(grp, xg, _I32_MAX), axis=0)
     pmax = jnp.max(jnp.where(grp, xg, _I32_MIN), axis=0)
+    pabove = jnp.sum((grp & (xg > thresh)).astype(jnp.int32), axis=0)
+    psumb = jnp.sum(jnp.where(below, xg, 0), axis=0)
     lane = jax.lax.broadcasted_iota(jnp.int32, (1, gt, 128), 2)
     tile = jnp.where(lane == 0, psum[None, :, None], 0)
     tile = jnp.where(lane == 1, pcount[None, :, None], tile)
     tile = jnp.where(lane == 2, pbelow[None, :, None], tile)
     tile = jnp.where(lane == 3, pmin[None, :, None], tile)
     tile = jnp.where(lane == 4, pmax[None, :, None], tile)
+    tile = jnp.where(lane == 5, pabove[None, :, None], tile)
+    tile = jnp.where(lane == 6, psumb[None, :, None], tile)
 
     @pl.when(i == 0)
     def _init():
@@ -346,7 +367,7 @@ def _chunk_reduce_kernel(gprm_ref, sel_ref, out_ref):
     def _accumulate():
         prev = out_ref[...]
         out_ref[...] = jnp.where(
-            lane < 3, prev + tile,
+            (lane < 3) | (lane >= 5), prev + tile,
             jnp.where(lane == 3, jnp.minimum(prev, tile),
                       jnp.maximum(prev, tile)))
 
@@ -396,7 +417,7 @@ def rss_scan_agg_chunked(data: jax.Array, ts: jax.Array, gid: jax.Array,
     """Chunked two-stage grouped scan+agg: one select pass packs
     (tag, field, gid) per page, then a tiled-group reduce re-reads the
     packed stream — VMEM bounded by `group_tile`, visibility resolved
-    once.  Returns [chunks, n_groups, 5] int32 per-chunk per-group
+    once.  Returns [chunks, n_groups, 7] int32 per-chunk per-group
     partials (fold with `tree_fold_partials` on device, or
     `ops.fold_group_partials` on host).  Same lane semantics and
     group_params contract as `rss_scan_agg_grouped`; exact only when the
@@ -442,23 +463,104 @@ def rss_scan_agg_chunked(data: jax.Array, ts: jax.Array, gid: jax.Array,
         out_shape=jax.ShapeDtypeStruct((nc, gp, 128), jnp.int32),
         interpret=interpret,
     )(gtile, sel)
-    return out[:, :n_groups, :5]
+    return out[:, :n_groups, :7]
+
+
+# ---------------------------------------------------------------------------
+# incremental delta fold (materialized aggregates)
+# ---------------------------------------------------------------------------
+
+def _delta_fold_kernel(acc_ref, delta_ref, out_ref):
+    """Fold a dense delta buffer of changed rows into a live accumulator
+    tile.  acc [Lp, 128]: one row per accumulator lane, lanes 0..6 =
+    [sum, count, count_below, min, max, count_above, sum_below].  delta
+    [Dp, 128]: one row per (key, lane) change, cols 0 = target lane (-1 =
+    padding, folds nowhere), 1 = retracted old value, 2 = old-valid, 3 =
+    applied new value, 4 = new-valid, 5 = threshold.  Version supersession
+    is retract-then-apply: every additive stat subtracts the old
+    contribution and adds the new one; min/max only TIGHTEN (they are not
+    subtractable — the host owns the dirty-bit demotion ladder when a
+    retracted value was the attained bound)."""
+    acc = acc_ref[...]                                     # [Lp, 128]
+    blk = delta_ref[...]                                   # [Dp, 128]
+    lp = acc.shape[0]
+    tgt = blk[:, 0]
+    old, ov = blk[:, 1], blk[:, 2]
+    new, nv = blk[:, 3], blk[:, 4]
+    thr = blk[:, 5]
+    onehot = tgt[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (blk.shape[0], lp), 1)                  # [Dp, Lp]
+    oh = onehot.astype(jnp.int32)
+    old_b = (old < thr).astype(jnp.int32)
+    new_b = (new < thr).astype(jnp.int32)
+    d_sum = new * nv - old * ov
+    d_count = nv - ov
+    d_below = nv * new_b - ov * old_b
+    d_above = (nv * (new > thr).astype(jnp.int32)
+               - ov * (old > thr).astype(jnp.int32))
+    d_sumb = new * nv * new_b - old * ov * old_b
+    s_sum = jnp.sum(oh * d_sum[:, None], axis=0)           # [Lp]
+    s_count = jnp.sum(oh * d_count[:, None], axis=0)
+    s_below = jnp.sum(oh * d_below[:, None], axis=0)
+    s_above = jnp.sum(oh * d_above[:, None], axis=0)
+    s_sumb = jnp.sum(oh * d_sumb[:, None], axis=0)
+    cand = jnp.where(nv == 1, new, 0)
+    s_min = jnp.min(jnp.where(onehot & (nv[:, None] == 1),
+                              cand[:, None], _I32_MAX), axis=0)
+    s_max = jnp.max(jnp.where(onehot & (nv[:, None] == 1),
+                              cand[:, None], _I32_MIN), axis=0)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (lp, 128), 1)
+    out = jnp.where(lane == 0, acc + s_sum[:, None], acc)
+    out = jnp.where(lane == 1, acc + s_count[:, None], out)
+    out = jnp.where(lane == 2, acc + s_below[:, None], out)
+    out = jnp.where(lane == 3, jnp.minimum(acc, s_min[:, None]), out)
+    out = jnp.where(lane == 4, jnp.maximum(acc, s_max[:, None]), out)
+    out = jnp.where(lane == 5, acc + s_above[:, None], out)
+    out = jnp.where(lane == 6, acc + s_sumb[:, None], out)
+    out_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rss_delta_fold(acc: jax.Array, delta: jax.Array, *,
+                   interpret: bool = True) -> jax.Array:
+    """Advance a materialized-aggregate accumulator tile by a dense delta
+    buffer: acc [Lp, 128] int32 (lane rows, sublane-aligned), delta
+    [Dp, 128] int32 change rows (see `_delta_fold_kernel` for the column
+    layout; rows with col 0 == -1 are padding and fold nowhere).  Returns
+    the advanced [Lp, 128] tile — O(delta) work, independent of table
+    size.  int32 throughout: callers bound |contribution| and the pending
+    buffer length so neither a row delta nor an additive accumulator lane
+    can wrap (the `tensorstore.materialized` overflow ladder)."""
+    lp, dp = acc.shape[0], delta.shape[0]
+    assert acc.shape == (lp, 128) and delta.shape == (dp, 128)
+    assert lp % 8 == 0 and dp % 8 == 0, (lp, dp)
+    return pl.pallas_call(
+        _delta_fold_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((lp, 128), lambda i: (0, 0)),     # accumulator
+            pl.BlockSpec((dp, 128), lambda i: (0, 0)),     # delta rows
+        ],
+        out_specs=pl.BlockSpec((lp, 128), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((lp, 128), jnp.int32),
+        interpret=interpret,
+    )(acc, delta)
 
 
 @jax.jit
 def tree_fold_partials(partials: jax.Array) -> jax.Array:
-    """Device-side pairwise fold of [chunks, G, 5] chunked partials into
-    the final [G, 5] rows (lanes 0-2 add, 3 min, 4 max).  int32
+    """Device-side pairwise fold of [chunks, G, 7] chunked partials into
+    the final [G, 7] rows (lanes 0-2 and 5-6 add, 3 min, 4 max).  int32
     throughout — exact only under the whole-scan bound the chunked path
     already requires."""
-    ident = jnp.asarray([0, 0, 0, _I32_MAX, _I32_MIN], jnp.int32)
-    lane = jnp.arange(5, dtype=jnp.int32)[None, None, :]
+    ident = jnp.asarray([0, 0, 0, _I32_MAX, _I32_MIN, 0, 0], jnp.int32)
+    lane = jnp.arange(7, dtype=jnp.int32)[None, None, :]
     while partials.shape[0] > 1:
         if partials.shape[0] % 2:
             pad = jnp.broadcast_to(ident, (1,) + partials.shape[1:])
             partials = jnp.concatenate([partials, pad])
         a, b = partials[0::2], partials[1::2]
         partials = jnp.where(
-            lane < 3, a + b,
+            (lane < 3) | (lane >= 5), a + b,
             jnp.where(lane == 3, jnp.minimum(a, b), jnp.maximum(a, b)))
     return partials[0]

@@ -31,10 +31,10 @@ import numpy as np
 
 from ...obs import REGISTRY, StatsView
 from ..config import resolve_interpret
-from .kernel import (rss_scan_agg, rss_scan_agg_chunked,
+from .kernel import (rss_delta_fold, rss_scan_agg, rss_scan_agg_chunked,
                      rss_scan_agg_grouped, tree_fold_partials)
-from .ref import (rss_scan_agg_chunked_ref, rss_scan_agg_grouped_ref,
-                  rss_scan_agg_ref)
+from .ref import (rss_delta_fold_ref, rss_scan_agg_chunked_ref,
+                  rss_scan_agg_grouped_ref, rss_scan_agg_ref)
 
 # jitted ref entry points: the use_kernel=False paths serve fused
 # dispatches too (benches, oracle runs), where eager per-op dispatch of
@@ -68,7 +68,8 @@ FLAT_MODE_MAX_GROUPS = 32
 # layer's metrics; dict-shaped API preserved for existing readers
 LAUNCH_STATS = StatsView(REGISTRY, "kernel_launch",
                          ("dispatches", "pallas_calls", "host", "flat",
-                          "chunked", "block_shrinks", "overflow_fallbacks"))
+                          "chunked", "block_shrinks", "overflow_fallbacks",
+                          "delta_folds"))
 
 
 def reset_launch_stats() -> dict:
@@ -136,16 +137,18 @@ def scan_bound_ok(maxabs: int, n_pages: int) -> bool:
 # --- scalar path ------------------------------------------------------------
 
 def fold_partials(partials) -> list[int]:
-    """Fold [n_blocks, 5] per-block device partials into the final [sum,
-    count, count_below, min, max] — exact past int32: partials are int32,
+    """Fold [n_blocks, 7] per-block device partials into the final [sum,
+    count, count_below, min, max, count_above, sum_below] — exact past
+    int32: partials are int32,
     so an int64 host accumulation cannot wrap below 2**32 blocks (a store
     that large doesn't fit an int32 page index anyway)."""
     rows = np.asarray(partials, dtype=np.int64)
     if not rows.shape[0]:
-        return [0, 0, 0, int(_I32_MAX), int(_I32_MIN)]
+        return [0, 0, 0, int(_I32_MAX), int(_I32_MIN), 0, 0]
     return [int(rows[:, 0].sum()), int(rows[:, 1].sum()),
             int(rows[:, 2].sum()), int(rows[:, 3].min()),
-            int(rows[:, 4].max())]
+            int(rows[:, 4].max()), int(rows[:, 5].sum()),
+            int(rows[:, 6].sum())]
 
 
 def snapshot_agg_members(store: dict, member_ts, floor=0, *,
@@ -160,7 +163,8 @@ def snapshot_agg_members(store: dict, member_ts, floor=0, *,
     reduce payload element 1 over visible pages tagged tag_main/tag_alt,
     all in ONE device pass.
 
-    Returns the folded [sum, count, count_below, min, max] as Python ints
+    Returns the folded [sum, count, count_below, min, max, count_above,
+    sum_below] as Python ints
     (per-block int32 partials on device, exact fold on host);
     `tensorstore.version_store.finalize_agg` picks the requested statistic
     (min/max carry sentinels when count == 0).  The block size shrinks
@@ -188,17 +192,19 @@ def snapshot_agg_members(store: dict, member_ts, floor=0, *,
 # --- grouped paths ----------------------------------------------------------
 
 def fold_group_partials(partials) -> list[list[int]]:
-    """Fold [n_blocks, G, 5] per-block per-group device partials into G
-    final [sum, count, count_below, min, max] rows — vectorized int64
+    """Fold [n_blocks, G, 7] per-block per-group device partials into G
+    final [sum, count, count_below, min, max, count_above, sum_below]
+    rows — vectorized int64
     accumulation, same overflow discipline as `fold_partials`."""
     rows = np.asarray(partials, dtype=np.int64)
     n_groups = rows.shape[1]
     if not rows.shape[0]:
-        return [[0, 0, 0, int(_I32_MAX), int(_I32_MIN)]
+        return [[0, 0, 0, int(_I32_MAX), int(_I32_MIN), 0, 0]
                 for _ in range(n_groups)]
     folded = np.concatenate([rows[:, :, :3].sum(axis=0),
                              rows[:, :, 3].min(axis=0)[:, None],
-                             rows[:, :, 4].max(axis=0)[:, None]], axis=1)
+                             rows[:, :, 4].max(axis=0)[:, None],
+                             rows[:, :, 5:7].sum(axis=0)], axis=1)
     return folded.tolist()
 
 
@@ -218,9 +224,11 @@ def snapshot_group_agg_members(store: dict, gid, n_groups: int,
     rows of (tag_main, tag_alt, threshold) give each lane its own config
     (fused multi-plan batches); None broadcasts the scalar args.
 
-    Returns n_groups folded [sum, count, count_below, min, max] rows as
+    Returns n_groups folded [sum, count, count_below, min, max,
+    count_above, sum_below] rows as
     Python ints; a group no visible page maps to is [0, 0, 0, INT32_MAX,
-    INT32_MIN] (count disambiguates — `finalize_agg` folds the sentinels
+    INT32_MIN, 0, 0] (count disambiguates — `finalize_agg` folds the
+    sentinels
     to 0).  Block size shrinks automatically under the overflow bound."""
     thresh = _I32_MAX if threshold is None else int(threshold)
     gid = jnp.asarray(np.asarray(gid, np.int32).reshape(-1, 1))
@@ -255,7 +263,7 @@ def snapshot_group_agg_chunked(store: dict, gid, n_groups: int,
                                interpret: Optional[bool] = None) \
         -> list[list[int]]:
     """Chunked two-stage GROUP BY: select pass + tiled-group reduce +
-    device tree fold (two pallas calls, [G, 5] back).  Same semantics as
+    device tree fold (two pallas calls, [G, 7] back).  Same semantics as
     `snapshot_group_agg_members`; requires the whole-scan int32 bound —
     callers should go through `grouped_agg_auto`, which checks it and
     falls back to flat-lane."""
@@ -276,6 +284,33 @@ def snapshot_group_agg_chunked(store: dict, gid, n_groups: int,
             group_params=group_params, group_tile=group_tile,
             interpret=resolve_interpret(interpret))
     return np.asarray(tree_fold_partials(partials)).tolist()
+
+
+# --- incremental delta fold (materialized aggregates) -----------------------
+
+_delta_fold_ref_j = jax.jit(rss_delta_fold_ref)
+
+
+def delta_fold(acc, delta, *, use_kernel: bool = True,
+               interpret: Optional[bool] = None) -> jax.Array:
+    """Advance a materialized-aggregate accumulator tile by a dense delta
+    buffer: acc [Lp, 128] int32 lane rows (lanes 0..6 = sum, count,
+    count_below, min, max, count_above, sum_below), delta [Dp, 128] int32
+    change rows — col 0 = target lane (-1 = padding), 1 = retracted old
+    value, 2 = old-valid, 3 = applied new value, 4 = new-valid, 5 =
+    threshold.  O(delta) regardless of table size — this is the commit-
+    time fold behind `tensorstore.materialized.MaterializedView`.  The
+    caller owns the int32 overflow ladder (bounded |contribution| and
+    bounded pending-buffer length); min/max lanes only tighten here —
+    retracting an attained bound is the host's dirty-bit demotion."""
+    acc = jnp.asarray(acc, jnp.int32)
+    delta = jnp.asarray(delta, jnp.int32)
+    LAUNCH_STATS["delta_folds"] += 1
+    if not use_kernel:
+        return _delta_fold_ref_j(acc, delta)
+    LAUNCH_STATS["pallas_calls"] += 1
+    return rss_delta_fold(acc, delta,
+                          interpret=resolve_interpret(interpret))
 
 
 def grouped_agg_auto(store: dict, gid, n_groups: int, member_ts, floor=0,

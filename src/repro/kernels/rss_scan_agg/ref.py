@@ -19,11 +19,13 @@ def rss_scan_agg_ref(data: jax.Array, ts: jax.Array, member_ts: jax.Array,
                      threshold: jax.Array | int = _I32_MAX,
                      *, block_pages: int = 8) -> jax.Array:
     """data [P,K,E] int32, ts [P,K], sorted member_ts [M], scalars ->
-    [P/BP, 5] int32 per-block partials of [sum, count, count_below, min,
-    max] of payload element 1 over member-visible pages whose tag (element
+    [P/BP, 7] int32 per-block partials of [sum, count, count_below, min,
+    max, count_above, sum_below] of payload element 1 over member-visible
+    pages whose tag (element
     0) is tag_main or tag_alt — the kernel's exact blocking, so kernel and
     oracle are bitwise comparable; fold the block axis on host (lanes 0-2
-    add, 3 min, 4 max; `ops.fold_partials`) in Python ints so whole-scan
+    and 5-6 add, 3 min, 4 max; `ops.fold_partials`) in Python ints so
+    whole-scan
     sums never wrap int32.  Empty member set with floor 0 resolves initial
     slots only (rss_gather semantics); min/max carry INT32_MAX/INT32_MIN
     sentinels for blocks where nothing matched (count disambiguates)."""
@@ -35,13 +37,53 @@ def rss_scan_agg_ref(data: jax.Array, ts: jax.Array, member_ts: jax.Array,
     tag = sel[:, 0].reshape(P // bp, bp)
     x = sel[:, 1].reshape(P // bp, bp)
     valid = (tag == tag_main) | (tag == tag_alt)
+    below = valid & (x < threshold)
     return jnp.stack([
         jnp.sum(jnp.where(valid, x, 0), axis=1),
         jnp.sum(valid.astype(jnp.int32), axis=1),
-        jnp.sum((valid & (x < threshold)).astype(jnp.int32), axis=1),
+        jnp.sum(below.astype(jnp.int32), axis=1),
         jnp.min(jnp.where(valid, x, _I32_MAX), axis=1),
         jnp.max(jnp.where(valid, x, _I32_MIN), axis=1),
+        jnp.sum((valid & (x > threshold)).astype(jnp.int32), axis=1),
+        jnp.sum(jnp.where(below, x, 0), axis=1),
     ], axis=1).astype(jnp.int32)
+
+
+def rss_delta_fold_ref(acc: jax.Array, delta: jax.Array) -> jax.Array:
+    """Pure-jnp oracle for `rss_delta_fold`: acc [Lp, 128] lane rows,
+    delta [Dp, 128] change rows (col 0 = target lane / -1 pad, 1 = old,
+    2 = old-valid, 3 = new, 4 = new-valid, 5 = threshold) -> advanced
+    [Lp, 128] tile.  Additive lanes retract old and apply new; min/max
+    lanes only tighten with applied new values (supersession of an
+    attained bound is the host's dirty-bit demotion, not the fold's)."""
+    lp = acc.shape[0]
+    tgt, thr = delta[:, 0], delta[:, 5]
+    old, ov = delta[:, 1], delta[:, 2]
+    new, nv = delta[:, 3], delta[:, 4]
+    onehot = tgt[:, None] == jnp.arange(lp, dtype=jnp.int32)[None, :]
+    oh = onehot.astype(jnp.int32)
+    old_b = (old < thr).astype(jnp.int32)
+    new_b = (new < thr).astype(jnp.int32)
+    adds = jnp.stack([
+        new * nv - old * ov,
+        nv - ov,
+        nv * new_b - ov * old_b,
+        nv * (new > thr).astype(jnp.int32) - ov * (old > thr).astype(jnp.int32),
+        new * nv * new_b - old * ov * old_b,
+    ], axis=1)                                             # [Dp, 5]
+    s = jnp.einsum("dl,ds->ls", oh, adds)                  # [Lp, 5]
+    applied = onehot & (nv[:, None] == 1)
+    s_min = jnp.min(jnp.where(applied, new[:, None], _I32_MAX), axis=0)
+    s_max = jnp.max(jnp.where(applied, new[:, None], _I32_MIN), axis=0)
+    lane = jnp.arange(128, dtype=jnp.int32)[None, :]
+    out = jnp.where(lane == 0, acc + s[:, 0:1], acc)
+    out = jnp.where(lane == 1, acc + s[:, 1:2], out)
+    out = jnp.where(lane == 2, acc + s[:, 2:3], out)
+    out = jnp.where(lane == 3, jnp.minimum(acc, s_min[:, None]), out)
+    out = jnp.where(lane == 4, jnp.maximum(acc, s_max[:, None]), out)
+    out = jnp.where(lane == 5, acc + s[:, 3:4], out)
+    out = jnp.where(lane == 6, acc + s[:, 4:5], out)
+    return out.astype(jnp.int32)
 
 
 def _group_param_cols(n_groups, tag_main, tag_alt, threshold, group_params):
@@ -67,7 +109,7 @@ def rss_scan_agg_grouped_ref(data: jax.Array, ts: jax.Array, gid: jax.Array,
                              block_pages: int = 8) -> jax.Array:
     """GROUP BY twin of `rss_scan_agg_ref` (flat-lane blocking): `gid`
     [P, 1] int32 group id per page (-1 = no group), `n_groups`
-    accumulator rows -> [P/BP, n_groups, 5] per-block per-group partials
+    accumulator rows -> [P/BP, n_groups, 7] per-block per-group partials
     with the kernel's exact blocking (bitwise comparable; fold the block
     axis per group on host — `ops.fold_group_partials`).  group_params
     [n_groups, 3] gives each lane its own (tag_main, tag_alt, threshold).
@@ -90,12 +132,15 @@ def rss_scan_agg_grouped_ref(data: jax.Array, ts: jax.Array, gid: jax.Array,
     grp = grp.reshape(P // bp, bp, n_groups)               # [NB, BP, G]
     xb = x.reshape(P // bp, bp)[:, :, None]
     thr3 = thr[None, None, :]
+    below = grp & (xb < thr3)
     return jnp.stack([
         jnp.sum(jnp.where(grp, xb, 0), axis=1),
         jnp.sum(grp.astype(jnp.int32), axis=1),
-        jnp.sum((grp & (xb < thr3)).astype(jnp.int32), axis=1),
+        jnp.sum(below.astype(jnp.int32), axis=1),
         jnp.min(jnp.where(grp, xb, _I32_MAX), axis=1),
         jnp.max(jnp.where(grp, xb, _I32_MIN), axis=1),
+        jnp.sum((grp & (xb > thr3)).astype(jnp.int32), axis=1),
+        jnp.sum(jnp.where(below, xb, 0), axis=1),
     ], axis=2).astype(jnp.int32)
 
 
@@ -113,7 +158,7 @@ def rss_scan_agg_chunked_ref(data: jax.Array, ts: jax.Array,
     (`_chunk_shape`), but each chunk reduces via `jax.ops.segment_*` —
     O(P) regardless of G, and bitwise equal to the kernel's one-hot sums
     (int32 addition is order-independent; segment_min/max identities are
-    the kernel's sentinels).  Returns [chunks, n_groups, 5] int32."""
+    the kernel's sentinels).  Returns [chunks, n_groups, 7] int32."""
     P = data.shape[0]
     assert gid.shape == (P, 1)
     rows, _r, nc, Pp = _chunk_shape(P, rows_per_step, fold_chunks)
@@ -134,7 +179,10 @@ def rss_scan_agg_chunked_ref(data: jax.Array, ts: jax.Array,
     valid = (((tag == tmain[gc]) | (tag == talt[gc])) &
              (g >= 0) & (g < n_groups))
     seg = jnp.where(valid, g, n_groups)        # invalid -> spill segment
-    below = (valid & (x < thr[gc])).astype(jnp.int32)
+    belowm = valid & (x < thr[gc])
+    below = belowm.astype(jnp.int32)
+    above = (valid & (x > thr[gc])).astype(jnp.int32)
+    sumb = jnp.where(belowm, x, 0)
     cp = Pp // nc                              # pages per chunk
     out = []
     for c in range(nc):
@@ -147,5 +195,7 @@ def rss_scan_agg_chunked_ref(data: jax.Array, ts: jax.Array,
             jax.ops.segment_sum(below[sl], s, **args),
             jax.ops.segment_min(jnp.where(v, b, _I32_MAX), s, **args),
             jax.ops.segment_max(jnp.where(v, b, _I32_MIN), s, **args),
+            jax.ops.segment_sum(above[sl], s, **args),
+            jax.ops.segment_sum(sumb[sl], s, **args),
         ], axis=1)[:n_groups])
     return jnp.stack(out).astype(jnp.int32)

@@ -54,6 +54,12 @@ class Metrics:
     olap_mode_flat: int = 0
     olap_mode_chunked: int = 0
     olap_mode_host: int = 0
+    # materialized-aggregate serving (materialize=True runs): plans served
+    # from a live accumulator tile vs registered plans that fell back to
+    # the fused scan, and dirty min/max lanes demoted to partial rescans
+    olap_view_hits: int = 0
+    olap_view_fallbacks: int = 0
+    olap_view_demotions: int = 0
     max_engine_txns: int = 0     # peak engine per-txn state (bounded by GC)
     max_rss_tracked: int = 0     # peak RSSManager per-txn state (ditto)
     max_wal_records: int = 0     # peak primary WAL length (truncation bound)
@@ -126,6 +132,9 @@ def _harvest_obs(m: Metrics) -> None:
     m.olap_mode_flat = tot.get("mirror_exec_mode_flat", 0)
     m.olap_mode_chunked = tot.get("mirror_exec_mode_chunked", 0)
     m.olap_mode_host = tot.get("mirror_exec_mode_host", 0)
+    m.olap_view_hits = tot.get("mirror_exec_view_hits", 0)
+    m.olap_view_fallbacks = tot.get("mirror_exec_view_fallbacks", 0)
+    m.olap_view_demotions = tot.get("mirror_exec_view_demotions", 0)
     m.olap_kernel_dispatches = tot.get("kernel_launch_dispatches", 0)
     m.olap_kernel_pallas_calls = tot.get("kernel_launch_pallas_calls", 0)
     m.serve_latency = REGISTRY.hist_summary("olap_serve_seconds")
@@ -399,6 +408,7 @@ def run_single_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
                     paged_olap: bool = False,
                     check_scans: bool = False,
                     batch_plans: bool = False,
+                    materialize: bool = False,
                     certifier=None) -> Metrics:
     """olap_scan=True routes OLAP queries through batched ("olap", plan)
     steps served by one plan-execution seam call each; paged_olap=True
@@ -407,11 +417,17 @@ def run_single_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
     fast path); check_scans=True asserts every plan result equals the
     per-key engine read path (the oracle); batch_plans=True collects
     each round's same-horizon aggregate plans into ONE fused BatchPlan
-    dispatch (cross-reader whole-batch plan fusion); and `certifier`
+    dispatch (cross-reader whole-batch plan fusion); materialize=True
+    registers the workload's fixed-key plans
+    (`Scale.materialized_plans()`) for incremental materialization —
+    serves become O(delta) on view hits, counted in olap_view_*; and
+    `certifier`
     selects the OLTP commit-certification policy (`repro.mvcc.certify`)."""
     htap = SingleNodeHTAP(olap_mode, paged=paged_olap,
                           check_scans=check_scans,
                           reserve_keys=scale.key_families(),
+                          materialize=(scale.materialized_plans()
+                                       if materialize else None),
                           certifier=certifier)
     load_initial(htap.engine, scale)
     m = Metrics(certifier=htap.engine.certifier.name)
@@ -458,17 +474,22 @@ def run_multi_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
                    ship_skew: int = 0,
                    freshness_hints: bool = False,
                    batch_plans: bool = False,
+                   materialize: bool = False,
                    certifier=None) -> Metrics:
     """N-replica decoupled-storage run.  `ship_skew` staggers the fleet:
     replica i ships every `ship_every * (1 + i * ship_skew)` rounds, so the
     run exercises skewed per-replica lag (the routing policies' input);
     `freshness_hints` routes each OLAP query with its bounded-staleness
-    requirement from `workload.OLAP_FRESHNESS`."""
+    requirement from `workload.OLAP_FRESHNESS`; `materialize` registers
+    the workload's fixed-key plans on every replica's mirror — views
+    advance during delta ships and serve O(delta) on gate hits."""
     htap = MultiNodeHTAP(olap_mode, paged_olap=paged_olap,
                          check_scans=check_scans, n_replicas=n_replicas,
                          route_policy=route_policy,
                          max_staleness=max_staleness,
                          reserve_keys=scale.key_families(),
+                         materialize=(scale.materialized_plans()
+                                      if materialize else None),
                          certifier=certifier)
     load_initial(htap.primary, scale)
     htap.ship_log()

@@ -72,12 +72,18 @@ class SingleNodeHTAP:
     def __init__(self, olap_mode: str = "ssi+rss", *, paged: bool = False,
                  check_scans: bool = False,
                  reserve_keys: Optional[Sequence[str]] = None,
+                 materialize: Optional[Sequence[Plan]] = None,
                  certifier=None) -> None:
         """`certifier` picks the OLTP commit-certification policy
         (`repro.mvcc.certify`): name / instance / factory; None keeps the
         conservative structural SSI abort.  OLAP behaviour — RSS
         construction, the WAL deps messages it feeds on — is certifier-
-        independent by design."""
+        independent by design.  `materialize` registers aggregate plans
+        for incremental materialization on the paged mirror
+        (`tensorstore.materialized`): serves of an equal plan cost
+        O(delta since last commit) instead of O(pages scanned), falling
+        back to the fused scan whenever the snapshot gate can't prove
+        consistency."""
         assert olap_mode in ("ssi", "ssi+safesnapshots", "ssi+rss")
         self.olap_mode = olap_mode
         self.engine = Engine("ssi", certifier=certifier)
@@ -93,6 +99,11 @@ class SingleNodeHTAP:
             PagedVersionStore(self.mirror) if paged else None
         if self.mirror is not None and reserve_keys:
             self.mirror.reserve(reserve_keys)
+        if materialize:
+            assert self.mirror is not None, \
+                "materialize= needs paged=True (views live on the mirror)"
+            for p in materialize:
+                self.mirror.register_view(p)
         self._pins: dict[int, int] = {}       # txn tid -> PRoT reader id
         self._serve_h: dict[tuple, Any] = {}  # plan kind -> serve histogram
         # in-process WAL consumers as registered slots: truncation goes
@@ -119,8 +130,13 @@ class SingleNodeHTAP:
         if self.mirror is not None:
             self.mirror.catch_up(self.engine.wal,
                                  gc_floor=self.prot.gc_floor_seq())
+            # fold commits the fresh snapshot admits into the view tiles
+            self.mirror.advance_views(snap)
         self.rss_manager.gc(keep_lsn=self.prot.gc_floor(),
                             keep_seq=self.prot.gc_floor_seq())
+        if self.mirror is not None:
+            # bound view-gate bookkeeping by the same pinned floor
+            self.mirror.gc_views(self.prot.gc_floor_seq())
         self.engine.wal.ack("rss", self.rss_manager.applied_lsn)
         if self.mirror is not None:
             self.engine.wal.ack("mirror", self.mirror.applied_lsn)
@@ -260,7 +276,8 @@ class Replica:
 
     def __init__(self, *, with_rss: bool, paged: bool = False,
                  check_scans: bool = False,
-                 reserve_keys: Optional[Sequence[str]] = None) -> None:
+                 reserve_keys: Optional[Sequence[str]] = None,
+                 materialize: Optional[Sequence[Plan]] = None) -> None:
         self.store = Store()
         self.version_store: VersionStore = ChainVersionStore(self.store)
         self.applied_lsn = 0
@@ -274,6 +291,11 @@ class Replica:
             PagedVersionStore(self.mirror) if paged else None
         if self.mirror is not None and reserve_keys:
             self.mirror.reserve(reserve_keys)   # page-range locality
+        if materialize:
+            assert self.mirror is not None, \
+                "materialize= needs paged=True (views live on the mirror)"
+            for p in materialize:
+                self.mirror.register_view(p)    # advance during delta ships
         self._si_pins: dict[int, int] = {}    # reader id -> pinned seq
         self._next_si_reader = 1
 
@@ -304,10 +326,18 @@ class Replica:
                 self.applied_seq = seq
             n += 1
         if self.rss_manager is not None and n:
-            self.rss_manager.construct()
+            snap = self.rss_manager.construct()
+            if self.mirror is not None:
+                # views advance with the delta ship, at the snapshot the
+                # fresh construct admits
+                self.mirror.advance_views(snap)
             # bound replica-side RSS bookkeeping by the active/pinned window
             self.rss_manager.gc(keep_lsn=self.prot.gc_floor(),
                                 keep_seq=self.prot.gc_floor_seq())
+        elif self.mirror is not None and n:
+            self.mirror.advance_views(self.applied_seq)
+        if self.mirror is not None and n:
+            self.mirror.gc_views(self.gc_floor_seq())
         return n
 
     # reader snapshots -------------------------------------------------------
@@ -394,6 +424,7 @@ class MultiNodeHTAP:
                  check_scans: bool = False, n_replicas: int = 1,
                  route_policy="freshest", max_staleness: int = 100,
                  reserve_keys: Optional[Sequence[str]] = None,
+                 materialize: Optional[Sequence[Plan]] = None,
                  certifier=None) -> None:
         """`certifier` configures the PRIMARY's commit certification (see
         `repro.mvcc.certify`).  Replicas replay begin/commit/abort + deps
@@ -406,7 +437,8 @@ class MultiNodeHTAP:
         self.primary = Engine("ssi", certifier=certifier)
         replicas = [Replica(with_rss=(olap_mode == "ssi+rss"),
                             paged=paged_olap, check_scans=check_scans,
-                            reserve_keys=reserve_keys)
+                            reserve_keys=reserve_keys,
+                            materialize=materialize)
                     for _ in range(n_replicas)]
         self.cluster = ReplicaCluster(self.primary, replicas,
                                       policy=route_policy,

@@ -11,9 +11,12 @@ OLTP transactions (the paper's writers): new_order, payment, order_status
 (read-only OLTP — runs under SSI, not RSS, per Sec 5.2).
 OLAP queries (scan-heavy, long-running): stock_level_scan, customer_balance,
 order_revenue, district_revenue_group (GROUP BY district, AVG via compound
-sum+count), stock_overview (multi-statistic compound) — read sets of
+sum+count), district_revenue_all (its statically-keyed, materializable
+twin), stock_overview (multi-statistic compound incl. a pushed-down
+count_above predicate) — read sets of
 hundreds of keys, the shape that makes SSI writer-abort OLTP transactions
-(Fig. 5/7) and SafeSnapshots reader-wait.
+(Fig. 5/7) and SafeSnapshots reader-wait.  `Scale.materialized_plans()`
+names the fixed-key plans worth a live accumulator tile.
 """
 
 from __future__ import annotations
@@ -32,6 +35,7 @@ class Scale:
     districts: int = 4        # per warehouse
     customers: int = 20       # per district
     items: int = 50           # stock rows per warehouse
+    order_capacity: int = 8   # statically-addressable orders per district
 
     def all_stock_keys(self) -> list[str]:
         return [f"stock:{w}:{i}" for w in range(self.warehouses)
@@ -45,16 +49,62 @@ class Scale:
         return [f"district:{w}:{d}" for w in range(self.warehouses)
                 for d in range(self.districts)]
 
+    def order_range_keys(self, w: int, d: int) -> list[str]:
+        """The district's statically-addressable order key range (the
+        first `order_capacity` o_ids) — a FIXED key set, so plans over it
+        fingerprint identically query to query and can be materialized
+        (unwritten order keys decode to 0, which no "total"-field
+        aggregate counts)."""
+        return [f"order:{w}:{d}:{o}" for o in range(self.order_capacity)]
+
     def key_families(self) -> list[str]:
         """Every statically-known workload key, family-major and in the
         exact order the OLAP plans enumerate them — reserve these
         contiguously in a `PagedMirror` so dense plans resolve to page
         RANGES (the `paged.as_page_range` slice fast path) instead of
-        gathers.  Order keys are allocated on demand (o_id is dynamic)."""
+        gathers.  Each district's first `order_capacity` order keys are
+        reserved too (the static revenue plan's ranges); o_ids past the
+        capacity are allocated on demand."""
         return ([f"warehouse:{w}" for w in range(self.warehouses)]
                 + self.all_district_keys()
                 + self.all_customer_keys()
-                + self.all_stock_keys())
+                + self.all_stock_keys()
+                + [k for w in range(self.warehouses)
+                   for d in range(self.districts)
+                   for k in self.order_range_keys(w, d)])
+
+    # ---------------------------------------------- registrable plan builders
+    # Frozen plan dataclasses hash by value, so plans built here always
+    # fingerprint-match the registry entries `materialized_plans` seeds —
+    # the queries below construct their batched shapes through these.
+    def stock_level_plan(self) -> AggPlan:
+        return AggPlan(tuple(self.all_stock_keys()),
+                       AggOp("count_below", "int", 50))
+
+    def customer_balance_plan(self) -> AggPlan:
+        return AggPlan(tuple(self.all_customer_keys()), AggOp("sum", "int"))
+
+    def stock_overview_plan(self) -> MultiAggPlan:
+        return MultiAggPlan(
+            tuple(self.all_stock_keys()),
+            (AggOp("sum", "int"), AggOp("count", "int"), AggOp("min", "int"),
+             AggOp("count_above", "int", 90)))
+
+    def district_revenue_plan(self) -> GroupByPlan:
+        return GroupByPlan(
+            tuple(tuple(self.order_range_keys(w, d))
+                  for w in range(self.warehouses)
+                  for d in range(self.districts)),
+            (AggOp("sum", "total"), AggOp("count", "total")))
+
+    def materialized_plans(self) -> tuple:
+        """The hot statically-keyed OLAP plans worth a live accumulator
+        tile (`materialize=` on the HTAP facades): every batched query
+        over a fixed key range.  `district_revenue_group` stays
+        unregistrable by design — its key ranges chase next_o_id, so its
+        fingerprint changes query to query."""
+        return (self.stock_level_plan(), self.customer_balance_plan(),
+                self.stock_overview_plan(), self.district_revenue_plan())
 
 
 # Each yielded step is ('r', key) or ('w', key, update_fn) where update_fn
@@ -141,8 +191,7 @@ def stock_level_scan(rng: random.Random, sc: Scale,
     """CH Q-like: total stock below threshold across every warehouse."""
     low = 0
     if batched:
-        low = yield ("olap", AggPlan(tuple(sc.all_stock_keys()),
-                                     AggOp("count_below", "int", 50)))
+        low = yield ("olap", sc.stock_level_plan())
     else:
         for key in sc.all_stock_keys():
             q = yield ("r", key)
@@ -155,8 +204,7 @@ def customer_balance(rng: random.Random, sc: Scale,
                      batched: bool = False) -> Iterator[Step]:
     total = 0
     if batched:
-        total = yield ("olap", AggPlan(tuple(sc.all_customer_keys()),
-                                       AggOp("sum", "int")))
+        total = yield ("olap", sc.customer_balance_plan())
     else:
         for key in sc.all_customer_keys():
             v = yield ("r", key)
@@ -231,19 +279,48 @@ def district_revenue_group(rng: random.Random, sc: Scale,
     yield ("out", out)
 
 
+def district_revenue_all(rng: random.Random, sc: Scale,
+                         batched: bool = False) -> Iterator[Step]:
+    """GROUP BY district over the STATIC order ranges (the first
+    `order_capacity` o_ids per district): revenue and order count.  The
+    registrable twin of `district_revenue_group` — that query's key
+    ranges chase next_o_id, so its plan fingerprint changes query to
+    query; this one's ranges are fixed, so its `GroupByPlan` can be
+    served from a live materialized tile (`materialize=` on the
+    facades)."""
+    dkeys = sc.all_district_keys()
+    if batched:
+        rows = yield ("olap", sc.district_revenue_plan())
+        out = [(dk, s, n) for dk, (s, n) in zip(dkeys, rows)]
+        yield ("out", out)
+        return
+    out = []
+    for dk in dkeys:
+        _, w, d = dk.split(":")
+        s = n = 0
+        for key in sc.order_range_keys(int(w), int(d)):
+            order = yield ("r", key)
+            if isinstance(order, dict) and "total" in order:
+                s += order["total"]
+                n += 1
+        out.append((dk, s, n))
+    yield ("out", out)
+
+
 def stock_overview(rng: random.Random, sc: Scale,
                    batched: bool = False) -> Iterator[Step]:
-    """Compound multi-statistic dashboard: total, AVG, and floor of stock
-    quantities — the batched shape is ONE `MultiAggPlan` answered from a
-    single visibility pass (the kernel computes all five statistic lanes
-    anyway), never three scans."""
+    """Compound multi-statistic dashboard: total, AVG, floor, and
+    over-90 headcount of stock quantities — the batched shape is ONE
+    `MultiAggPlan` answered from a single visibility pass (the kernel
+    computes all seven statistic lanes anyway), never four scans.  The
+    count_above op rides the predicate-pushdown seam: the (field,
+    threshold) config lowers to its own kernel pass, with the count
+    folded on device."""
     keys = sc.all_stock_keys()
     if batched:
-        s, n, mn = yield ("olap", MultiAggPlan(
-            tuple(keys), (AggOp("sum", "int"), AggOp("count", "int"),
-                          AggOp("min", "int"))))
+        s, n, mn, hi = yield ("olap", sc.stock_overview_plan())
     else:
-        s = n = 0
+        s = n = hi = 0
         mn = None
         for key in keys:
             q = yield ("r", key)
@@ -251,12 +328,14 @@ def stock_overview(rng: random.Random, sc: Scale,
                 s += q
                 n += 1
                 mn = q if mn is None or q < mn else mn
+                hi += 1 if q > 90 else 0
         mn = mn if mn is not None else 0
-    yield ("out", (s, s // n if n else 0, mn))
+    yield ("out", (s, s // n if n else 0, mn, hi))
 
 
 OLAP_QUERIES = (stock_level_scan, customer_balance, order_revenue,
-                district_revenue_group, stock_overview)
+                district_revenue_group, district_revenue_all,
+                stock_overview)
 
 # Per-query freshness requirements (bounded staleness, in WAL records) for
 # replica-cluster snapshot routing: None tolerates any replication lag; a
@@ -268,6 +347,7 @@ OLAP_FRESHNESS = {
     "customer_balance": 400,      # moderately fresh balance sheet
     "order_revenue": 120,         # near-real-time revenue dashboard
     "district_revenue_group": 200,  # per-district drill-down, fairly fresh
+    "district_revenue_all": 200,  # static drill-down twin, same freshness
     "stock_overview": None,       # inventory dashboard: staleness tolerant
 }
 

@@ -4,6 +4,7 @@ from .versioned import VersionedParamStore
 from .paged import (init_store, visible_slots, snapshot_read_ref,
                     visible_slots_members, snapshot_read_members,
                     publish_page, as_page_range, gather_pages)
+from .materialized import MaterializedView
 from .mirror import PagedMirror, decode_value, encode_value
 from .version_store import (AggOp, AggPlan, BatchPlan, ChainVersionStore,
                             GroupByPlan, MultiAggPlan, PagedVersionStore,
@@ -16,7 +17,7 @@ __all__ = [
     "init_store", "visible_slots", "snapshot_read_ref",
     "visible_slots_members", "snapshot_read_members", "publish_page",
     "as_page_range", "gather_pages",
-    "PagedMirror", "encode_value", "decode_value",
+    "PagedMirror", "MaterializedView", "encode_value", "decode_value",
     "VersionStore", "ChainVersionStore", "PagedVersionStore",
     "AggOp", "AggPlan", "BatchPlan", "MultiAggPlan", "GroupByPlan",
     "ScanPlan", "Plan",

@@ -32,6 +32,7 @@ unbounded chain store in-run.
 
 from __future__ import annotations
 
+import bisect
 from typing import Any, Iterable, Sequence
 
 import numpy as np
@@ -64,11 +65,19 @@ AGG_FIELD_TAGS = {"int": (TAG_INT, TAG_INIT), "total": (TAG_ORDER, _NO_TAG)}
 _INT32 = np.iinfo(np.int32)
 
 
+# AggOp kinds whose lane depends on the threshold scalar (predicate
+# pushdown: count_below / count_above / sum_below share one kernel pass
+# per (field, threshold) config)
+_THRESHOLDED_KINDS = ("count_below", "count_above", "sum_below")
+
+
 def _op_config(op) -> tuple:
     """The fused-kernel pass an `AggOp` needs: (field, threshold) —
-    threshold only matters to count_below, so every other kind shares its
-    field's default pass (the kernel emits all five lanes regardless)."""
-    return (op.field, op.threshold if op.kind == "count_below" else None)
+    threshold only matters to the thresholded kinds, so every other kind
+    shares its field's default pass (the kernel emits all seven lanes
+    regardless)."""
+    return (op.field,
+            op.threshold if op.kind in _THRESHOLDED_KINDS else None)
 
 
 def _lane_layout(plans) -> tuple[list, list, dict]:
@@ -181,7 +190,22 @@ class PagedMirror:
         self.exec_stats = StatsView(
             REGISTRY, "mirror_exec",
             ("plans", "batches", "batched_plans", "agg_dispatches",
-             "mode_flat", "mode_chunked", "mode_host"), labels=lbl)
+             "mode_flat", "mode_chunked", "mode_host",
+             "view_hits", "view_fallbacks", "view_demotions"), labels=lbl)
+        # materialized-aggregate registry: plan (frozen dataclass, hashed
+        # by value — the fingerprint) -> MaterializedView.  Applied
+        # commits queue in `_unfolded` and fold into the tiles as they
+        # become VISIBLE to a served/constructed snapshot
+        # (`advance_views` — RSS member sets grow monotonically, so the
+        # freshest snapshot serves from the tile while commits still
+        # excluded for unresolved deps stay queued).  `_folded_seqs`
+        # (sorted, pruned by `gc_views`) is what `view_gate` checks a
+        # snapshot against; seqs at-or-below `_seqs_floor` are covered by
+        # any snapshot floor >= it.
+        self.views: dict = {}
+        self._unfolded: list = []              # [(seq, WalRecord)], ascending
+        self._folded_seqs: list[int] = []
+        self._seqs_floor = 0
 
     # ----------------------------------------------------------- page alloc
     @property
@@ -249,6 +273,10 @@ class PagedMirror:
             page = self._ensure_page(key)
             self._publish(page, encode_value(value, self.page_elems), seq,
                           rec.txn, gc_floor)
+        if self.views:
+            # queue the commit for folding; it advances into the tiles
+            # once a served/constructed snapshot admits it (advance_views)
+            self._unfolded.append((seq, rec))
         return bool(rec.writes)
 
     def catch_up(self, wal: Wal, *, gc_floor: int = 0) -> int:
@@ -258,6 +286,155 @@ class PagedMirror:
             self.apply(rec, gc_floor=gc_floor)
             n += 1
         return n
+
+    # ------------------------------------------------- materialized views
+    def register_view(self, plan, *, use_kernel: bool = True,
+                      interpret=None):
+        """Register an aggregate plan for incremental materialization:
+        subsequent `execute_with_writers` calls with an equal plan (frozen
+        dataclasses hash by value — the fingerprint) serve from a live
+        accumulator tile advanced by commit-delta folds, when the
+        snapshot gate proves consistency.  Idempotent per plan; seeds the
+        tile with one full SI-prefix scan at the current watermark."""
+        from .materialized import MaterializedView
+
+        view = self.views.get(plan)
+        if view is not None:
+            return view
+        if self.views and self._unfolded:
+            # drain pending folds so the new view's full-prefix reseed
+            # baseline matches the fold state of its siblings
+            self.advance_views(self.watermark)
+        view = MaterializedView(self, plan, use_kernel=use_kernel,
+                                interpret=interpret)
+        if not self.views:
+            # the reseed scan folded every applied commit: record them
+            # all so the gate can check each against a snapshot
+            self._folded_seqs = sorted(
+                s for s in self.commit_seq.values() if s > self._seqs_floor)
+        self.views[plan] = view
+        return view
+
+    def gc_views(self, keep_seq: int) -> None:
+        """Prune `_folded_seqs` bookkeeping below the protected floor
+        (`PRoTManager.gc_floor_seq()` units): every live or future
+        snapshot has floor_seq >= keep_seq, so individual membership of
+        folded seqs at-or-below it never needs checking again.  Call
+        wherever RSS gc runs — the view analogue of WAL truncation."""
+        i = bisect.bisect_right(self._folded_seqs, keep_seq)
+        if i:
+            del self._folded_seqs[:i]
+        self._seqs_floor = max(self._seqs_floor, keep_seq)
+
+    def reseed_views(self) -> None:
+        """Recovery path: re-materialize every registered view from a
+        full SI-prefix scan at the current watermark (after deep GC, WAL
+        truncation, or degradation invalidated incremental state) and
+        re-baseline the fold bookkeeping to match — queued commits are
+        already in the rescanned prefix, so they are marked folded, not
+        re-applied."""
+        if not self.views:
+            return
+        self._unfolded = []
+        self._folded_seqs = sorted(
+            s for s in self.commit_seq.values() if s > self._seqs_floor)
+        for view in self.views.values():
+            view.reseed()
+
+    def _visible_fn(self, snapshot):
+        """seq -> bool visibility predicate for an RSS snapshot or an int
+        SI watermark."""
+        if isinstance(snapshot, RssSnapshot):
+            members = set(self.member_seqs_for(snapshot).tolist())
+            floor = snapshot.floor_seq
+            return lambda s: s <= floor or s in members
+        wm = int(snapshot)
+        return lambda s: s <= wm
+
+    def advance_views(self, snapshot) -> int:
+        """Fold every queued commit VISIBLE to `snapshot` into the
+        registered views (ascending seq order) and leave the rest queued;
+        returns the number folded.  RSS member sets grow monotonically,
+        so advancing at each constructed/served snapshot keeps the tiles
+        exactly at the freshest snapshot while commits still excluded
+        for unresolved dependencies wait their turn."""
+        if not self.views or not self._unfolded:
+            return 0
+        visible = self._visible_fn(snapshot)
+        keep, folded = [], 0
+        for seq, rec in self._unfolded:
+            if visible(seq):
+                for view in self.views.values():
+                    view.on_commit(rec, seq)
+                bisect.insort(self._folded_seqs, seq)
+                folded += 1
+            else:
+                keep.append((seq, rec))
+        self._unfolded = keep
+        return folded
+
+    def view_gate(self, snapshot) -> bool:
+        """True when `snapshot` provably equals the fold prefix the
+        materialized tiles hold: every folded seq visible to it, every
+        still-queued applied seq invisible.  Unverifiable when an RSS
+        snapshot's floor predates the tracking floor (`_seqs_floor`) ->
+        clean fallback."""
+        if isinstance(snapshot, RssSnapshot):
+            if snapshot.floor_seq < self._seqs_floor:
+                return False
+            above = self._folded_seqs[
+                bisect.bisect_right(self._folded_seqs, snapshot.floor_seq):]
+            if not above and not self._unfolded:
+                return True
+            visible = self._visible_fn(snapshot)
+            return (all(visible(s) for s in above)
+                    and not any(visible(s) for s, _ in self._unfolded))
+        wm = int(snapshot)
+        if self._folded_seqs and self._folded_seqs[-1] > wm:
+            return False
+        return not any(s <= wm for s, _ in self._unfolded)
+
+    def _try_views(self, plan, snapshot, need_writers: bool):
+        """Serve a plan (or a whole fused batch, all-or-nothing) from the
+        materialized registry: returns (result, writers) on a hit, None
+        to fall through to the fused-scan path.  Fallbacks are counted
+        only for REGISTERED plans that failed the gate (or degraded) —
+        an unregistered plan is not a fallback, it never had a view."""
+        from .version_store import BatchPlan, plan_keys
+
+        plans = plan.plans if isinstance(plan, BatchPlan) else (plan,)
+        views = [self.views.get(p) for p in plans]
+        n_reg = sum(v is not None for v in views)
+        if not n_reg:
+            return None
+        # fold whatever this snapshot admits before gating — serving the
+        # freshest snapshot then hits; older pinned ones fall back
+        self.advance_views(snapshot)
+        if (any(v is None or v.degraded for v in views)
+                or not self.view_gate(snapshot)):
+            self.exec_stats["view_fallbacks"] += n_reg
+            return None
+        t0 = tick()
+        with TRACER.span("view_serve", plans=len(views)):
+            results = [v.result() for v in views]
+        tock(_DISPATCH_H, t0)
+        if need_writers:
+            t0 = tick()
+            with TRACER.span("resolve"):
+                all_keys = [k for p in plans for k in plan_keys(p)]
+                mask_fn, _m, _f = self._snapshot_mask(snapshot)
+                writers = self._writers_for(self.page_index(all_keys),
+                                            mask_fn)
+            tock(_RESOLVE_H, t0)
+        else:
+            writers = []
+        self.exec_stats["view_hits"] += len(views)
+        self.exec_stats["plans"] += len(views)
+        if isinstance(plan, BatchPlan):
+            self.exec_stats["batches"] += 1
+            self.exec_stats["batched_plans"] += len(views)
+            return tuple(results), writers
+        return results[0], writers
 
     # ------------------------------------------------------ batched reads
     def member_seqs_for(self, snap: RssSnapshot) -> np.ndarray:
@@ -398,11 +575,12 @@ class PagedMirror:
                      use_kernel: bool = True, interpret=None) -> dict:
         """One fused `rss_scan_agg` pass per distinct kernel config the op
         list needs (ops sharing a field — and a threshold for count_below —
-        fold into one pass, since the kernel emits all five statistic
+        fold into one pass, since the kernel emits all seven statistic
         lanes).  The gathered sub-store is built ONCE and shared across
-        configs.  Returns {config: [sum, count, count_below, min, max]}."""
+        configs.  Returns {config: [sum, count, count_below, min, max,
+        count_above, sum_below]}."""
         configs = list(dict.fromkeys(_op_config(op) for op in ops))
-        empty = [0, 0, 0, int(_INT32.max), int(_INT32.min)]
+        empty = [0, 0, 0, int(_INT32.max), int(_INT32.min), 0, 0]
         if not len(pages):
             return {cfg: list(empty) for cfg in configs}
         from ..kernels.rss_scan_agg.ops import snapshot_agg_members
@@ -427,11 +605,12 @@ class PagedMirror:
         aggregates in Python (small scans — launch overhead dominates);
         "flat"/"chunked" gather the lane-major sub-store once, hand every
         lane its own kernel params, and launch a single grouped kernel
-        pipeline.  Returns [lane][sum, count, count_below, min, max]."""
+        pipeline.  Returns [lane][sum, count, count_below, min, max,
+        count_above, sum_below]."""
         from ..kernels.rss_scan_agg import ops as kops
         from .version_store import agg_value
 
-        empty = [0, 0, 0, int(_INT32.max), int(_INT32.min)]
+        empty = [0, 0, 0, int(_INT32.max), int(_INT32.min), 0, 0]
         flat_keys = [k for grp in lane_groups for k in grp]
         if not lane_groups or not flat_keys:
             return [list(empty) for _ in lane_groups]
@@ -456,7 +635,9 @@ class PagedMirror:
                     rows.append([sum(xs), len(xs),
                                  sum(1 for x in xs if x < thr_eff),
                                  min(xs, default=int(_INT32.max)),
-                                 max(xs, default=int(_INT32.min))])
+                                 max(xs, default=int(_INT32.min)),
+                                 sum(1 for x in xs if x > thr_eff),
+                                 sum(x for x in xs if x < thr_eff)])
                 return rows
         with TRACER.span("kernel_dispatch", lanes=len(lane_groups)):
             pages = self.page_index(flat_keys)
@@ -522,11 +703,15 @@ class PagedMirror:
 
     def execute_with_writers(self, plan, snapshot, *,
                              use_kernel: bool = True,
-                             interpret=None) -> tuple:
+                             interpret=None,
+                             need_writers: bool = True) -> tuple:
         """The paged store's ONE plan-execution seam (what
         `PagedVersionStore.execute_with_writers` delegates to): `ScanPlan`
-        takes the batched scan path; aggregate plans lower to the fused
-        kernels — `AggPlan`/`MultiAggPlan` to `rss_scan_agg` (one pass per
+        takes the batched scan path; aggregate plans first try the
+        materialized-view registry (`register_view` — O(delta) serve when
+        the snapshot gate holds, whole batches all-or-nothing), then
+        lower to the fused kernels — `AggPlan`/`MultiAggPlan` to
+        `rss_scan_agg` (one pass per
         distinct field/threshold config, all of a compound's statistics
         from the same pass), `GroupByPlan` to the strategy-dispatched
         grouped reduction (flat accumulator lanes, chunked two-stage, or
@@ -535,12 +720,18 @@ class PagedMirror:
         plans (whole-batch plan fusion: one lane per plan × config ×
         group).  Writers always cover the plan's flat key sequence from
         the same host-side slot resolve, so read-set recording is
-        identical for every plan kind."""
+        identical for every plan kind; `need_writers=False` (execute-only
+        callers: replica serves, benches) skips that O(keys) host resolve
+        — on a view hit the serve then does NO per-key work at all."""
         from .version_store import (AggPlan, BatchPlan, GroupByPlan,
                                     MultiAggPlan, ScanPlan, finalize_agg,
                                     plan_keys)
 
         with TRACER.span("mirror_execute", plan=type(plan).__name__):
+            if self.views and not isinstance(plan, ScanPlan):
+                served = self._try_views(plan, snapshot, need_writers)
+                if served is not None:
+                    return served
             if isinstance(plan, ScanPlan):
                 self.exec_stats["plans"] += 1
                 t0 = tick()

@@ -56,12 +56,16 @@ Snapshot = Union[int, RssSnapshot]
 class AggOp:
     """One aggregate over a tagged scalar field of the visible values.
 
-    kind:  "sum" | "count" | "count_below" | "min" | "max"
+    kind:  "sum" | "count" | "count_below" | "min" | "max" |
+           "count_above" | "sum_below"
     field: "int"   — plain integer values (an unwritten/initial key IS the
                      int 0, so it participates — matching the per-key
                      oracle's `isinstance(v, int)` test),
            "total" — the "total" field of order-shaped dict values.
-    threshold: the count_below predicate bound (x < threshold).
+    threshold: the predicate bound of the thresholded kinds — count_below
+               and sum_below take x < threshold, count_above takes
+               x > threshold (predicate pushdown through the one
+               (field, threshold) kernel-config seam).
     """
     kind: str
     field: str = "int"
@@ -183,6 +187,12 @@ def apply_agg(values: Sequence[Any], op: AggOp) -> int:
     if op.kind == "count_below":
         assert op.threshold is not None, "count_below needs a threshold"
         return sum(1 for x in xs if x < op.threshold)
+    if op.kind == "count_above":
+        assert op.threshold is not None, "count_above needs a threshold"
+        return sum(1 for x in xs if x > op.threshold)
+    if op.kind == "sum_below":
+        assert op.threshold is not None, "sum_below needs a threshold"
+        return sum(x for x in xs if x < op.threshold)
     if op.kind == "min":
         return min(xs, default=0)
     if op.kind == "max":
@@ -221,9 +231,11 @@ def apply_plan(values: Sequence[Any], plan: Plan) -> Any:
 
 def finalize_agg(raw: Sequence[int], op: AggOp) -> int:
     """Pick `op`'s statistic out of the kernel's [sum, count, count_below,
-    min, max] vector (min/max fold their empty-set sentinels to 0, matching
-    `apply_agg`)."""
-    s, n, below, mn, mx = (int(v) for v in raw)
+    min, max, count_above, sum_below] vector (min/max fold their empty-set
+    sentinels to 0, matching `apply_agg`).  Legacy 5-lane raws still
+    finalize every pre-pushdown kind."""
+    vals = [int(v) for v in raw]
+    s, n, below, mn, mx = vals[:5]
     if op.kind == "sum":
         return s
     if op.kind == "count":
@@ -234,6 +246,10 @@ def finalize_agg(raw: Sequence[int], op: AggOp) -> int:
         return mn if n else 0
     if op.kind == "max":
         return mx if n else 0
+    if op.kind == "count_above":
+        return vals[5]
+    if op.kind == "sum_below":
+        return vals[6]
     raise ValueError(f"unknown aggregate kind {op.kind!r}")
 
 
@@ -348,6 +364,20 @@ class PagedVersionStore(_ScanDispatch):
     def execute_with_writers(self, plan: Plan, snapshot: Snapshot) \
             -> tuple[Any, list[int]]:
         return self.mirror.execute_with_writers(plan, snapshot)
+
+    def execute(self, plan: Plan, snapshot: Snapshot) -> Any:
+        """Execute-only fast path: no writer resolve — a materialized-view
+        hit serves with NO per-key host work (the replica/bench serve
+        path, where nothing records read sets)."""
+        return self.mirror.execute_with_writers(plan, snapshot,
+                                                need_writers=False)[0]
+
+    def register_view(self, plan: Plan, *, use_kernel: bool = True,
+                      interpret=None):
+        """Register `plan` for incremental materialization on the backing
+        mirror (see `tensorstore.materialized`)."""
+        return self.mirror.register_view(plan, use_kernel=use_kernel,
+                                         interpret=interpret)
 
     def read_at(self, key: str, watermark: int) -> Any:
         return self.mirror.read_at(key, watermark)
