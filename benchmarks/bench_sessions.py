@@ -1,0 +1,153 @@
+"""Million-session serving bench: token routing + resolve cache + batching.
+
+One report, ``session_serve``:
+
+  * ``sweep`` — N Zipf-skewed sticky sessions (each holding a cluster
+    `Session` token and re-issuing one plan family per round) served
+    under the four corners of the {resolve cache, dedup batching}
+    matrix.  Per config: wall-clock us/serve, serves/s, batch-dispatch
+    count, mirror cache hit rates, and the token-guarantee counters
+    (ships forced by tokens; violations — asserted zero by the driver).
+  * ``speedup`` — baseline (both off) over cache+batch (both on),
+    asserted ``>= SPEEDUP_FLOOR`` (3x) at full scale: the PR's
+    headline claim that same-horizon session traffic amortizes into
+    one resolve + one fused dispatch per horizon group.
+  * ``policies`` — serves/s + replica serve distribution for the
+    token-aware routing policies (incl. ``latency_slo``), cache+batch
+    on, so policy overhead is visible next to the serve-path win.
+
+Every timed config is preceded by a small warmup run of the same
+config so JIT compilation never lands inside a measured window.
+
+Standalone: ``PYTHONPATH=src python -m benchmarks.bench_sessions``
+(persists the ``session_serve`` section of BENCH_kernels.json; --smoke
+skips persistence and the speedup assertion).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.mvcc import run_sessions
+from repro.mvcc.workload import Scale
+
+# asserted floor on baseline/cache+batch us-per-serve at full scale
+SPEEDUP_FLOOR = 3.0
+
+# (tag, resolve_cache, batch_plans)
+_CONFIGS = (("baseline", False, False),
+            ("cache", True, False),
+            ("batch", False, True),
+            ("cache+batch", True, True))
+
+
+def _run(tag: str, *, n_sessions: int, rounds: int, scale: Scale,
+         cache: bool, batch: bool, policy="predicted_staleness",
+         zipf_s: float = 1.2, seed: int = 42) -> dict:
+    # same-config warmup: JIT compile + page build stay out of the window
+    run_sessions(n_sessions=32, rounds=2, seed=seed + 1, scale=scale,
+                 resolve_cache=cache, batch_plans=batch,
+                 route_policy=policy, zipf_s=zipf_s)
+    t0 = time.perf_counter()
+    m, _ = run_sessions(n_sessions=n_sessions, rounds=rounds, seed=seed,
+                        scale=scale, n_replicas=2, route_policy=policy,
+                        ship_every=2, ship_skew=1, zipf_s=zipf_s,
+                        resolve_cache=cache, batch_plans=batch,
+                        write_fraction=0.05)
+    wall = time.perf_counter() - t0
+    return {
+        "wall_s": round(wall, 4),
+        "us_per_serve": round(wall * 1e6 / m.session_serves, 1),
+        "serves": m.session_serves,
+        "serves_per_s": round(m.session_serves / wall, 1),
+        "batch_dispatches": m.olap_batch_dispatches,
+        "batched_plans": m.olap_batched_plans,
+        "served_by": m.olap_served_by,
+        "token_acquires": m.session_token_acquires,
+        "token_ships": m.session_token_ships,
+        "token_violations": m.session_token_violations,
+        "cache_hit_rates": {k: round(v, 3)
+                            for k, v in m.cache_hit_rates().items()},
+    }
+
+
+def session_sweep(*, n_sessions: int, rounds: int, scale: Scale,
+                  zipf_s: float = 1.2) -> dict:
+    """{resolve cache} x {dedup batching} -> serve cost at N sessions."""
+    sweep = {tag: _run(tag, n_sessions=n_sessions, rounds=rounds,
+                       scale=scale, cache=cache, batch=batch, zipf_s=zipf_s)
+             for tag, cache, batch in _CONFIGS}
+    speedup = round(sweep["baseline"]["us_per_serve"]
+                    / sweep["cache+batch"]["us_per_serve"], 2)
+    return {"sweep": sweep, "speedup": speedup, "n_sessions": n_sessions,
+            "rounds": rounds, "zipf_s": zipf_s}
+
+
+def policy_sweep(*, n_sessions: int, rounds: int, scale: Scale,
+                 policies=("freshest", "predicted_staleness",
+                           "latency_slo")) -> dict:
+    """Token-aware routing policies under the fast (cache+batch) path."""
+    return {pol: _run(pol, n_sessions=n_sessions, rounds=rounds,
+                      scale=scale, cache=True, batch=True, policy=pol)
+            for pol in policies}
+
+
+def full_report(*, smoke: bool = False) -> dict:
+    scale = Scale(warehouses=2, districts=2, customers=5, items=10) \
+        if smoke else Scale()
+    n = 60 if smoke else 1000
+    rounds = 2 if smoke else 3
+    report = session_sweep(n_sessions=n, rounds=rounds, scale=scale)
+    report["policies"] = policy_sweep(
+        n_sessions=40 if smoke else 300, rounds=rounds, scale=scale,
+        policies=("predicted_staleness",) if smoke
+        else ("freshest", "predicted_staleness", "latency_slo"))
+    report["speedup_floor"] = SPEEDUP_FLOOR
+    if not smoke:
+        assert report["speedup"] >= SPEEDUP_FLOOR, \
+            f"session serve speedup x{report['speedup']} below " \
+            f"x{SPEEDUP_FLOOR} floor: {report['sweep']}"
+    return report
+
+
+def bench_rows(report: dict) -> list[tuple[str, float, str]]:
+    """CSV rows (name, us_per_serve, derived) for benchmarks.run."""
+    rows: list[tuple[str, float, str]] = []
+    for tag, r in report["sweep"].items():
+        hits = ";".join(f"{k}={v}" for k, v in r["cache_hit_rates"].items())
+        rows.append((f"session_serve:{tag}", r["us_per_serve"],
+                     f"serves_per_s={r['serves_per_s']};"
+                     f"dispatches={r['batch_dispatches']};"
+                     f"token_ships={r['token_ships']};"
+                     f"violations={r['token_violations']};{hits}"))
+    rows.append((f"session_serve:headline", 0.0,
+                 f"cache+batch=x{report['speedup']}_vs_baseline"
+                 f"_at_N={report['n_sessions']}"
+                 f"_(floor=x{report['speedup_floor']})"))
+    for pol, r in report.get("policies", {}).items():
+        rows.append((f"session_policy:{pol}", r["us_per_serve"],
+                     f"serves_per_s={r['serves_per_s']};"
+                     f"served_by={'/'.join(map(str, r['served_by']))};"
+                     f"token_ships={r['token_ships']}"))
+    return rows
+
+
+def main(smoke: bool = False) -> None:
+    report = full_report(smoke=smoke)
+    print("name,us_per_call,derived")
+    for name, us, derived in bench_rows(report):
+        print(f"{name},{us:.1f},{derived}")
+    if smoke:
+        print("bench_kernels_json,0,skipped_(smoke_mode)")
+        return
+    from .persist import persist_bench_sections
+    print(f"bench_kernels_json,0,"
+          f"{persist_bench_sections(session_serve=report)}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-scale pass; does not write BENCH_kernels.json")
+    main(smoke=ap.parse_args().smoke)

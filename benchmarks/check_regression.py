@@ -5,7 +5,7 @@ Compares the freshly-written BENCH_kernels.json (after a full
 HEAD:BENCH_kernels.json`` by default) and FAILS when any tracked
 per-call cost regressed by more than ``TOLERANCE`` — i.e. throughput
 dropped >25% on the scan_agg / group_agg / serve_latency / materialized
-serve paths.  Missing sections or entries are reported and skipped (a
+/ session_serve serve paths.  Missing sections or entries are reported and skipped (a
 new bench's first persisted run has no baseline), so the gate only ever
 compares like against like.
 
@@ -41,6 +41,9 @@ def _tracked(blob: dict) -> dict[str, float]:
     sweep = blob.get("materialized", {}).get("sweep", {})
     for p, r in sweep.items():
         out[f"materialized:P={p}"] = float(r["materialized_us"])
+    sweep = blob.get("session_serve", {}).get("sweep", {})
+    for cfg, r in sweep.items():
+        out[f"session_serve:{cfg}"] = float(r["us_per_serve"])
     return out
 
 

@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV rows covering:
     (benchmarks.bench_materialized),
   * serve-path p50/p95/p99 latency per plan kind + stage breakdown and
     the observability-overhead bound (benchmarks.bench_serve_latency),
+  * session serving at scale: token routing + resolve cache + dedup
+    batching matrix (benchmarks.bench_sessions),
   * the roofline summary when dry-run artifacts exist.
 
 ``--smoke`` exercises every bench entry point at tiny scale (CI: the
@@ -148,6 +150,13 @@ def main(smoke: bool = False) -> None:
     for name, us, derived in serve_rows(serve_report):
         print(f"{name},{us:.1f},{derived}")
 
+    # ------------- session serving (token routing + cache + batching)
+    from .bench_sessions import bench_rows as sess_rows
+    from .bench_sessions import full_report as sess_report_fn
+    sess_report = sess_report_fn(smoke=smoke)
+    for name, us, derived in sess_rows(sess_report):
+        print(f"{name},{us:.1f},{derived}")
+
     # ----------------- commit certification (certifier x contention)
     from .bench_certifier import bench_rows, certifier_sweep
     cert_report = certifier_sweep(
@@ -171,7 +180,8 @@ def main(smoke: bool = False) -> None:
                                           plan_batch=batch_report,
                                           certifier_aborts=cert_report,
                                           serve_latency=serve_report,
-                                          materialized=mat_report)
+                                          materialized=mat_report,
+                                          session_serve=sess_report)
         print(f"bench_kernels_json,0,{out_path}")
 
     # --------------------------------------------------------- roofline

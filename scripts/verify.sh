@@ -286,6 +286,36 @@ print("materialized OK (kernel parity; hit+fallback == fused; both "
 EOF
 
 echo
+echo "== session serving (token guarantees; cache == uncached; hit rates) =="
+python - <<'EOF'
+from repro.mvcc import run_sessions
+
+# Zipf-skewed sticky sessions over a cadence-skewed 2-replica fleet:
+# every serve must cover the session's token (read-your-writes +
+# monotonic reads) — run_sessions asserts zero violations internally,
+# and check_scans asserts every (cached, fused) result == the per-key
+# chain oracle.  Cache on vs off must be bit-identical.
+args = dict(n_sessions=48, rounds=5, seed=17, n_replicas=2,
+            ship_every=2, ship_skew=1, write_fraction=0.2,
+            check_scans=True, keep_history=True)
+m_off, s_off = run_sessions(resolve_cache=False, batch_plans=False, **args)
+m_on, s_on = run_sessions(resolve_cache=True, batch_plans=True, **args)
+assert [s.pending for s in s_on] == [s.pending for s in s_off]
+for tag, m, ss in (("cache+batch=off", m_off, s_off),
+                   ("cache+batch=on", m_on, s_on)):
+    assert m.session_token_violations == 0
+    assert all(s.session.violations() == 0 for s in ss)
+    hits = ";".join(f"{k}={v:.2f}" for k, v in m.cache_hit_rates().items())
+    print(f"  {tag:16s} serves={m.session_serves} "
+          f"token_ships={m.session_token_ships} "
+          f"dispatches={m.olap_batch_dispatches} [{hits}]")
+assert m_on.cache_hit_rates()["member"] > 0
+assert 0 < m_on.olap_batch_dispatches < m_on.session_serves
+print("session serving OK (0 token violations on both runs; cached+"
+      "batched == uncached == oracle; caches hit; plans folded)")
+EOF
+
+echo
 echo "== examples (smoke mode: demos must not rot) =="
 for ex in quickstart anomaly_demo paged_snapshot_reads cluster_fanout \
           observability_demo; do

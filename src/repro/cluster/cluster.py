@@ -34,6 +34,7 @@ from typing import Any, Iterable, Optional, Sequence, Union
 from ..obs import (REGISTRY, TRACER, CounterList, StatsView, tick, tock)
 from ..tensorstore.version_store import Plan
 from .routing import Freshest, RoutingPolicy, make_policy
+from .session import Session
 
 # handle: (kind, replica_idx, reader_id, snapshot)
 SnapshotHandle = tuple
@@ -81,10 +82,14 @@ class ReplicaCluster:
              "scheduled_ships",         # cadence-due ships run at serve
              "lag_records_sum",         # observed, summed over served snaps
              "predicted_lag_sum",       # predicted at routing time, ditto
-             "truncated_records"),
+             "truncated_records",
+             "token_acquires",          # acquires routed through a session
+             "token_ships",             # delta ships run to cover a token
+             "token_violations"),       # served below the token (must stay 0)
             labels=lbl,
             sub={"served": CounterList(REGISTRY, "cluster_served",
                                        len(self.replicas), labels=lbl)})
+        self._next_sid = 0
 
     def __len__(self) -> int:
         return len(self.replicas)
@@ -161,34 +166,67 @@ class ReplicaCluster:
         self.stats["truncated_records"] += self.primary.wal.truncate()
         return n
 
+    # ------------------------------------------------------------- sessions
+    def session(self, *, keep_history: bool = False) -> Session:
+        """Open a client session: a token carrying the LSN horizon this
+        client has observed.  Pass it to `acquire(session=...)` for
+        read-your-writes / monotonic reads across the fleet; call
+        `session.note_commit(primary.wal.head_lsn)` after each of the
+        client's OLTP commits."""
+        sid, self._next_sid = self._next_sid, self._next_sid + 1
+        return Session(sid, keep_history=keep_history)
+
     # -------------------------------------------------------------- routing
-    def acquire(self, *, max_lag: Optional[int] = None) -> SnapshotHandle:
+    def acquire(self, *, max_lag: Optional[int] = None,
+                session: Optional[Session] = None) -> SnapshotHandle:
         """Route a snapshot acquisition through the policy.  A predictive
         policy may pick a replica on predicted lag (its scheduled ship is
         due): run that due ship before serving — cadence-owed work, not an
         emergency round.  When no replica satisfies the staleness bound,
         ship-then-serve: catch the freshest replica up synchronously, then
-        serve it."""
+        serve it.
+
+        With a `session`, only replicas whose applied LSN covers the
+        session token (read-your-writes + monotonic reads) are eligible;
+        when none does, the freshest replica gets a cadence-owed DELTA
+        ship (`token_ships`) — never a synchronous stall, since delta
+        shipping replays exactly what the replication schedule owed — and
+        the token's floor is ratcheted forward after the serve."""
+        min_lsn = session.min_required_lsn() if session is not None else 0
         t0 = tick()
         with TRACER.span("route", policy=self.policy.name):
-            idx = self.policy.choose(self, max_lag=max_lag)
+            idx = self.policy.choose(self, max_lag=max_lag, min_lsn=min_lsn)
             predicted = self.predicted_lag(idx) if idx is not None else 0
             if idx is None:
                 idx = self.freshest_idx()
                 predicted = 0                  # served post-ship: lag ~0
-                with TRACER.span("ship_then_serve", replica=idx):
-                    self.ship(idx, record_cadence=False)
-                self.stats["ship_then_serve"] += 1
+                if min_lsn and \
+                        self.policy.choose(self, max_lag=max_lag) is not None:
+                    # staleness was satisfiable — only the session token
+                    # wasn't: the freshest replica's delta ship covers it
+                    # (cadence-owed records, not an emergency round)
+                    with TRACER.span("token_ship", replica=idx):
+                        self.ship(idx, record_cadence=False)
+                    self.stats["token_ships"] += 1
+                else:
+                    with TRACER.span("ship_then_serve", replica=idx):
+                        self.ship(idx, record_cadence=False)
+                    self.stats["ship_then_serve"] += 1
             elif getattr(self.policy, "predictive", False) and \
-                    predicted < self.lag_records(idx):
+                    (predicted < self.lag_records(idx) or
+                     self.replicas[idx].applied_lsn < min_lsn):
                 # the prediction was load-bearing: this replica only met
-                # the staleness bound because its imminent ship counts as
-                # run — run it (cadence-owed work pulled forward, not an
-                # emergency round).  A replica whose OBSERVED lag already
-                # satisfies the bound is served as-is: no ship, no extra
-                # work.
+                # the staleness bound (or the session token) because its
+                # imminent ship counts as run — run it (cadence-owed work
+                # pulled forward, not an emergency round).  A replica
+                # whose OBSERVED lag already satisfies the bound is
+                # served as-is: no ship, no extra work.
                 bound = self.policy.effective_bound(max_lag)
-                if bound is not None and self.lag_records(idx) > bound:
+                if self.replicas[idx].applied_lsn < min_lsn:
+                    with TRACER.span("token_ship", replica=idx):
+                        self.ship(idx, record_cadence=False)
+                    self.stats["token_ships"] += 1
+                elif bound is not None and self.lag_records(idx) > bound:
                     with TRACER.span("scheduled_ship", replica=idx):
                         self.ship(idx, record_cadence=False)
                     self.stats["scheduled_ships"] += 1
@@ -206,6 +244,11 @@ class ReplicaCluster:
             else:
                 rid, seq = rep.si_snapshot_pinned()
                 handle = ("si", idx, rid, seq)
+            if session is not None:
+                self.stats["token_acquires"] += 1
+                if rep.applied_lsn < min_lsn:      # must never happen
+                    self.stats["token_violations"] += 1
+                session.note_read(rep.applied_lsn, idx)
         tock(_ROUTE_H, t0)
         return handle
 

@@ -31,27 +31,43 @@ policy is where the freshness/throughput trade-off lives:
                           owed anyway) instead of an emergency
                           ship-then-serve round on the freshest replica —
                           cutting sync fallbacks on cadence-skewed fleets.
+  * `LatencySLO`         — bounded staleness PLUS a serve-latency SLO:
+                          replicas whose `olap_serve_seconds{replica=i}`
+                          p99 (from the `repro.obs` histograms) degrades
+                          past `slo_factor` x the fleet median drop out of
+                          the eligible set, so a slow replica sheds read
+                          load instead of dragging tail latency — unless
+                          EVERY replica is slow, in which case the SLO
+                          filter stands down (staleness still binds).
 
 Policies see the cluster read-only through `lag_records(i)` /
 `replicas[i].applied_lsn`; a per-call `max_lag` (e.g. a query-class
 freshness hint from the workload) narrows ANY policy's eligible set the
 same way, so `Freshest` and `RoundRobin` also degrade to ship-then-serve
-when a hint is unsatisfiable.
+when a hint is unsatisfiable.  A per-call `min_lsn` (a session token's
+required horizon — read-your-writes / monotonic reads) filters the same
+way from below: only replicas whose applied LSN covers the token are
+eligible; predictive policies additionally keep ship-due replicas
+eligible (their serve-time delta ship applies the full tail, covering
+any token the primary has issued).
 """
 
 from __future__ import annotations
 
 from typing import Optional, Union
 
+from ..obs import REGISTRY
+
 
 class RoutingPolicy:
     """Pick a replica index for the next snapshot acquisition, or None when
-    no replica satisfies the staleness bound (caller ships-then-serves)."""
+    no replica satisfies the staleness bound / session token (caller
+    ships-then-serves, or delta-ships for a token)."""
 
     name = "policy"
 
-    def choose(self, cluster, *, max_lag: Optional[int] = None) \
-            -> Optional[int]:
+    def choose(self, cluster, *, max_lag: Optional[int] = None,
+               min_lsn: int = 0) -> Optional[int]:
         raise NotImplementedError
 
     def _lag(self, cluster, i: int) -> float:
@@ -59,17 +75,27 @@ class RoutingPolicy:
         policies override (observed lag by default)."""
         return cluster.lag_records(i)
 
+    def _covers(self, cluster, i: int, min_lsn: int) -> bool:
+        """Does replica i satisfy a session token requiring `min_lsn`?
+        Predictive policies also accept ship-due replicas (the serve-time
+        delta ship catches them fully up before the pin)."""
+        return cluster.replicas[i].applied_lsn >= min_lsn or \
+            (self.predictive and cluster.ship_due(i))
+
+    predictive = False
+
     def effective_bound(self, max_lag: Optional[int]) -> Optional[int]:
         """The staleness bound this policy actually enforced for a choice
         made with `max_lag` (the per-query hint; bounded-staleness
         policies tighten it with their default)."""
         return max_lag
 
-    def _eligible(self, cluster, max_lag: Optional[int]) -> list[int]:
+    def _eligible(self, cluster, max_lag: Optional[int],
+                  min_lsn: int = 0) -> list[int]:
         idxs = range(len(cluster.replicas))
-        if max_lag is None:
-            return list(idxs)
-        return [i for i in idxs if self._lag(cluster, i) <= max_lag]
+        return [i for i in idxs
+                if (max_lag is None or self._lag(cluster, i) <= max_lag)
+                and (min_lsn <= 0 or self._covers(cluster, i, min_lsn))]
 
 
 class Freshest(RoutingPolicy):
@@ -78,9 +104,9 @@ class Freshest(RoutingPolicy):
 
     name = "freshest"
 
-    def choose(self, cluster, *, max_lag: Optional[int] = None) \
-            -> Optional[int]:
-        elig = self._eligible(cluster, max_lag)
+    def choose(self, cluster, *, max_lag: Optional[int] = None,
+               min_lsn: int = 0) -> Optional[int]:
+        elig = self._eligible(cluster, max_lag, min_lsn)
         if not elig:
             return None
         return min(elig, key=lambda i: (cluster.lag_records(i), i))
@@ -92,9 +118,9 @@ class RoundRobin(RoutingPolicy):
     def __init__(self) -> None:
         self._next = 0
 
-    def choose(self, cluster, *, max_lag: Optional[int] = None) \
-            -> Optional[int]:
-        elig = self._eligible(cluster, max_lag)
+    def choose(self, cluster, *, max_lag: Optional[int] = None,
+               min_lsn: int = 0) -> Optional[int]:
+        elig = self._eligible(cluster, max_lag, min_lsn)
         if not elig:
             return None
         idx = elig[self._next % len(elig)]
@@ -113,9 +139,10 @@ class BoundedStaleness(RoundRobin):
         super().__init__()
         self.max_lag = max_lag
 
-    def choose(self, cluster, *, max_lag: Optional[int] = None) \
-            -> Optional[int]:
-        return super().choose(cluster, max_lag=self.effective_bound(max_lag))
+    def choose(self, cluster, *, max_lag: Optional[int] = None,
+               min_lsn: int = 0) -> Optional[int]:
+        return super().choose(cluster, max_lag=self.effective_bound(max_lag),
+                              min_lsn=min_lsn)
 
     def effective_bound(self, max_lag: Optional[int]) -> Optional[int]:
         return self.max_lag if max_lag is None else min(self.max_lag,
@@ -137,11 +164,60 @@ class PredictedStaleness(BoundedStaleness):
         return getattr(cluster, "predicted_lag", cluster.lag_records)(i)
 
 
+class LatencySLO(PredictedStaleness):
+    """Predicted-staleness routing with a serve-latency SLO on top: a
+    replica whose merged `olap_serve_seconds{replica=i}` p99 exceeds
+    `slo_factor` x the fleet median (with at least `min_count` serves
+    observed, so cold replicas aren't judged on noise) is steered around.
+
+    The p99s come straight from the `repro.obs` histograms the serve path
+    already populates — no new instrumentation — and are refreshed every
+    `refresh` choices (histogram merging walks bucket arrays; per-choice
+    recomputation would put O(replicas x buckets) on the route stage).
+    The filter NEVER empties the eligible set: when every replica busts
+    the SLO there is no better replica to steer to, so staleness alone
+    decides."""
+
+    name = "latency_slo"
+    predictive = True
+
+    def __init__(self, max_lag: int = 100, *, slo_factor: float = 3.0,
+                 min_count: int = 20, refresh: int = 64) -> None:
+        super().__init__(max_lag)
+        self.slo_factor = slo_factor
+        self.min_count = min_count
+        self.refresh = refresh
+        self._slow: set[int] = set()
+        self._choices = 0
+
+    def _refresh_slow(self, cluster) -> None:
+        p99s = {}
+        for i in range(len(cluster.replicas)):
+            s = REGISTRY.hist_summary("olap_serve_seconds", replica=i)
+            if s["count"] >= self.min_count:
+                p99s[i] = s["p99_us"]
+        self._slow = set()
+        if len(p99s) >= 2:
+            med = sorted(p99s.values())[len(p99s) // 2]
+            if med > 0:
+                self._slow = {i for i, p in p99s.items()
+                              if p > self.slo_factor * med}
+
+    def _eligible(self, cluster, max_lag: Optional[int],
+                  min_lsn: int = 0) -> list[int]:
+        if self._choices % self.refresh == 0:
+            self._refresh_slow(cluster)
+        self._choices += 1
+        base = super()._eligible(cluster, max_lag, min_lsn)
+        healthy = [i for i in base if i not in self._slow]
+        return healthy or base
+
+
 def make_policy(spec: Union[str, RoutingPolicy], *,
                 max_lag: int = 100) -> RoutingPolicy:
     """Resolve a policy spec: an instance passes through; a name constructs
-    one ('bounded_staleness' / 'predicted_staleness' take `max_lag` as
-    their default bound)."""
+    one ('bounded_staleness' / 'predicted_staleness' / 'latency_slo' take
+    `max_lag` as their default bound)."""
     if isinstance(spec, RoutingPolicy):
         return spec
     if spec == "freshest":
@@ -152,4 +228,6 @@ def make_policy(spec: Union[str, RoutingPolicy], *,
         return BoundedStaleness(max_lag)
     if spec == "predicted_staleness":
         return PredictedStaleness(max_lag)
+    if spec == "latency_slo":
+        return LatencySLO(max_lag)
     raise ValueError(f"unknown routing policy {spec!r}")

@@ -7,7 +7,8 @@ from .certify import (Certifier, ConservativeSSI, CommitOrderSSI, SSN,
 from .htap import SingleNodeHTAP, MultiNodeHTAP, Replica
 from .workload import (Scale, load_initial, oltp_transaction, olap_query,
                        olap_freshness, write_skew)
-from .driver import Metrics, run_single_node, run_multi_node, run_write_skew
+from .driver import (Metrics, run_multi_node, run_sessions, run_single_node,
+                     run_write_skew)
 
 __all__ = [
     "Store", "Version", "VersionChain",
@@ -17,5 +18,6 @@ __all__ = [
     "SingleNodeHTAP", "MultiNodeHTAP", "Replica",
     "Scale", "load_initial", "oltp_transaction", "olap_query",
     "olap_freshness", "write_skew",
-    "Metrics", "run_single_node", "run_multi_node", "run_write_skew",
+    "Metrics", "run_single_node", "run_multi_node", "run_sessions",
+    "run_write_skew",
 ]

@@ -23,7 +23,8 @@ from ..tensorstore.version_store import (AggPlan, GroupByPlan, MultiAggPlan,
 from .engine import Engine, SerializationFailure, Status
 from .htap import MultiNodeHTAP, SingleNodeHTAP
 from .workload import (Scale, load_initial, olap_freshness, olap_query,
-                       oltp_transaction, write_skew)
+                       oltp_transaction, session_plan_families, session_write,
+                       write_skew, zipf_assign)
 
 
 @dataclass
@@ -82,6 +83,20 @@ class Metrics:
     serve_latency_by_plan: dict = field(default_factory=dict)  # per plan kind
     serve_stage_latency: dict = field(default_factory=dict)    # per stage
     oltp_commit_latency: dict = field(default_factory=dict)
+    # session serving (run_sessions / session_tokens runs): token-routed
+    # acquires, cadence-owed delta ships run to cover a token, and serves
+    # below the token floor (the guarantee counter — must stay 0)
+    session_serves: int = 0
+    session_token_acquires: int = 0
+    session_token_ships: int = 0
+    session_token_violations: int = 0
+    # horizon-keyed resolve cache (PagedMirror): per-layer hit/miss
+    cache_member_hits: int = 0
+    cache_member_misses: int = 0
+    cache_pindex_hits: int = 0
+    cache_pindex_misses: int = 0
+    cache_store_hits: int = 0
+    cache_store_misses: int = 0
 
     def oltp_tps(self) -> float:
         return self.oltp_commits / max(self.rounds, 1)
@@ -117,6 +132,15 @@ class Metrics:
         cross-reader batching happened)."""
         return self.olap_batched_plans / max(self.olap_batch_dispatches, 1)
 
+    def cache_hit_rates(self) -> dict:
+        """Per-layer resolve-cache hit rates (member / pindex / store)."""
+        out = {}
+        for layer in ("member", "pindex", "store"):
+            h = getattr(self, f"cache_{layer}_hits")
+            s = h + getattr(self, f"cache_{layer}_misses")
+            out[layer] = h / s if s else 0.0
+        return out
+
 
 def _harvest_obs(m: Metrics) -> None:
     """Snapshot the run's layer metrics out of the registry into the
@@ -137,6 +161,15 @@ def _harvest_obs(m: Metrics) -> None:
     m.olap_view_demotions = tot.get("mirror_exec_view_demotions", 0)
     m.olap_kernel_dispatches = tot.get("kernel_launch_dispatches", 0)
     m.olap_kernel_pallas_calls = tot.get("kernel_launch_pallas_calls", 0)
+    m.cache_member_hits = tot.get("mirror_cache_member_hits", 0)
+    m.cache_member_misses = tot.get("mirror_cache_member_misses", 0)
+    m.cache_pindex_hits = tot.get("mirror_cache_pindex_hits", 0)
+    m.cache_pindex_misses = tot.get("mirror_cache_pindex_misses", 0)
+    m.cache_store_hits = tot.get("mirror_cache_store_hits", 0)
+    m.cache_store_misses = tot.get("mirror_cache_store_misses", 0)
+    m.session_token_acquires = tot.get("cluster_token_acquires", 0)
+    m.session_token_ships = tot.get("cluster_token_ships", 0)
+    m.session_token_violations = tot.get("cluster_token_violations", 0)
     m.serve_latency = REGISTRY.hist_summary("olap_serve_seconds")
     m.serve_latency_by_plan = REGISTRY.hist_group("olap_serve_seconds",
                                                   "plan")
@@ -158,10 +191,19 @@ class _PlanBatcher:
     `olap_execute_batch` call — whole-batch plan fusion across readers
     (PRoT pin sharing means same-round RSS readers share a horizon
     almost always).  Results land in each client's `pending` slot exactly
-    as an unbatched execution would."""
+    as an unbatched execution would.
 
-    def __init__(self, htap, m: Metrics) -> None:
+    `dedup=True` (the session-serving scale mode) additionally collapses
+    EQUAL plans within a horizon group before dispatch: a thousand
+    sessions skewed onto a dozen plan families cost one BatchPlan of a
+    dozen member plans, and every session gets its family's result.
+    Only valid when results need no per-client side effects (snapshot-
+    handle contexts — the multi-node serve path; single-node txn
+    contexts record per-txn read sets, so they must not dedup)."""
+
+    def __init__(self, htap, m: Metrics, *, dedup: bool = False) -> None:
         self.htap, self.m = htap, m
+        self.dedup = dedup
         self.groups: dict = {}
 
     def add(self, key, client, ctx, plan) -> None:
@@ -169,6 +211,18 @@ class _PlanBatcher:
 
     def flush(self) -> None:
         for entries in self.groups.values():
+            if self.dedup:
+                unique = list(dict.fromkeys(p for _c, _x, p in entries))
+                ctx = entries[0][1]
+                results = self.htap.olap_execute_batch(
+                    [(ctx, p) for p in unique])
+                by_plan = dict(zip(unique, results))
+                if len(entries) > 1:
+                    self.m.olap_batch_dispatches += 1
+                    self.m.olap_batched_plans += len(entries)
+                for client, _ctx, plan in entries:
+                    client.pending = by_plan[plan]
+                continue
             results = self.htap.olap_execute_batch(
                 [(ctx, plan) for _cl, ctx, plan in entries])
             if len(entries) > 1:
@@ -347,12 +401,13 @@ class _OlapClientMulti:
 
     def __init__(self, htap: MultiNodeHTAP, rng, sc: Scale, m: Metrics,
                  *, batched: bool = False, freshness_hints: bool = False,
-                 batcher: Optional[_PlanBatcher] = None):
+                 batcher: Optional[_PlanBatcher] = None, session=None):
         self.htap, self.rng, self.sc, self.m = htap, rng, sc, m
         self.batched = batched
         self.freshness_hints = freshness_hints
         self.batcher = batcher
-        self.snap = None
+        self.session = session      # sticky client token (read-your-writes
+        self.snap = None            # / monotonic reads across replicas)
         self.gen = None
         self.pending = None
 
@@ -361,7 +416,8 @@ class _OlapClientMulti:
             self.gen, name = olap_query(self.rng, self.sc,
                                         batched=self.batched)
             max_lag = olap_freshness(name) if self.freshness_hints else None
-            self.snap = self.htap.olap_snapshot(max_lag=max_lag)
+            self.snap = self.htap.olap_snapshot(max_lag=max_lag,
+                                                session=self.session)
             self.pending = None
             return
         try:
@@ -409,6 +465,7 @@ def run_single_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
                     check_scans: bool = False,
                     batch_plans: bool = False,
                     materialize: bool = False,
+                    resolve_cache: bool = True,
                     certifier=None) -> Metrics:
     """olap_scan=True routes OLAP queries through batched ("olap", plan)
     steps served by one plan-execution seam call each; paged_olap=True
@@ -420,7 +477,8 @@ def run_single_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
     dispatch (cross-reader whole-batch plan fusion); materialize=True
     registers the workload's fixed-key plans
     (`Scale.materialized_plans()`) for incremental materialization —
-    serves become O(delta) on view hits, counted in olap_view_*; and
+    serves become O(delta) on view hits, counted in olap_view_*;
+    `resolve_cache` toggles the mirror's horizon-keyed resolve cache; and
     `certifier`
     selects the OLTP commit-certification policy (`repro.mvcc.certify`)."""
     htap = SingleNodeHTAP(olap_mode, paged=paged_olap,
@@ -428,7 +486,7 @@ def run_single_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
                           reserve_keys=scale.key_families(),
                           materialize=(scale.materialized_plans()
                                        if materialize else None),
-                          certifier=certifier)
+                          certifier=certifier, resolve_cache=resolve_cache)
     load_initial(htap.engine, scale)
     m = Metrics(certifier=htap.engine.certifier.name)
     rng = random.Random(seed)
@@ -475,6 +533,8 @@ def run_multi_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
                    freshness_hints: bool = False,
                    batch_plans: bool = False,
                    materialize: bool = False,
+                   session_tokens: bool = False,
+                   resolve_cache: bool = True,
                    certifier=None) -> Metrics:
     """N-replica decoupled-storage run.  `ship_skew` staggers the fleet:
     replica i ships every `ship_every * (1 + i * ship_skew)` rounds, so the
@@ -482,7 +542,10 @@ def run_multi_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
     `freshness_hints` routes each OLAP query with its bounded-staleness
     requirement from `workload.OLAP_FRESHNESS`; `materialize` registers
     the workload's fixed-key plans on every replica's mirror — views
-    advance during delta ships and serve O(delta) on gate hits."""
+    advance during delta ships and serve O(delta) on gate hits;
+    `session_tokens` gives every OLAP client a sticky `Session` (routing
+    honours read-your-writes / monotonic reads per client);
+    `resolve_cache` toggles the mirrors' horizon-keyed resolve cache."""
     htap = MultiNodeHTAP(olap_mode, paged_olap=paged_olap,
                          check_scans=check_scans, n_replicas=n_replicas,
                          route_policy=route_policy,
@@ -490,7 +553,7 @@ def run_multi_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
                          reserve_keys=scale.key_families(),
                          materialize=(scale.materialized_plans()
                                       if materialize else None),
-                         certifier=certifier)
+                         certifier=certifier, resolve_cache=resolve_cache)
     load_initial(htap.primary, scale)
     htap.ship_log()
     m = Metrics(certifier=htap.primary.certifier.name)
@@ -501,7 +564,9 @@ def run_multi_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
     clients += [_OlapClientMulti(htap, random.Random(rng.random()), scale, m,
                                  batched=olap_scan,
                                  freshness_hints=freshness_hints,
-                                 batcher=batcher)
+                                 batcher=batcher,
+                                 session=(htap.session() if session_tokens
+                                          else None))
                 for _ in range(olap_clients)]
     reset_run()    # fresh measurement window (see run_single_node)
     for rnd in range(rounds):
@@ -532,6 +597,136 @@ def run_multi_node(*, olap_mode: str, oltp_clients: int, olap_clients: int,
     m.olap_avg_lag_records = round(htap.cluster.avg_served_lag(), 2)
     m.olap_avg_predicted_lag = round(htap.cluster.avg_predicted_lag(), 2)
     return m
+
+
+class _SessionClient:
+    """One serving fleet member: a sticky `Session` token plus the
+    Zipf-assigned plan family it re-issues every round.  Exposes the
+    `pending` slot `_PlanBatcher` delivers results into."""
+
+    __slots__ = ("session", "name", "plan", "pending")
+
+    def __init__(self, session, name: str, plan) -> None:
+        self.session, self.name, self.plan = session, name, plan
+        self.pending = None
+
+
+def _run_oltp(engine, gen, m: Metrics) -> bool:
+    """Run one OLTP step generator to completion synchronously (the
+    session driver's write path — writers within a round are sequential,
+    so certification aborts are rare but still only successful commits
+    stamp a session).  Returns True on commit."""
+    t = engine.begin()
+    pending = None
+    try:
+        while True:
+            try:
+                step = gen.send(pending)
+                pending = None
+            except StopIteration:
+                break
+            if step[0] == "r":
+                pending = engine.read(t, step[1])
+            elif step[0] == "w":
+                engine.write(t, step[1], step[2])
+        engine.commit(t)
+    except SerializationFailure as e:
+        m.oltp_aborts += 1
+        k = getattr(e.reason, "value", str(e.reason))
+        m.by_abort_reason[k] = m.by_abort_reason.get(k, 0) + 1
+        return False
+    m.oltp_commits += 1
+    return True
+
+
+def run_sessions(*, n_sessions: int = 200, rounds: int = 8, seed: int = 0,
+                 scale: Scale = Scale(),
+                 n_replicas: int = 2,
+                 route_policy="predicted_staleness",
+                 max_staleness: int = 100,
+                 ship_every: int = 2,
+                 ship_skew: int = 1,
+                 zipf_s: float = 1.2,
+                 resolve_cache: bool = True,
+                 batch_plans: bool = True,
+                 write_fraction: float = 0.05,
+                 check_scans: bool = False,
+                 keep_history: bool = False,
+                 olap_mode: str = "ssi+rss") -> tuple[Metrics, list]:
+    """Million-session serving drill, scaled down: `n_sessions` sticky
+    clients each hold a `Session` token and a Zipf(`zipf_s`)-assigned
+    plan family from `workload.session_plan_families`.  Every round a
+    `write_fraction` sample of the fleet commits a payment txn and
+    stamps its token (read-your-writes pressure), then EVERY session
+    acquires a snapshot through token-aware routing and serves its
+    family plan.  With `batch_plans` the round's same-horizon serves
+    fold through `_PlanBatcher(dedup=True)` — a thousand sessions skewed
+    onto a dozen families dispatch one BatchPlan of unique plans per
+    horizon group; with `resolve_cache` the replicas' paged mirrors keep
+    horizon-keyed member/page-index/device-buffer caches warm between
+    rounds.  Ships are cadence-skewed across replicas so tokens actually
+    bind.  Asserts zero token-guarantee violations; returns
+    `(metrics, session clients)` so callers can audit per-session
+    history (`keep_history=True`)."""
+    htap = MultiNodeHTAP(olap_mode, paged_olap=True, check_scans=check_scans,
+                         n_replicas=n_replicas, route_policy=route_policy,
+                         max_staleness=max_staleness,
+                         reserve_keys=scale.key_families(),
+                         resolve_cache=resolve_cache)
+    load_initial(htap.primary, scale)
+    htap.ship_log()
+    m = Metrics(certifier=htap.primary.certifier.name)
+    rng = random.Random(seed)
+    fams = session_plan_families(scale)
+    assign = zipf_assign(rng, n_sessions, len(fams), s=zipf_s)
+    sessions = [_SessionClient(htap.session(keep_history=keep_history),
+                               *fams[assign[i]])
+                for i in range(n_sessions)]
+    writers = min(n_sessions, max(1, round(write_fraction * n_sessions))) \
+        if write_fraction > 0 else 0
+    batcher = _PlanBatcher(htap, m, dedup=True) if batch_plans else None
+    reset_run()    # fresh measurement window (see run_single_node)
+    for rnd in range(rounds):
+        m.rounds = rnd + 1
+        for i in range(n_replicas):   # cadence-skewed async replication
+            if rnd % (ship_every * (1 + i * ship_skew)) == 0:
+                htap.ship_log(replica=i)
+        if rnd and rnd % ship_every == 0:
+            m.gc_versions_pruned += htap.gc_versions()
+        for cl in rng.sample(sessions, writers):
+            if _run_oltp(htap.primary, session_write(rng, scale), m):
+                htap.note_commit(cl.session)
+        handles = []
+        for cl in sessions:
+            handle = htap.olap_snapshot(session=cl.session)
+            handles.append(handle)
+            m.session_serves += 1
+            if batcher is not None:
+                _kind, idx, _rid, s = handle
+                horizon = s.lsn if isinstance(s, RssSnapshot) else int(s)
+                batcher.add((_kind, idx, horizon), cl, handle, cl.plan)
+            else:
+                cl.pending = htap.olap_execute(handle, cl.plan)
+            m.count_plan_step(cl.plan)
+        if batcher is not None:
+            batcher.flush()
+        for handle in handles:   # pins released only after the round's
+            htap.olap_release(handle)   # serves — PRoT pin sharing
+        m.max_engine_txns = max(m.max_engine_txns, len(htap.primary.txns))
+        for rep in htap.cluster.replicas:
+            if rep.rss_manager is not None:
+                m.max_rss_tracked = max(m.max_rss_tracked,
+                                        rep.rss_manager.tracked_txns())
+    st = htap.cluster.stats
+    assert st["token_violations"] == 0, \
+        "session token guarantee violated (served below required LSN)"
+    _harvest_obs(m)
+    m.olap_served_by = list(st["served"])
+    m.olap_ship_then_serve = st["ship_then_serve"]
+    m.olap_scheduled_ships = st["scheduled_ships"]
+    m.olap_avg_lag_records = round(htap.cluster.avg_served_lag(), 2)
+    m.olap_avg_predicted_lag = round(htap.cluster.avg_predicted_lag(), 2)
+    return m, sessions
 
 
 def run_write_skew(*, certifier=None, n_clients: int = 8,

@@ -73,7 +73,7 @@ class SingleNodeHTAP:
                  check_scans: bool = False,
                  reserve_keys: Optional[Sequence[str]] = None,
                  materialize: Optional[Sequence[Plan]] = None,
-                 certifier=None) -> None:
+                 certifier=None, resolve_cache: bool = True) -> None:
         """`certifier` picks the OLTP commit-certification policy
         (`repro.mvcc.certify`): name / instance / factory; None keeps the
         conservative structural SSI abort.  OLAP behaviour — RSS
@@ -94,7 +94,8 @@ class SingleNodeHTAP:
         # scans for protected readers; `reserve_keys` pre-allocates workload
         # key families contiguously so dense plans hit the page-range slice
         # fast path instead of gathering
-        self.mirror: Optional[PagedMirror] = PagedMirror() if paged else None
+        self.mirror: Optional[PagedMirror] = \
+            PagedMirror(resolve_cache=resolve_cache) if paged else None
         self.paged_store: Optional[PagedVersionStore] = \
             PagedVersionStore(self.mirror) if paged else None
         if self.mirror is not None and reserve_keys:
@@ -277,7 +278,8 @@ class Replica:
     def __init__(self, *, with_rss: bool, paged: bool = False,
                  check_scans: bool = False,
                  reserve_keys: Optional[Sequence[str]] = None,
-                 materialize: Optional[Sequence[Plan]] = None) -> None:
+                 materialize: Optional[Sequence[Plan]] = None,
+                 resolve_cache: bool = True) -> None:
         self.store = Store()
         self.version_store: VersionStore = ChainVersionStore(self.store)
         self.applied_lsn = 0
@@ -286,7 +288,8 @@ class Replica:
         self.check_scans = check_scans
         self.rss_manager = RSSManager() if with_rss else None
         self.prot = PRoTManager(self.rss_manager) if with_rss else None
-        self.mirror: Optional[PagedMirror] = PagedMirror() if paged else None
+        self.mirror: Optional[PagedMirror] = \
+            PagedMirror(resolve_cache=resolve_cache) if paged else None
         self.paged_store: Optional[PagedVersionStore] = \
             PagedVersionStore(self.mirror) if paged else None
         if self.mirror is not None and reserve_keys:
@@ -425,7 +428,7 @@ class MultiNodeHTAP:
                  route_policy="freshest", max_staleness: int = 100,
                  reserve_keys: Optional[Sequence[str]] = None,
                  materialize: Optional[Sequence[Plan]] = None,
-                 certifier=None) -> None:
+                 certifier=None, resolve_cache: bool = True) -> None:
         """`certifier` configures the PRIMARY's commit certification (see
         `repro.mvcc.certify`).  Replicas replay begin/commit/abort + deps
         WAL records, which are certifier-independent: only WHICH txns
@@ -438,7 +441,8 @@ class MultiNodeHTAP:
         replicas = [Replica(with_rss=(olap_mode == "ssi+rss"),
                             paged=paged_olap, check_scans=check_scans,
                             reserve_keys=reserve_keys,
-                            materialize=materialize)
+                            materialize=materialize,
+                            resolve_cache=resolve_cache)
                     for _ in range(n_replicas)]
         self.cluster = ReplicaCluster(self.primary, replicas,
                                       policy=route_policy,
@@ -457,11 +461,27 @@ class MultiNodeHTAP:
         applied LSN across the fleet (bounded log state at N > 1)."""
         return self.cluster.ship(replica, max_records=max_records)
 
-    def olap_snapshot(self, *, max_lag: Optional[int] = None):
+    def session(self, *, keep_history: bool = False):
+        """Open a client `Session` (cluster token: last-commit LSN +
+        last-read horizon).  Pass it to `olap_snapshot(session=...)` for
+        read-your-writes / monotonic reads, and call
+        `note_commit(session)` after each of the client's OLTP commits."""
+        return self.cluster.session(keep_history=keep_history)
+
+    def note_commit(self, session) -> None:
+        """Stamp a session with the client's just-committed OLTP write:
+        any later read through this session is served at or above the WAL
+        position holding that commit record."""
+        session.note_commit(self.primary.wal.head_lsn)
+
+    def olap_snapshot(self, *, max_lag: Optional[int] = None, session=None):
         """Route a snapshot acquisition through the cluster's policy;
         `max_lag` is a per-query freshness hint (bounded staleness in WAL
-        records) — unsatisfiable hints trigger ship-then-serve."""
-        return self.cluster.acquire(max_lag=max_lag)
+        records) — unsatisfiable hints trigger ship-then-serve.  A
+        `session` token restricts routing to replicas covering the
+        client's observed horizon (read-your-writes + monotonic reads),
+        falling back to a cadence-owed delta ship when none does."""
+        return self.cluster.acquire(max_lag=max_lag, session=session)
 
     def olap_read(self, snap, key: str) -> Any:
         return self.cluster.read(snap, key)

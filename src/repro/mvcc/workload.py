@@ -417,6 +417,58 @@ def olap_query(rng: random.Random, sc: Scale, *, batched: bool = False):
     return fn(rng, sc, batched=batched), fn.__name__
 
 
+# ------------------------------------------------------- session workloads
+def session_plan_families(sc: Scale) -> tuple:
+    """The fixed-fingerprint plan families a session-serving fleet hands
+    out: each family is a `(name, plan)` pair whose plan hashes
+    identically serve to serve (frozen dataclasses), so same-horizon
+    sessions on one family collapse onto one resolve/dispatch.  Beyond
+    the four fleet-wide dashboards, every warehouse gets two drill-down
+    families (stock + customer balance) — the per-tenant shape a
+    million-user deployment skews over."""
+    fams = [("stock_level", sc.stock_level_plan()),
+            ("customer_balance", sc.customer_balance_plan()),
+            ("stock_overview", sc.stock_overview_plan()),
+            ("district_revenue", sc.district_revenue_plan())]
+    for w in range(sc.warehouses):
+        fams.append((f"stock_sum:w{w}", AggPlan(
+            tuple(f"stock:{w}:{i}" for i in range(sc.items)),
+            AggOp("sum", "int"))))
+        fams.append((f"balance:w{w}", MultiAggPlan(
+            tuple(f"customer:{w}:{d}:{c}" for d in range(sc.districts)
+                  for c in range(sc.customers)),
+            (AggOp("sum", "int"), AggOp("min", "int")))))
+    return tuple(fams)
+
+
+def zipf_assign(rng: random.Random, n_sessions: int, n_families: int,
+                *, s: float = 1.2) -> list[int]:
+    """Assign each of `n_sessions` a plan-family index, Zipf(s)-skewed
+    over the families (rank r drawn with weight 1/r^s): a handful of hot
+    dashboards dominate while the tail of per-tenant drill-downs stays
+    thin — the popularity shape cross-session batching amortizes."""
+    assert n_families >= 1
+    weights = [1.0 / (r + 1) ** s for r in range(n_families)]
+    total = sum(weights)
+    cum, acc = [], 0.0
+    for w in weights:
+        acc += w / total
+        cum.append(acc)
+    out = []
+    for _ in range(n_sessions):
+        x = rng.random()
+        out.append(next(i for i, c in enumerate(cum) if x <= c or
+                        i == n_families - 1))
+    return out
+
+
+def session_write(rng: random.Random, sc: Scale) -> Iterator[Step]:
+    """The session's own OLTP write (read-your-writes pressure): a
+    payment-shaped balance move the session must observe on its very
+    next read, whichever replica serves it."""
+    return payment(rng, sc)
+
+
 def load_initial(engine, sc: Scale) -> None:
     """Initial data load (one big transaction)."""
     t = engine.begin()

@@ -160,7 +160,7 @@ def decode_value(row: np.ndarray) -> Any:
 
 class PagedMirror:
     def __init__(self, *, slots: int = 8, page_elems: int = 32,
-                 capacity: int = 64) -> None:
+                 capacity: int = 64, resolve_cache: bool = True) -> None:
         assert page_elems >= 3
         self.slots = slots
         self.page_elems = page_elems
@@ -206,6 +206,65 @@ class PagedMirror:
         self._unfolded: list = []              # [(seq, WalRecord)], ascending
         self._folded_seqs: list[int] = []
         self._seqs_floor = 0
+        # ------------------------------------------- horizon-keyed resolve
+        # cache: N serves sharing one applied horizon (thousands of
+        # sessions routed to one replica between ships) do the host-side
+        # resolve work ONCE.  Three layers, each invalidated precisely by
+        # the one event that can change its value:
+        #   _member_cache  snapshot -> member-seq array.  Stamped
+        #                  (compressed) snapshots are pure — the array is
+        #                  a function of the frozen snapshot alone — and
+        #                  never invalidate; explicit-set snapshots read
+        #                  `commit_seq`, so commit applies drop them.
+        #   _pindex_cache  plan key-tuple (the plan fingerprint's key
+        #                  sequence) -> page-index array.  `page_of` is
+        #                  append-only, so an entry with NO misses is
+        #                  valid forever; entries holding a -1 are stamped
+        #                  with `_page_gen` and die when `_ensure_page`
+        #                  allocates (a reserve / first write may have
+        #                  filled the hole).
+        #   _store_cache   key-tuple -> gathered {'data','ts'} device
+        #                  buffers (+ the dense/gather verdict).  The
+        #                  buffers are device copies of page content, so
+        #                  only `apply` installing writes changes their
+        #                  value — it clears the cache; reserve-only page
+        #                  allocation leaves entries valid (reserved
+        #                  pages are all-zero: they decode to 0 exactly
+        #                  like the missing keys they replace).
+        #   _lane_cache    plan tuple -> `_lane_layout` (pure function of
+        #                  the frozen plans; never invalidated).
+        self.resolve_cache = resolve_cache
+        self._member_cache: dict = {}
+        self._pindex_cache: dict = {}
+        self._store_cache: dict = {}
+        self._lane_cache: dict = {}
+        self._page_gen = 0
+        self._last_range_verdict = "gather"
+        self.cache_stats = StatsView(
+            REGISTRY, "mirror_cache",
+            ("member_hits", "member_misses",
+             "pindex_hits", "pindex_misses",
+             "store_hits", "store_misses",
+             "invalidations"), labels=lbl)
+
+    # ------------------------------------------------------- resolve cache
+    _MEMBER_CAP = 64          # live horizons are few; FIFO-evict beyond
+    _PINDEX_CAP = 256         # distinct plan key sequences
+    _STORE_CAP = 32           # device buffers are the big entries
+
+    def invalidate_caches(self) -> None:
+        """Drop every resolve-cache layer (tests / recovery); counted so
+        hit-rate accounting stays explainable."""
+        self._member_cache.clear()
+        self._pindex_cache.clear()
+        self._store_cache.clear()
+        self._lane_cache.clear()
+        self.cache_stats["invalidations"] += 1
+
+    @staticmethod
+    def _cap(cache: dict, cap: int) -> None:
+        while len(cache) >= cap:
+            cache.pop(next(iter(cache)))       # FIFO: dicts keep insert order
 
     # ----------------------------------------------------------- page alloc
     @property
@@ -224,7 +283,8 @@ class PagedMirror:
                                           np.zeros_like(self.writer)])
         self.page_of[key] = page
         self.keys.append(key)
-        return page
+        self._page_gen += 1        # page-index entries holding a -1 for
+        return page                # this key are stale now
 
     def reserve(self, keys: Iterable[str]) -> int:
         """Pre-allocate pages for a key sequence IN ORDER (page-range
@@ -269,6 +329,16 @@ class PagedMirror:
         seq = effective_commit_seq(self.watermark, rec.seq)
         self.commit_seq[rec.txn] = seq
         self.watermark = seq
+        # precise cache invalidation: the new commit-seq mapping can extend
+        # any explicit-set snapshot's member resolve (stamped snapshots are
+        # pure and survive); installed writes change page content, killing
+        # every gathered device buffer
+        if self._member_cache:
+            for s in [s for s in self._member_cache
+                      if s.member_seqs is None]:
+                del self._member_cache[s]
+        if rec.writes and self._store_cache:
+            self._store_cache.clear()
         for key, value in rec.writes:
             page = self._ensure_page(key)
             self._publish(page, encode_value(value, self.page_elems), seq,
@@ -441,11 +511,26 @@ class PagedMirror:
         """Sorted member commit seqs ABOVE the snapshot's floor (with
         `snap.floor_seq`, the member-ts state the rss_gather kernel takes).
         Compressed snapshots carry their own seqs; explicit-set snapshots
-        map `txns` through the mirror's commit-seq bookkeeping."""
+        map `txns` through the mirror's commit-seq bookkeeping.  Cached per
+        snapshot (frozen dataclass — identity IS the horizon), so repeat
+        serves at one horizon skip the rebuild."""
+        if self.resolve_cache:
+            arr = self._member_cache.get(snap)
+            if arr is not None:
+                self.cache_stats["member_hits"] += 1
+                return arr
         if snap.member_seqs is not None:
-            return np.asarray(snap.member_seqs, np.int32)
-        seqs = [self.commit_seq[t] for t in snap.txns if t in self.commit_seq]
-        return np.asarray(sorted(seqs), np.int32)
+            arr = np.asarray(snap.member_seqs, np.int32)
+        else:
+            seqs = [self.commit_seq[t] for t in snap.txns
+                    if t in self.commit_seq]
+            arr = np.asarray(sorted(seqs), np.int32)
+        if self.resolve_cache:
+            self.cache_stats["member_misses"] += 1
+            arr.flags.writeable = False
+            self._cap(self._member_cache, self._MEMBER_CAP)
+            self._member_cache[snap] = arr
+        return arr
 
     def _visible_slots(self, rows: np.ndarray, mask_fn) -> np.ndarray:
         """Resolve visibility for a batch of pages: [n] slot indices."""
@@ -522,8 +607,66 @@ class PagedMirror:
     # ------------------------------------------------------ fused aggregates
     def page_index(self, keys: Sequence[str]) -> np.ndarray:
         """Dense key -> page resolution for a plan's key sequence (-1 for
-        keys never written: they read as the initial value 0)."""
-        return np.asarray([self.page_of.get(k, -1) for k in keys], np.int64)
+        keys never written: they read as the initial value 0).  Memoized
+        per key-tuple (== per plan fingerprint, since `plan_keys` is a
+        pure function of the frozen plan): `page_of` is append-only, so a
+        fully-resolved entry never goes stale; an entry holding misses is
+        stamped with the page-allocation generation and re-resolved after
+        any `reserve`/first-write allocates (the hole may be filled)."""
+        if not self.resolve_cache:
+            return np.asarray([self.page_of.get(k, -1) for k in keys],
+                              np.int64)
+        keys_t = keys if isinstance(keys, tuple) else tuple(keys)
+        ent = self._pindex_cache.get(keys_t)
+        if ent is not None:
+            pages, has_miss, gen = ent
+            if not has_miss or gen == self._page_gen:
+                self.cache_stats["pindex_hits"] += 1
+                return pages
+        self.cache_stats["pindex_misses"] += 1
+        get = self.page_of.get
+        pages = np.fromiter((get(k, -1) for k in keys_t), np.int64,
+                            count=len(keys_t))
+        pages.flags.writeable = False
+        self._cap(self._pindex_cache, self._PINDEX_CAP)
+        self._pindex_cache[keys_t] = (pages, bool((pages < 0).any()),
+                                      self._page_gen)
+        return pages
+
+    def _store_for(self, keys, pages: np.ndarray) -> dict:
+        """`jnp_store_for` behind the horizon-keyed store cache: the
+        gathered `{'data','ts'}` device buffers for a plan's key sequence,
+        reused until a publish changes page content (`apply` clears the
+        cache).  The cached dense/gather verdict re-counts into
+        `range_stats` on hits, so the fast-path hit RATE keeps meaning
+        'per fused plan execution' with the cache on."""
+        if not self.resolve_cache:
+            return self.jnp_store_for(pages)
+        keys_t = keys if isinstance(keys, tuple) else tuple(keys)
+        ent = self._store_cache.get(keys_t)
+        if ent is not None:
+            store, verdict = ent
+            self.range_stats[verdict] += 1
+            self.cache_stats["store_hits"] += 1
+            return store
+        self.cache_stats["store_misses"] += 1
+        store = self.jnp_store_for(pages)
+        self._cap(self._store_cache, self._STORE_CAP)
+        self._store_cache[keys_t] = (store, self._last_range_verdict)
+        return store
+
+    def _lane_layout_for(self, plans) -> tuple[list, list, dict]:
+        """`_lane_layout` memoized per plan tuple (frozen dataclasses hash
+        by value, so the tuple IS the batch fingerprint)."""
+        if not self.resolve_cache:
+            return _lane_layout(plans)
+        plans_t = tuple(plans)
+        layout = self._lane_cache.get(plans_t)
+        if layout is None:
+            layout = _lane_layout(plans_t)
+            self._cap(self._lane_cache, self._PINDEX_CAP)
+            self._lane_cache[plans_t] = layout
+        return layout
 
     def _snapshot_mask(self, snapshot):
         """(mask_fn, member_ts, floor) for either snapshot kind: an RSS
@@ -553,7 +696,8 @@ class PagedMirror:
         n = int(pages.shape[0])
         pad = (-n) % 8 if n else 8
         rng = as_page_range(pages)
-        self.range_stats["dense" if rng is not None else "gather"] += 1
+        self._last_range_verdict = "dense" if rng is not None else "gather"
+        self.range_stats[self._last_range_verdict] += 1
         if rng is not None:
             data, ts = self.data[rng[0]:rng[1]], self.ts[rng[0]:rng[1]]
         else:
@@ -572,6 +716,7 @@ class PagedMirror:
         return {"data": jnp.asarray(data), "ts": jnp.asarray(ts)}
 
     def _scalar_raws(self, pages: np.ndarray, member_ts, floor, ops, *,
+                     keys: Sequence[str] | None = None,
                      use_kernel: bool = True, interpret=None) -> dict:
         """One fused `rss_scan_agg` pass per distinct kernel config the op
         list needs (ops sharing a field — and a threshold for count_below —
@@ -585,7 +730,8 @@ class PagedMirror:
             return {cfg: list(empty) for cfg in configs}
         from ..kernels.rss_scan_agg.ops import snapshot_agg_members
 
-        store = self.jnp_store_for(pages)
+        store = self.jnp_store_for(pages) if keys is None \
+            else self._store_for(keys, pages)
         mem = np.asarray(member_ts, np.int32)
         raws = {}
         for field, thr in configs:
@@ -640,8 +786,9 @@ class PagedMirror:
                                  sum(x for x in xs if x < thr_eff)])
                 return rows
         with TRACER.span("kernel_dispatch", lanes=len(lane_groups)):
+            flat_keys = tuple(flat_keys)
             pages = self.page_index(flat_keys)
-            store = self.jnp_store_for(pages)
+            store = self._store_for(flat_keys, pages)
             gid = np.full(int(store["ts"].shape[0]), -1, np.int32)
             gid[:len(pages)] = np.concatenate(
                 [np.full(len(grp), g, np.int32)
@@ -668,7 +815,7 @@ class PagedMirror:
         from .version_store import (AggPlan, GroupByPlan, MultiAggPlan,
                                     finalize_agg, plan_keys)
 
-        lane_groups, lane_params, lane_of = _lane_layout(plans)
+        lane_groups, lane_params, lane_of = self._lane_layout_for(plans)
         t0 = tick()
         with TRACER.span("resolve"):
             mask_fn, member_ts, floor = self._snapshot_mask(snapshot)
@@ -764,7 +911,7 @@ class PagedMirror:
             with TRACER.span("kernel_dispatch", mode="scalar",
                              configs=len(set(_op_config(op) for op in ops))):
                 raws = self._scalar_raws(pages, member_ts, floor, ops,
-                                         use_kernel=use_kernel,
+                                         keys=keys, use_kernel=use_kernel,
                                          interpret=interpret)
             tock(_DISPATCH_H, t0)
             t0 = tick()

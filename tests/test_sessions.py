@@ -1,0 +1,253 @@
+"""Session-token serving: read-your-writes / monotonic reads across a
+lag-skewed replica fleet, horizon-keyed resolve caching, dedup plan
+batching, and latency-SLO routing.
+
+The guarantees are LSN-prefix-level (PostgreSQL hot-standby style): a
+session is never served by a replica whose applied WAL position is below
+max(the session's last observed commit LSN, its last served horizon) —
+asserted both by the cluster's own `token_violations` counter and by
+replaying each session's kept serve history.  Cached serving must be
+bit-identical to uncached serving and to the per-key chain oracle
+(`check_scans=True` asserts the latter at every serve)."""
+
+import random
+
+import pytest
+
+from repro.cluster import LatencySLO, Session, make_policy
+from repro.mvcc import MultiNodeHTAP, run_multi_node, run_sessions
+from repro.mvcc.workload import (Scale, load_initial, session_plan_families,
+                                 zipf_assign)
+from repro.obs import REGISTRY, reset_run
+
+SMALL = Scale(warehouses=2, districts=2, customers=3, items=6)
+
+
+# ------------------------------------------------------------ token object
+class TestSessionToken:
+    def test_required_lsn_is_max_of_commit_and_read_horizons(self):
+        s = Session(0)
+        assert s.min_required_lsn() == 0
+        s.note_commit(7)
+        assert s.min_required_lsn() == 7
+        s.note_read(12)
+        assert s.min_required_lsn() == 12
+        s.note_commit(5)            # stale stamp: never regresses
+        assert s.last_commit_lsn == 7 and s.min_required_lsn() == 12
+
+    def test_read_horizon_is_monotone(self):
+        s = Session(1)
+        s.note_read(10)
+        s.note_read(4)              # a lower serve records, never regresses
+        assert s.last_read_lsn == 10 and s.serves == 2
+
+    def test_history_audit_counts_violations(self):
+        s = Session(2, keep_history=True)
+        s.note_commit(5)
+        s.note_read(6, replica=0)   # ok: 6 >= required 5
+        s.note_read(3, replica=1)   # violation: 3 < required 6
+        assert s.violations() == 1
+        assert [r for r, _, _ in s.history] == [0, 1]
+
+
+# ------------------------------------------------- cluster-level guarantees
+def _commit_n(htap, n, start=0):
+    eng = htap.primary
+    for i in range(n):
+        t = eng.begin()
+        eng.write(t, f"warehouse:{i % 2}", start + i)
+        eng.commit(t)
+
+
+def test_read_your_writes_forces_delta_ship():
+    """Non-predictive policy, whole fleet stale below the token: the
+    cluster must delta-ship (a token ship, not a staleness fallback)
+    rather than serve a stale replica or stall."""
+    htap = MultiNodeHTAP("ssi+rss", n_replicas=2, route_policy="freshest")
+    load_initial(htap.primary, SMALL)
+    htap.ship_log()
+    sess = htap.session()
+    _commit_n(htap, 3)              # unshipped tail
+    htap.note_commit(sess)
+    handle = htap.olap_snapshot(session=sess)
+    idx = handle[1]
+    assert htap.cluster.replicas[idx].applied_lsn >= sess.last_commit_lsn
+    st = htap.cluster.stats
+    assert st["token_ships"] == 1 and st["ship_then_serve"] == 0
+    assert st["token_violations"] == 0
+    htap.olap_release(handle)
+
+
+def test_session_value_level_read_your_writes_under_si():
+    """ssi+si replicas serve plain SI snapshots at the applied horizon,
+    so an LSN-covered serve also covers the session's writes at the
+    VALUE level: the committed value must come back."""
+    htap = MultiNodeHTAP("ssi+si", n_replicas=2, route_policy="round_robin")
+    load_initial(htap.primary, SMALL)
+    htap.ship_log()
+    sess = htap.session()
+    eng = htap.primary
+    t = eng.begin()
+    eng.write(t, "warehouse:0", 4242)
+    eng.commit(t)
+    htap.note_commit(sess)
+    handle = htap.olap_snapshot(session=sess)
+    assert htap.olap_read(handle, "warehouse:0") == 4242
+    htap.olap_release(handle)
+    assert htap.cluster.stats["token_violations"] == 0
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_session_guarantees_randomized(seed):
+    """Randomized ship schedules / fleet sizes / policies / cache+batch
+    settings: every session's kept history must show zero serves below
+    its required LSN, and the cluster's own violation counter agrees.
+    `check_scans=True` additionally asserts every (possibly cached,
+    possibly fused) plan result against the per-key chain oracle."""
+    rng = random.Random(seed)
+    m, sessions = run_sessions(
+        n_sessions=rng.randint(8, 20), rounds=rng.randint(3, 6),
+        seed=seed, scale=SMALL,
+        n_replicas=rng.randint(2, 3),
+        route_policy=rng.choice(["freshest", "round_robin",
+                                 "predicted_staleness", "latency_slo"]),
+        ship_every=rng.randint(1, 4), ship_skew=rng.randint(0, 2),
+        zipf_s=rng.uniform(0.8, 1.6),
+        resolve_cache=rng.random() < 0.5,
+        batch_plans=rng.random() < 0.5,
+        write_fraction=0.3, check_scans=True, keep_history=True)
+    assert m.session_token_violations == 0
+    assert all(s.session.violations() == 0 for s in sessions)
+    assert m.session_serves == m.session_token_acquires > 0
+    assert m.oltp_commits > 0
+
+
+def test_run_multi_node_session_tokens():
+    """The general driver grows the same guarantee: sticky per-client
+    sessions thread through `olap_snapshot`, violation-free."""
+    m = run_multi_node(olap_mode="ssi+rss", oltp_clients=2, olap_clients=3,
+                       rounds=300, seed=11, scale=SMALL, olap_scan=True,
+                       n_replicas=2, route_policy="round_robin",
+                       ship_every=20, ship_skew=2, session_tokens=True)
+    assert m.session_token_acquires > 0
+    assert m.session_token_violations == 0
+
+
+# ------------------------------------------------------- cache == uncached
+def test_resolve_cache_matches_uncached_run():
+    """Same seed, cache on vs off: identical final results per session
+    (and the cached run actually hit its caches)."""
+    outs, hit_rates = [], None
+    for cache in (False, True):
+        m, sessions = run_sessions(n_sessions=12, rounds=4, seed=3,
+                                   scale=SMALL, resolve_cache=cache,
+                                   batch_plans=False, check_scans=True,
+                                   write_fraction=0.25)
+        outs.append([s.pending for s in sessions])
+        if cache:
+            hit_rates = m.cache_hit_rates()
+    assert outs[0] == outs[1]
+    assert hit_rates["member"] > 0 and hit_rates["pindex"] > 0
+
+
+def test_mirror_cache_precise_invalidation():
+    """Mirror-level: repeated execution hits the store cache; an applied
+    commit invalidates precisely (the new value shows up); an explicit
+    `invalidate_caches` changes nothing observable."""
+    from repro.core.wal import WalRecord
+    from repro.tensorstore import AggOp, AggPlan, PagedMirror, \
+        PagedVersionStore
+
+    mirror = PagedMirror()
+    mirror.apply(WalRecord(lsn=1, type="commit", txn=1,
+                           writes=(("a", 5), ("b", 9)), seq=1))
+    plan = AggPlan(("a", "b"), AggOp("sum", "int"))
+    store = PagedVersionStore(mirror)
+    before = mirror.cache_stats["store_hits"]
+    assert store.execute(plan, mirror.watermark) == 14
+    assert store.execute(plan, mirror.watermark) == 14   # cached resolve
+    assert mirror.cache_stats["store_hits"] > before
+    mirror.invalidate_caches()
+    assert store.execute(plan, mirror.watermark) == 14   # cold == warm
+    mirror.apply(WalRecord(lsn=2, type="commit", txn=2,
+                           writes=(("b", 1),), seq=2))
+    assert store.execute(plan, mirror.watermark) == 6    # no stale serve
+
+
+def test_batching_dedup_matches_unbatched():
+    """Dedup batching folds a skewed fleet's same-horizon serves into few
+    dispatches without changing any session's result."""
+    outs, dispatches = [], 0
+    for batch in (False, True):
+        m, sessions = run_sessions(n_sessions=20, rounds=3, seed=5,
+                                   scale=SMALL, resolve_cache=True,
+                                   batch_plans=batch, write_fraction=0.2)
+        outs.append([s.pending for s in sessions])
+        if batch:
+            dispatches = m.olap_batch_dispatches
+            assert m.olap_batched_plans > m.olap_batch_dispatches
+    assert outs[0] == outs[1]
+    assert 0 < dispatches < 20 * 3
+
+
+# ------------------------------------------------------- latency_slo policy
+def test_make_policy_resolves_latency_slo():
+    p = make_policy("latency_slo", max_lag=17)
+    assert isinstance(p, LatencySLO)
+    assert p.max_lag == 17 and p.predictive
+
+
+def test_latency_slo_steers_around_slow_replica():
+    reset_run()
+    pol = LatencySLO(1000, min_count=5, refresh=1)
+    htap = MultiNodeHTAP("ssi+rss", n_replicas=3, route_policy=pol)
+    load_initial(htap.primary, SMALL)
+    htap.ship_log()
+    for i in range(3):              # replica 2 serves 100x slower
+        h = REGISTRY.histogram("olap_serve_seconds", replica=i)
+        for _ in range(10):
+            h.observe(1e-1 if i == 2 else 1e-3)
+    chosen = {pol.choose(htap.cluster) for _ in range(9)}
+    assert chosen and 2 not in chosen
+
+
+def test_latency_slo_never_empties_eligible_set():
+    pol = LatencySLO(1000, refresh=10_000)
+    htap = MultiNodeHTAP("ssi+rss", n_replicas=2, route_policy=pol)
+    load_initial(htap.primary, SMALL)
+    htap.ship_log()
+    pol._choices = 1                # hold the fabricated slow set
+    pol._slow = {0, 1}              # whole fleet busts the SLO
+    assert pol.choose(htap.cluster) is not None
+
+
+def test_latency_slo_ignores_cold_replicas():
+    reset_run()
+    pol = LatencySLO(1000, min_count=5, refresh=1)
+    htap = MultiNodeHTAP("ssi+rss", n_replicas=2, route_policy=pol)
+    load_initial(htap.primary, SMALL)
+    htap.ship_log()
+    # only replica 0 has data, and few observations: no SLO judgement
+    REGISTRY.histogram("olap_serve_seconds", replica=0).observe(1e-1)
+    assert pol.choose(htap.cluster) is not None
+    assert not pol._slow
+
+
+# ------------------------------------------------------------ zipf workload
+def test_session_plan_families_are_stable_fingerprints():
+    fams = session_plan_families(SMALL)
+    assert len(fams) == 4 + 2 * SMALL.warehouses
+    # frozen plans: identical fingerprints call to call (dedup + resolve
+    # caching both key on this)
+    assert fams == session_plan_families(SMALL)
+    assert len({plan for _n, plan in fams}) == len(fams)
+
+
+def test_zipf_assign_is_skewed_and_deterministic():
+    a = zipf_assign(random.Random(7), 2000, 8, s=1.2)
+    b = zipf_assign(random.Random(7), 2000, 8, s=1.2)
+    assert a == b and len(a) == 2000
+    assert set(a) <= set(range(8))
+    counts = [a.count(i) for i in range(8)]
+    assert counts[0] == max(counts)          # rank-0 family dominates
+    assert counts[0] > 3 * max(counts[-1], 1)
